@@ -1,0 +1,52 @@
+"""Paper Table 5: ablation of the UNQ training objective / search stages
+(8 bytes, BigANN-style data).
+
+  unq                  — the full method
+  exhaustive-rerank    — stage 2 (d1) over the whole base, no d2 scan
+  no-rerank            — d2 scan only
+  no-triplet           — alpha = 0
+  triplet-only         — no reconstruction objective term in search (d2 only
+                         search on a model trained with alpha=1)
+  no-hard              — soft Gumbel (no ST discretization) during training
+  no-gumbel            — deterministic softmax relaxation (no Gumbel noise)
+  no-regularizer       — beta = 0
+"""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(scale: str = "default", kind: str = "sift", num_books: int = 8):
+    ds = common.dataset(kind, scale)
+
+    variants = {
+        "unq": dict(),
+        "exhaustive-rerank": dict(search_overrides=dict()),
+        "no-rerank": dict(search_overrides=dict()),
+        "no-triplet": dict(tcfg_overrides=dict(alpha=0.0)),
+        "triplet-only": dict(tcfg_overrides=dict(alpha=1.0)),
+        "no-hard": dict(tcfg_overrides=dict(hard_gumbel=False)),
+        "no-gumbel": dict(tcfg_overrides=dict(gumbel_noise=False)),
+        "no-regularizer": dict(tcfg_overrides=dict(use_regularizer=False)),
+    }
+
+    import jax.numpy as jnp
+    from repro.core import search
+
+    for name, kw in variants.items():
+        rec, enc_us, search_us, (params, state, cfg, codes) = common.run_unq(
+            ds, num_books, scale, tcfg_overrides=kw.get("tcfg_overrides"))
+        if name in ("exhaustive-rerank", "no-rerank"):
+            scfg = search.SearchConfig(
+                rerank=common.SCALES[scale]["rerank"], topk=100)
+            got = search.search(
+                params, state, cfg, scfg, jnp.asarray(ds.queries), codes,
+                use_rerank=(name == "exhaustive-rerank"),
+                use_d2=(name == "no-rerank"))
+            rec = search.recall_at_k(got, jnp.asarray(ds.gt_nn))
+        common.emit(f"ablation/{kind}{num_books}B/{name}", search_us,
+                    common.fmt_recalls(rec))
+
+
+if __name__ == "__main__":
+    run()

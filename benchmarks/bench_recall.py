@@ -1,0 +1,30 @@
+"""Paper Table 2: compressed-domain retrieval recall on Deep/BigANN-style
+data at 8 and 16 bytes/vector — OPQ, PQ, RVQ (additive family), RVQ+rerank
+(the LSQ+rerank analog) and UNQ."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(scale: str = "default", datasets=("deep", "sift"), budgets=(8, 16)):
+    rows = []
+    for kind in datasets:
+        ds = common.dataset(kind, scale)
+        for m in budgets:
+            for name, fn in (
+                ("pq", lambda: common.run_pq(ds, m, scale)),
+                ("opq", lambda: common.run_pq(ds, m, scale, opq=True)),
+                ("rvq", lambda: common.run_rvq(ds, m, scale)),
+                ("rvq+rerank", lambda: common.run_rvq(ds, m, scale,
+                                                      rerank_decoder=True)),
+                ("unq", lambda: common.run_unq(ds, m, scale)),
+            ):
+                rec, enc_us, search_us, _ = fn()
+                tag = f"recall/{kind}{m}B/{name}"
+                common.emit(tag, search_us, common.fmt_recalls(rec))
+                rows.append((kind, m, name, rec, enc_us, search_us))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

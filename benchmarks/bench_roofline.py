@@ -1,0 +1,35 @@
+"""Roofline terms per (arch x shape) from the dry-run artifacts (§Roofline).
+
+Emits one CSV row per cell: name = roofline/<arch>/<shape>,
+us_per_call = projected step time (max of the three terms, in us),
+derived = the three terms + dominant + useful-compute ratio.
+"""
+from __future__ import annotations
+
+import pathlib
+
+from benchmarks import common
+from repro.analysis import roofline
+
+
+def run(art_dir: str = "artifacts/dryrun", mesh: str = "16x16"):
+    cells = roofline.load_cells(pathlib.Path(art_dir), mesh=mesh)
+    for c in cells:
+        if "roofline" not in c:
+            if str(c.get("status", "")).startswith("skip"):
+                continue
+            common.emit(f"roofline/{c.get('arch')}/{c.get('shape')}", 0.0,
+                        str(c.get("status"))[:80])
+            continue
+        r = c["roofline"]
+        step_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        common.emit(
+            f"roofline/{r['arch']}/{r['shape']}", step_s * 1e6,
+            f"compute={r['compute_s']:.2e}s memory={r['memory_s']:.2e}s "
+            f"coll={r['collective_s']:.2e}s dom={r['dominant']} "
+            f"roofline={r['roofline_fraction']:.2f} "
+            f"useful={r['useful_compute_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Paper Tables 3/4: does the UNQ advantage persist as the base set grows?
+One trained model per method; recall measured on nested base subsets."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import search
+from repro.data import descriptors as dd
+
+
+def run(scale: str = "default", kind: str = "deep", num_books: int = 8):
+    ds = common.dataset(kind, scale)
+    sizes = [ds.base.shape[0] // 8, ds.base.shape[0] // 2, ds.base.shape[0]]
+
+    rec_u, _, _, (params, state, cfg, codes_full) = common.run_unq(
+        ds, num_books, scale)
+    rec_p, _, _, (pq_model, pq_codes) = common.run_pq(ds, num_books, scale)
+
+    for n in sizes:
+        base = ds.base[:n]
+        gt = dd.exact_knn(ds.queries, base, k=1)[:, 0]
+        scfg = search.SearchConfig(
+            rerank=min(common.SCALES[scale]["rerank"], n), topk=100)
+        got = search.search(params, state, cfg, scfg,
+                            jnp.asarray(ds.queries), codes_full[:n])
+        rec = search.recall_at_k(got, jnp.asarray(gt))
+        common.emit(f"scale/{kind}{num_books}B/unq/n={n}", 0.0,
+                    common.fmt_recalls(rec))
+
+        from repro.core import baselines as bl
+        got_pq = bl.search_pq(pq_model, jnp.asarray(ds.queries),
+                              pq_codes[:n], topk=100)
+        rec_pq = search.recall_at_k(got_pq, jnp.asarray(gt))
+        common.emit(f"scale/{kind}{num_books}B/pq/n={n}", 0.0,
+                    common.fmt_recalls(rec_pq))
+
+
+if __name__ == "__main__":
+    run()

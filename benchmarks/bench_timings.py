@@ -1,0 +1,69 @@
+"""Paper §4.4: encoding + search timings, plus per-implementation ADC scan
+microbenchmarks (xla gather vs onehot-MXU vs Pallas-interpret).
+
+NOTE: this container is CPU-only, so absolute numbers are NOT the paper's
+GPU/TPU numbers; the derived columns (vectors/s, relative impl cost) are
+the portable signal, and the Pallas timing is interpret-mode (correctness
+path) — on TPU the kernel is the fast path.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import search, unq
+from repro.kernels import ops
+
+
+def run(scale: str = "default"):
+    ds = common.dataset("deep", scale)
+    cfg = unq.UNQConfig(dim=ds.dim, num_codebooks=8)
+    key = jax.random.PRNGKey(0)
+    params, state = unq.init(key, cfg)
+    base = jnp.asarray(ds.base)
+
+    # --- encode throughput (one feed-forward pass; the paper's headline
+    # advantage over iterative additive encoders) ---
+    t0 = time.time()
+    codes = search.encode_database(params, state, cfg, base)
+    jax.block_until_ready(codes)
+    dt = time.time() - t0
+    common.emit("timings/encode", dt * 1e6,
+                f"{base.shape[0] / dt:.0f} vectors/s")
+
+    # --- ADC scan implementations ---
+    rng = np.random.default_rng(0)
+    n = base.shape[0]
+    lut = jnp.asarray(rng.normal(size=(8, 256)), jnp.float32)
+    for impl in ("xla", "onehot", "pallas"):
+        fn = jax.jit(lambda c, l, impl=impl: ops.adc_scan(c, l, impl=impl))
+        _, us = common.timed(fn, codes, lut, repeats=3)
+        common.emit(f"timings/adc_scan/{impl}", us,
+                    f"{n / (us / 1e6) / 1e6:.1f} Mvec/s")
+
+    # --- top-L + rerank stage cost (paper: rerank is ~negligible) ---
+    queries = jnp.asarray(ds.queries[:64])
+    scfg = search.SearchConfig(rerank=common.SCALES[scale]["rerank"],
+                               topk=100)
+    t0 = time.time()
+    r1 = search.search(params, state, cfg, scfg, queries, codes,
+                       use_rerank=False)
+    jax.block_until_ready(r1)
+    scan_us = (time.time() - t0) / 64 * 1e6
+    t0 = time.time()
+    r2 = search.search(params, state, cfg, scfg, queries, codes,
+                       use_rerank=True)
+    jax.block_until_ready(r2)
+    full_us = (time.time() - t0) / 64 * 1e6
+    common.emit("timings/search/no-rerank", scan_us, "per-query d2 scan")
+    common.emit("timings/search/with-rerank", full_us,
+                f"rerank overhead {full_us - scan_us:.0f}us "
+                f"({(full_us / max(scan_us, 1e-9) - 1) * 100:.0f}%)")
+
+
+if __name__ == "__main__":
+    run()

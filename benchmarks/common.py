@@ -1,0 +1,146 @@
+"""Shared benchmark plumbing: datasets, method runners, CSV emission.
+
+Scales: --quick (CI, ~1 min), default (a few minutes/table), --full
+(closest to the paper's 500k-train/1M-base protocol this container can do).
+The synthetic Deep/BigANN stand-ins come from repro.data.descriptors.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines as bl
+from repro.core import search, training, unq
+from repro.data import descriptors as dd
+
+SCALES = {
+    "quick": dict(n_train=3000, n_base=8000, n_query=300, epochs=30,
+                  kmeans_iters=8, opq_iters=3, rerank=100),
+    "default": dict(n_train=15000, n_base=40000, n_query=800, epochs=40,
+                    kmeans_iters=15, opq_iters=5, rerank=300),
+    "full": dict(n_train=60000, n_base=200000, n_query=2000, epochs=60,
+                 kmeans_iters=25, opq_iters=8, rerank=500),
+}
+
+
+@functools.lru_cache(maxsize=4)
+def dataset(kind: str, scale: str):
+    s = SCALES[scale]
+    return dd.make_synthetic_dataset(
+        kind, n_train=s["n_train"], n_base=s["n_base"],
+        n_query=s["n_query"], seed=0)
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    """The harness CSV contract: ``name,us_per_call,derived``."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(fn, *args, repeats: int = 1, **kw):
+    fn(*args, **kw)  # warmup/compile
+    t0 = time.time()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return out, (time.time() - t0) / repeats * 1e6
+
+
+# ---------------------------------------------------------------------------
+# method runners: each returns (recalls dict, encode_time_us, search_time_us)
+# ---------------------------------------------------------------------------
+
+def run_unq(ds, num_books: int, scale: str, *, tcfg_overrides=None,
+            search_overrides=None, scan_impl: str = "xla"):
+    s = SCALES[scale]
+    cfg = unq.UNQConfig(dim=ds.dim, num_codebooks=num_books)
+    tkw = dict(epochs=s["epochs"], batch_size=256, lr=5e-3, alpha=0.01,
+               log_every=200)
+    tkw.update(tcfg_overrides or {})
+    tcfg = training.TrainConfig(**tkw)
+    params, state, hist = training.train_unq(ds, cfg, tcfg)
+
+    base = jnp.asarray(ds.base)
+    t0 = time.time()
+    codes = search.encode_database(params, state, cfg, base)
+    jax.block_until_ready(codes)
+    encode_us = (time.time() - t0) * 1e6
+
+    skw = dict(rerank=s["rerank"], topk=100, scan_impl=scan_impl)
+    skw.update(search_overrides or {})
+    scfg = search.SearchConfig(**skw)
+    queries = jnp.asarray(ds.queries)
+    t0 = time.time()
+    retrieved = search.search(params, state, cfg, scfg, queries, codes)
+    jax.block_until_ready(retrieved)
+    search_us = (time.time() - t0) * 1e6 / len(ds.queries)
+    rec = search.recall_at_k(retrieved, jnp.asarray(ds.gt_nn))
+    return rec, encode_us, search_us, (params, state, cfg, codes)
+
+
+def run_pq(ds, num_books: int, scale: str, *, opq: bool = False):
+    s = SCALES[scale]
+    key = jax.random.PRNGKey(0)
+    train = jnp.asarray(ds.train)
+    if opq:
+        model = bl.train_opq(key, train, num_books,
+                             outer_iters=s["opq_iters"],
+                             kmeans_iters=max(s["kmeans_iters"] // 2, 4))
+    else:
+        model = bl.train_pq(key, train, num_books, iters=s["kmeans_iters"])
+    base = jnp.asarray(ds.base)
+    t0 = time.time()
+    codes = model.encode(base)
+    jax.block_until_ready(codes)
+    encode_us = (time.time() - t0) * 1e6
+    t0 = time.time()
+    retrieved = bl.search_pq(model, jnp.asarray(ds.queries), codes, topk=100)
+    jax.block_until_ready(retrieved)
+    search_us = (time.time() - t0) * 1e6 / len(ds.queries)
+    rec = search.recall_at_k(retrieved, jnp.asarray(ds.gt_nn))
+    return rec, encode_us, search_us, (model, codes)
+
+
+def run_rvq(ds, num_books: int, scale: str, *, rerank_decoder: bool = False):
+    s = SCALES[scale]
+    key = jax.random.PRNGKey(0)
+    train = jnp.asarray(ds.train)
+    model = bl.train_rvq(key, train, num_books, iters=s["kmeans_iters"])
+    base = jnp.asarray(ds.base)
+    t0 = time.time()
+    codes = model.encode(base)
+    recon_base = model.decode(codes)
+    norms = jnp.sum(recon_base * recon_base, axis=-1)
+    jax.block_until_ready(norms)
+    encode_us = (time.time() - t0) * 1e6
+
+    queries = jnp.asarray(ds.queries)
+    if not rerank_decoder:
+        t0 = time.time()
+        retrieved = bl.search_rvq(model, queries, codes, norms, topk=100)
+        jax.block_until_ready(retrieved)
+        search_us = (time.time() - t0) * 1e6 / len(ds.queries)
+        rec = search.recall_at_k(retrieved, jnp.asarray(ds.gt_nn))
+        return rec, encode_us, search_us, (model, codes)
+
+    # "LSQ + rerank"-style: learned MLP decoder reranks the shallow top-L
+    recon_train = model.decode(model.encode(train))
+    dec_params, apply_fn = bl.train_rerank_decoder(
+        jax.random.PRNGKey(1), recon_train, train, steps=1500)
+    t0 = time.time()
+    cand = bl.search_rvq(model, queries, codes, norms, topk=s["rerank"])
+    retrieved = bl.rerank_with_decoder(apply_fn, dec_params, model, queries,
+                                       codes, cand, topk=100)
+    jax.block_until_ready(retrieved)
+    search_us = (time.time() - t0) * 1e6 / len(ds.queries)
+    rec = search.recall_at_k(retrieved, jnp.asarray(ds.gt_nn))
+    return rec, encode_us, search_us, (model, codes)
+
+
+def fmt_recalls(rec: dict) -> str:
+    return (f"R@1={rec['recall@1']:.3f} R@10={rec['recall@10']:.3f} "
+            f"R@100={rec['recall@100']:.3f}")

@@ -1,0 +1,47 @@
+"""Benchmark harness: one module per paper table + roofline readout.
+
+    PYTHONPATH=src python -m benchmarks.run [--scale quick|default|full]
+        [--only recall,scale,ablation,timings,roofline]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="quick",
+                    choices=["quick", "default", "full"])
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benches")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_ablation, bench_recall, bench_roofline,
+                            bench_scale, bench_timings)
+
+    benches = {
+        "timings": lambda: bench_timings.run(args.scale),
+        "recall": lambda: bench_recall.run(args.scale),
+        "scale": lambda: bench_scale.run(args.scale),
+        "ablation": lambda: bench_ablation.run(args.scale),
+        "roofline": lambda: bench_roofline.run(),
+    }
+    selected = (args.only.split(",") if args.only else list(benches))
+
+    print("name,us_per_call,derived")
+    for name in selected:
+        t0 = time.time()
+        try:
+            benches[name]()
+            print(f"# {name}: done in {time.time() - t0:.1f}s")
+        except Exception as e:  # noqa: BLE001 — keep the harness running
+            print(f"# {name}: FAILED {type(e).__name__}: {e}")
+            traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""The paper's technique inside an LM: decode with an MCQ-compressed KV
+cache (compressed-domain attention scoring) vs the exact cache, comparing
+memory and output agreement.
+
+    PYTHONPATH=src python examples/kv_cache_compression.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import registry
+from repro.utils.pytree import param_bytes
+
+
+def cache_bytes(c):
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(c)
+               if x.dtype == jnp.uint8 or jnp.issubdtype(x.dtype,
+                                                         jnp.floating))
+
+
+def run(arch="gemma3-12b", steps=24):
+    base_cfg = configs.get(arch, smoke=True)
+    kvq_cfg = base_cfg.with_(kvq=True, kvq_books=4, kvq_book_size=64)
+    key = jax.random.PRNGKey(0)
+    params = registry.init(key, base_cfg)
+    print(f"arch={base_cfg.name} params={param_bytes(params)/2**20:.1f}MB")
+
+    b, max_len = 2, 64
+    toks = jax.random.randint(key, (b, steps), 0, base_cfg.vocab_size)
+
+    outs = {}
+    for tag, cfg in (("exact", base_cfg), ("kvq", kvq_cfg)):
+        caches = registry.init_cache(cfg, b, max_len, dtype=jnp.float32)
+        kv_bytes = sum(
+            x.size * x.dtype.itemsize for x in jax.tree.leaves(caches))
+        step = jax.jit(lambda p, c, t, pos, cfg=cfg: registry.decode_step(
+            p, cfg, c, t, pos))
+        logits_seq = []
+        for pos in range(steps):
+            logits, caches = step(params, caches, toks[:, pos],
+                                  jnp.asarray(pos, jnp.int32))
+            logits_seq.append(logits)
+        outs[tag] = jnp.stack(logits_seq, 1)
+        print(f"{tag:6s}: cache={kv_bytes/2**20:.2f}MB")
+
+    # agreement: top-1 next-token match between exact and compressed KV
+    top_exact = jnp.argmax(outs["exact"], -1)
+    top_kvq = jnp.argmax(outs["kvq"], -1)
+    agree = float(jnp.mean((top_exact == top_kvq).astype(jnp.float32)))
+    print(f"top-1 agreement (untrained net, hard case): {agree:.2f}")
+    print("note: global-attention layers store uint8 codes (2*M bytes "
+          "per token per kv-head instead of 2*dh*2 bf16 bytes)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Quickstart: train UNQ on synthetic descriptors, compress a base set,
+run the two-stage compressed-domain search, report Recall@k.
+
+    PYTHONPATH=src python examples/quickstart.py [--epochs 30]
+"""
+import argparse
+import time
+
+import jax.numpy as jnp
+
+from repro.configs import unq_paper
+from repro.core import search, training, unq
+from repro.data.descriptors import make_synthetic_dataset
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--epochs", type=int, default=20)
+    ap.add_argument("--bytes", type=int, default=8, choices=[8, 16])
+    args = ap.parse_args()
+
+    print("== 1. data (Deep1M-style synthetic) ==")
+    ds = make_synthetic_dataset("deep", n_train=5000, n_base=20000,
+                                n_query=500)
+    print(f"train={ds.train.shape} base={ds.base.shape} "
+          f"queries={ds.queries.shape}")
+
+    print("== 2. train UNQ ==")
+    cfg = unq.UNQConfig(dim=ds.dim, num_codebooks=args.bytes)
+    tcfg = training.TrainConfig(epochs=args.epochs, lr=5e-3, log_every=100)
+    t0 = time.time()
+    params, state, hist = training.train_unq(
+        ds, cfg, tcfg,
+        callback=lambda s, m: print(
+            f"  step {s:5d} recon={m['recon']:.3f} cv2={m['cv2']:.3f}"))
+    print(f"trained in {time.time() - t0:.0f}s; "
+          f"model {unq.model_size_bytes(params) / 2**20:.1f} MB")
+
+    print("== 3. compress the base set ==")
+    codes = search.encode_database(params, state, cfg, jnp.asarray(ds.base))
+    print(f"codes {codes.shape} {codes.dtype} -> "
+          f"{codes.size / 2**20:.2f} MB for "
+          f"{ds.base.nbytes / 2**20:.1f} MB of vectors")
+
+    print("== 4. two-stage search (LUT scan + decoder rerank) ==")
+    scfg = search.SearchConfig(rerank=200, topk=100)
+    t0 = time.time()
+    retrieved = search.search(params, state, cfg, scfg,
+                              jnp.asarray(ds.queries), codes)
+    dt = (time.time() - t0) / len(ds.queries) * 1e3
+    rec = search.recall_at_k(retrieved, jnp.asarray(ds.gt_nn))
+    print(f"recall: {rec}  ({dt:.1f} ms/query on CPU)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+"""Roofline derivation from the dry-run artifacts (DESIGN.md §6).
+
+Per (arch x shape x mesh) cell:
+
+    compute    = executed_FLOPs_per_device / PEAK_FLOPS
+    memory     = executed_bytes_per_device / HBM_BW
+    collective = collective_bytes_per_device / ICI_BW
+
+(the dry-run module is the per-partition SPMD program, so "per device" is
+what the artifacts already contain). The dominant term is the projected
+bottleneck; roofline fraction = compute / max(all terms) — the share of
+step time the MXUs would be busy if overlap were perfect.
+
+MODEL_FLOPS uses 6*N*D (train, dense), 6*N_active*D (train, MoE) and
+2*N*B (+attention KV term) for decode; the ratio MODEL_FLOPS /
+(executed_FLOPs * devices) exposes remat/redundancy waste.
+
+Usage:
+    PYTHONPATH=src python -m repro.analysis.roofline \
+        [--dir artifacts/dryrun] [--mesh 16x16] [--format md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+# TPU v5e hardware constants (per chip) — from the assignment sheet.
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+# active params for MoE archs (attn + shared + top-k experts + embeddings)
+_N_ACTIVE = {
+    "deepseek-moe-16b": 2.8e9,
+    "moonshot-v1-16b-a3b": 4.1e9,
+}
+
+
+def model_flops(info: dict, arch_params: int) -> float:
+    """Global useful flops for the step (6ND train / 2NB decode)."""
+    arch = info["arch"].replace("-kvq", "")
+    n = _N_ACTIVE.get(arch, float(arch_params))
+    shape = info["shape"]
+    step = info["step"]
+    seq = {"train_4k": 4096, "prefill_32k": 32768, "decode_32k": 1,
+           "long_500k": 1}[shape]
+    batch = {"train_4k": 256, "prefill_32k": 32, "decode_32k": 128,
+             "long_500k": 1}[shape]
+    tokens = seq * batch
+    if step == "train":
+        return 6.0 * n * tokens
+    return 2.0 * n * tokens          # prefill/decode forward-only
+
+
+def cell_roofline(info: dict) -> dict:
+    ex = info["executed"]
+    compute = ex["flops"] / PEAK_FLOPS
+    memory = ex["bytes"] / HBM_BW
+    collective = ex["collective_bytes"] / ICI_BW
+    terms = {"compute": compute, "memory": memory, "collective": collective}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(info, info["param_count"])
+    useful = mf / max(ex["flops"] * info["devices"], 1.0)
+    return {
+        "arch": info["arch"],
+        "shape": info["shape"],
+        "mesh": info["mesh"],
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "dominant": dominant,
+        "roofline_fraction": compute / max(terms.values()) if max(
+            terms.values()) > 0 else 0.0,
+        "model_flops": mf,
+        "useful_compute_ratio": useful,
+        "hbm_bytes_per_device": info["memory"]["argument_bytes"]
+        + info["memory"]["temp_bytes"],
+    }
+
+
+def load_cells(art_dir: pathlib.Path, mesh: str | None = None) -> list[dict]:
+    cells = []
+    for p in sorted(art_dir.glob("*.json")):
+        info = json.loads(p.read_text())
+        if info.get("status") != "ok":
+            cells.append(info)
+            continue
+        if mesh and info["mesh"] != mesh:
+            continue
+        cells.append({**info, "roofline": cell_roofline(info)})
+    return cells
+
+
+def format_table(cells: list[dict], fmt: str = "md") -> str:
+    rows = []
+    header = ("| arch | shape | mesh | compute(s) | memory(s) | coll(s) | "
+              "dominant | roofline | useful |")
+    sep = "|---" * 9 + "|"
+    rows.append(header)
+    rows.append(sep)
+    for c in cells:
+        if "roofline" not in c:
+            rows.append(
+                f"| {c.get('arch','?')} | {c.get('shape','?')} | "
+                f"{c.get('mesh','?')} | — | — | — | "
+                f"{c.get('status','?')[:60]} | — | — |")
+            continue
+        r = c["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+            f"| {r['collective_s']:.2e} | {r['dominant']} "
+            f"| {r['roofline_fraction']:.2f} "
+            f"| {r['useful_compute_ratio']:.2f} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    cells = load_cells(pathlib.Path(args.dir), mesh=args.mesh)
+    print(format_table(cells))
+    if args.json_out:
+        pathlib.Path(args.json_out).write_text(json.dumps(
+            [c.get("roofline", c) for c in cells], indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Architecture registry (``--arch <id>``), shape matrix, and input specs.
+
+The 10 assigned architectures plus the paper's own UNQ configs. Each arch
+module exports FULL (the exact published config, dry-run only) and SMOKE
+(a reduced same-code-path config that runs a real step on CPU).
+
+SHAPES defines the 4 assigned input shapes; CELLS enumerates the 40
+(arch x shape) cells with skip annotations (encoder-only archs have no
+decode; long_500k requires sub-quadratic decode state). The gemma3 KVQ
+long-context variant is a bonus cell exercising the paper's technique.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+_ARCH_MODULES = {
+    "yi-6b": "repro.configs.yi_6b",
+    "minitron-8b": "repro.configs.minitron_8b",
+    "mistral-large-123b": "repro.configs.mistral_large_123b",
+    "gemma3-12b": "repro.configs.gemma3_12b",
+    "deepseek-moe-16b": "repro.configs.deepseek_moe_16b",
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b_a3b",
+    "hubert-xlarge": "repro.configs.hubert_xlarge",
+    "chameleon-34b": "repro.configs.chameleon_34b",
+    "rwkv6-1.6b": "repro.configs.rwkv6_1_6b",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+}
+
+ARCH_IDS = list(_ARCH_MODULES)
+
+
+def get(arch: str, *, smoke: bool = False, variant: str | None = None) -> ModelConfig:
+    """Look up an architecture config by id (``--arch``)."""
+    mod = importlib.import_module(_ARCH_MODULES[arch])
+    if variant:
+        return getattr(mod, variant)
+    return mod.SMOKE if smoke else mod.FULL
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    step: str                 # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", 4096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524288, 1, "decode"),
+}
+
+# subquadratic-decode archs eligible for long_500k
+_LONG_OK = {"rwkv6-1.6b", "recurrentgemma-2b"}
+_ENCODER_ONLY = {"hubert-xlarge"}
+
+
+def cell_status(arch: str, shape: str) -> str:
+    """"run" or a skip reason for the (arch, shape) cell."""
+    if arch in _ENCODER_ONLY and SHAPES[shape].step == "decode":
+        return "skip: encoder-only arch has no decode step"
+    if shape == "long_500k" and arch not in _LONG_OK:
+        return ("skip: full-attention decode at 500k KV; run via the "
+                "gemma3-12b-kvq bonus cell instead"
+                if arch == "gemma3-12b"
+                else "skip: pure full-attention arch (quadratic/unbounded KV)")
+    return "run"
+
+
+def all_cells():
+    """All 40 (arch, shape) cells + the gemma3 KVQ bonus cell."""
+    cells = []
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            cells.append((arch, shape, cell_status(arch, shape)))
+    cells.append(("gemma3-12b-kvq", "long_500k", "run"))
+    return cells
+
+
+def input_specs(cfg: ModelConfig, shape: Shape, *, for_smoke: bool = False):
+    """ShapeDtypeStruct stand-ins for every model input of a step.
+
+    train/prefill: the token (or stub-frame) batch. decode: the per-step
+    token batch + position. Cache/params specs are built separately via
+    jax.eval_shape in the dry-run driver.
+    """
+    b = shape.global_batch
+    t = shape.seq_len
+    if for_smoke:
+        b, t = min(b, 2), min(t, 64)
+    if cfg.input_mode == "frames":
+        return {
+            "frames": jax.ShapeDtypeStruct((b, t, cfg.frame_dim), jnp.float32),
+            "targets": jax.ShapeDtypeStruct((b, t), jnp.int32),
+            "mask": jax.ShapeDtypeStruct((b, t), jnp.bool_),
+        }
+    if shape.step == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b,), jnp.int32)}
+    n = t + 1 if shape.step == "train" else t
+    return {"tokens": jax.ShapeDtypeStruct((b, n), jnp.int32)}

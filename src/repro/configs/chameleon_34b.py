@@ -1,0 +1,30 @@
+"""chameleon-34b — early-fusion VLM [arXiv:2405.09818].
+
+48L d_model=8192 64H (GQA kv=8) d_ff=22016 vocab=65536. Image VQ tokens
+live in the same 65536 vocabulary (early fusion), so the backbone is a
+dense decoder with QK-norm (chameleon's stability fix); the VQ-VAE image
+tokenizer frontend is a STUB producing token ids.
+"""
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="chameleon-34b",
+    family="transformer",
+    kind="decoder",
+    num_layers=48,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=22016,
+    vocab_size=65536,
+    act="silu",
+    qk_norm=True,
+)
+
+SMOKE = FULL.with_(
+    name="chameleon-34b-smoke",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=160,
+    vocab_size=256, compute_dtype=jnp.float32, remat="none",
+)

@@ -1,0 +1,43 @@
+"""gemma3-12b — dense GQA with 5:1 local:global attention, 128k context
+[hf:google/gemma-3-12b-pt].
+
+48L d_model=3840 16H (GQA kv=8) d_ff=15360 vocab=262144.
+Layer pattern: 8 scanned groups of [5 x sliding-window(1024), 1 x global].
+The long_500k bonus cell runs with cfg.kvq=True: the 8 global layers decode
+against an MCQ-compressed KV cache (the paper's technique), bounding
+global-KV memory (see DESIGN.md §4).
+"""
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="gemma3-12b",
+    family="transformer",
+    kind="decoder",
+    num_layers=48,
+    d_model=3840,
+    num_heads=16,
+    num_kv_heads=8,
+    d_ff=15360,
+    vocab_size=262144,
+    act="gelu",
+    local_global_ratio=5,
+    window=1024,
+    qk_norm=True,
+    use_post_norm=True,
+    embed_scale=True,
+    tie_embeddings=True,
+    rope_theta=1e6,
+)
+
+# long-context serving variant: global layers hold MCQ-compressed KV
+FULL_KVQ = FULL.with_(name="gemma3-12b-kvq", kvq=True, kvq_books=8,
+                      kvq_book_size=256)
+
+SMOKE = FULL.with_(
+    name="gemma3-12b-smoke",
+    num_layers=6, local_global_ratio=5, window=8,
+    d_model=64, num_heads=4, num_kv_heads=2, d_ff=160,
+    vocab_size=512, compute_dtype=jnp.float32, remat="none",
+)

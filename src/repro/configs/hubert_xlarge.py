@@ -1,0 +1,31 @@
+"""hubert-xlarge — encoder-only audio transformer [arXiv:2106.07447].
+
+48L d_model=1280 16H d_ff=5120, 504 k-means targets. The conv waveform
+frontend is a STUB per the assignment: input_specs() feeds precomputed
+frame embeddings (B, T, 1280); training is masked-frame cluster prediction.
+Encoder-only -> no decode shapes (see DESIGN.md skips).
+"""
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="hubert-xlarge",
+    family="transformer",
+    kind="encoder",
+    input_mode="frames",
+    frame_dim=1280,
+    num_layers=48,
+    d_model=1280,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=5120,
+    vocab_size=504,
+    act="gelu",
+)
+
+SMOKE = FULL.with_(
+    name="hubert-xlarge-smoke",
+    num_layers=2, d_model=64, frame_dim=64, num_heads=4, num_kv_heads=4,
+    d_ff=160, vocab_size=64, compute_dtype=jnp.float32, remat="none",
+)

@@ -1,0 +1,26 @@
+"""minitron-8b — width/depth-pruned Nemotron dense GQA [arXiv:2407.14679].
+
+32L d_model=4096 32H (GQA kv=8) d_ff=16384 vocab=256000.
+"""
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="minitron-8b",
+    family="transformer",
+    kind="decoder",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=16384,
+    vocab_size=256000,
+    act="silu",
+)
+
+SMOKE = FULL.with_(
+    name="minitron-8b-smoke",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=192,
+    vocab_size=512, compute_dtype=jnp.float32, remat="none",
+)

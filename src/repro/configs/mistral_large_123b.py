@@ -1,0 +1,27 @@
+"""mistral-large-123b — dense GQA decoder
+[hf:mistralai/Mistral-Large-Instruct-2407].
+
+88L d_model=12288 96H (GQA kv=8) d_ff=28672 vocab=32768.
+"""
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="mistral-large-123b",
+    family="transformer",
+    kind="decoder",
+    num_layers=88,
+    d_model=12288,
+    num_heads=96,
+    num_kv_heads=8,
+    d_ff=28672,
+    vocab_size=32768,
+    act="silu",
+)
+
+SMOKE = FULL.with_(
+    name="mistral-large-123b-smoke",
+    num_layers=4, d_model=96, num_heads=6, num_kv_heads=2, d_ff=224,
+    vocab_size=256, compute_dtype=jnp.float32, remat="none",
+)

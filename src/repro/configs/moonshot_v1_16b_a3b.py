@@ -1,0 +1,36 @@
+"""moonshot-v1-16b-a3b — Moonlight-style MoE
+[hf:moonshotai/Moonlight-16B-A3B].
+
+48L d_model=2048 16H (GQA kv=16) vocab=163840; MoE 64 routed (d_ff=1408)
+top-6 + 2 shared experts.
+"""
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="moonshot-v1-16b-a3b",
+    family="transformer",
+    kind="decoder",
+    num_layers=48,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1408,
+    vocab_size=163840,
+    act="silu",
+    moe=True,
+    num_experts=64,
+    num_shared_experts=2,
+    top_k=6,
+    moe_d_ff=1408,
+    capacity_factor=1.25,
+    router_balance="cv2",
+)
+
+SMOKE = FULL.with_(
+    name="moonshot-v1-16b-a3b-smoke",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, d_ff=96,
+    moe_d_ff=96, num_experts=8, top_k=2, num_shared_experts=2,
+    vocab_size=256, compute_dtype=jnp.float32, remat="none",
+)

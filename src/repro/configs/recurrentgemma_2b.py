@@ -1,0 +1,36 @@
+"""recurrentgemma-2b — Griffin hybrid: RG-LRU + local attention 1:2
+[arXiv:2402.19427].
+
+26L d_model=2560 10H (MQA kv=1, head_dim 256) d_ff=7680 vocab=256000,
+rnn width 2560, local window 2048. Pattern: 8 groups of (rec, rec, attn)
++ 2 trailing recurrent layers. Decode state is O(1) + bounded window,
+so long_500k runs natively.
+"""
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="recurrentgemma-2b",
+    family="griffin",
+    kind="decoder",
+    num_layers=26,
+    d_model=2560,
+    num_heads=10,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=7680,
+    vocab_size=256000,
+    act="gelu",
+    window=2048,
+    rnn_width=2560,
+    conv_width=4,
+    attn_every=3,
+)
+
+SMOKE = FULL.with_(
+    name="recurrentgemma-2b-smoke",
+    num_layers=5, d_model=64, num_heads=4, num_kv_heads=1, head_dim=16,
+    d_ff=160, vocab_size=256, window=8, rnn_width=64,
+    compute_dtype=jnp.float32, remat="none",
+)

@@ -1,0 +1,28 @@
+"""rwkv6-1.6b — "Finch", attention-free SSM with data-dependent decay
+[arXiv:2404.05892].
+
+24L d_model=2048 d_ff=7168 vocab=65536 (head dim 64 -> 32 heads). O(1)
+decode state, so long_500k runs natively. The paper's KV-compression
+technique is inapplicable (no KV cache) — DESIGN.md §Arch-applicability.
+"""
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="rwkv6-1.6b",
+    family="rwkv6",
+    kind="decoder",
+    num_layers=24,
+    d_model=2048,
+    num_heads=32,          # d_model / 64 (rwkv6 head size)
+    num_kv_heads=32,
+    d_ff=7168,
+    vocab_size=65536,
+)
+
+SMOKE = FULL.with_(
+    name="rwkv6-1.6b-smoke",
+    num_layers=2, d_model=128, num_heads=2, num_kv_heads=2, d_ff=256,
+    vocab_size=256, compute_dtype=jnp.float32, remat="none",
+)

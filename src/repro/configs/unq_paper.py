@@ -1,0 +1,26 @@
+"""The paper's own experimental configs (§4.1).
+
+Deep1M: 96-d deep descriptors; BigANN1M: 128-d SIFT. Both at 8 and 16
+bytes/vector (M codebooks of K=256), encoder/decoder with two 1024-unit
+hidden layers, 256-d codewords, rerank top-500 (top-1000 at 1B scale).
+"""
+from repro.core.unq import UNQConfig
+from repro.core.search import SearchConfig
+from repro.core.training import TrainConfig
+
+DEEP_8B = UNQConfig(dim=96, num_codebooks=8, codebook_size=256,
+                    code_dim=256, hidden_dim=1024, num_hidden_layers=2)
+DEEP_16B = DEEP_8B.with_(num_codebooks=16)
+BIGANN_8B = DEEP_8B.with_(dim=128)
+BIGANN_16B = BIGANN_8B.with_(num_codebooks=16)
+
+SEARCH = SearchConfig(rerank=500, topk=100)
+SEARCH_1B = SearchConfig(rerank=1000, topk=100)
+
+TRAIN = TrainConfig(epochs=30, batch_size=256, lr=1e-3, alpha=0.01,
+                    beta_start=1.0, beta_end=0.05)
+
+# CPU-scale smoke variant (same code path, small model)
+SMOKE = UNQConfig(dim=32, num_codebooks=4, codebook_size=64, code_dim=32,
+                  hidden_dim=64, num_hidden_layers=2)
+SMOKE_TRAIN = TrainConfig(epochs=2, batch_size=128, lr=1e-3)

@@ -1,0 +1,27 @@
+"""yi-6b — dense llama-arch GQA decoder [arXiv:2403.04652].
+
+32L d_model=4096 32H (GQA kv=4) d_ff=11008 vocab=64000.
+"""
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="yi-6b",
+    family="transformer",
+    kind="decoder",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=4,
+    d_ff=11008,
+    vocab_size=64000,
+    rope_theta=5e6,
+    act="silu",
+)
+
+SMOKE = FULL.with_(
+    name="yi-6b-smoke",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=160,
+    vocab_size=256, compute_dtype=jnp.float32, remat="none",
+)

@@ -1,0 +1,9 @@
+# The paper's primary contribution: Unsupervised Neural Quantization —
+# model (unq), objective (losses), two-stage compressed-domain search
+# (search), shallow MCQ baselines (baselines), and the trainer (training).
+from repro.core.unq import UNQConfig
+from repro.core.search import SearchConfig, recall_at_k
+from repro.core.training import TrainConfig, train_unq
+
+__all__ = ["UNQConfig", "SearchConfig", "TrainConfig", "train_unq",
+           "recall_at_k"]

@@ -1,0 +1,268 @@
+"""Shallow MCQ baselines from the paper's comparison (Table 2-4).
+
+  * PQ   — Product Quantization (Jegou et al. 2011): per-subspace k-means.
+  * OPQ  — Optimized PQ (Ge et al. 2013): alternating rotation (procrustes)
+           + PQ, the "OPQ" row of Table 2.
+  * RVQ  — Residual Vector Quantization (Chen et al. 2010): greedy additive
+           quantization; stands in for the additive/LSQ family (the paper's
+           strongest shallow baseline is LSQ — same encoding/ADC structure;
+           LSQ's ILS codebook refinement is noted as out of scope, so RVQ
+           recall should be read as a slightly conservative stand-in).
+  * rerank decoders — "LSQ + rerank": an MLP decoder trained on
+           reconstruction (Eq. 9) used to re-rank the shallow top-L, the
+           paper's strongest non-UNQ configuration.
+
+All baselines reuse the same ADC scan kernel as UNQ (repro.kernels.ops),
+so every method in the benchmark shares one compressed-domain scan path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+# ---------------------------------------------------------------------------
+# k-means substrate (JAX, chunked Lloyd iterations)
+# ---------------------------------------------------------------------------
+
+def kmeans(key, x: jax.Array, k: int, iters: int = 25) -> jax.Array:
+    """Lloyd's algorithm; returns centroids (k, d). Empty clusters are
+    re-seeded from random points (standard practice for 256-way codebooks)."""
+    n = x.shape[0]
+    init_idx = jax.random.choice(key, n, (k,), replace=n < k)
+    cent = x[init_idx]
+
+    @jax.jit
+    def step(cent, rkey):
+        d = (jnp.sum(x * x, axis=1)[:, None] - 2.0 * x @ cent.T
+             + jnp.sum(cent * cent, axis=1)[None, :])
+        assign = jnp.argmin(d, axis=1)                       # (n,)
+        onehot = jax.nn.one_hot(assign, k, dtype=x.dtype)    # (n, k)
+        counts = jnp.sum(onehot, axis=0)                     # (k,)
+        sums = onehot.T @ x                                  # (k, d)
+        new = sums / jnp.maximum(counts[:, None], 1.0)
+        # re-seed empties
+        reseed = x[jax.random.randint(rkey, (k,), 0, n)]
+        return jnp.where(counts[:, None] > 0, new, reseed)
+
+    for i in range(iters):
+        key, rkey = jax.random.split(key)
+        cent = step(cent, rkey)
+    return cent
+
+
+@jax.jit
+def _assign(x: jax.Array, cent: jax.Array) -> jax.Array:
+    d = (jnp.sum(x * x, axis=1)[:, None] - 2.0 * x @ cent.T
+         + jnp.sum(cent * cent, axis=1)[None, :])
+    return jnp.argmin(d, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# PQ
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PQModel:
+    codebooks: jax.Array          # (M, K, D/M)
+    rotation: jax.Array | None = None   # OPQ: (D, D)
+
+    @property
+    def num_books(self) -> int:
+        return self.codebooks.shape[0]
+
+    def _maybe_rotate(self, x):
+        return x @ self.rotation if self.rotation is not None else x
+
+    def encode(self, x: jax.Array) -> jax.Array:
+        """(N, D) -> (N, M) uint8."""
+        x = self._maybe_rotate(x)
+        m, k, d_sub = self.codebooks.shape
+        xs = x.reshape(x.shape[0], m, d_sub)
+        codes = jax.vmap(_assign, in_axes=(1, 0), out_axes=1)(xs, self.codebooks)
+        return codes.astype(jnp.uint8)
+
+    def decode(self, codes: jax.Array) -> jax.Array:
+        m, k, d_sub = self.codebooks.shape
+        m_idx = jnp.arange(m)[None, :]
+        cw = self.codebooks[m_idx, codes.astype(jnp.int32)]   # (N, M, d_sub)
+        x = cw.reshape(codes.shape[0], m * d_sub)
+        return x @ self.rotation.T if self.rotation is not None else x
+
+    def lut(self, q: jax.Array) -> jax.Array:
+        """Squared-L2 distance tables for one query: (M, K)."""
+        q = self._maybe_rotate(q[None, :])[0]
+        m, k, d_sub = self.codebooks.shape
+        qs = q.reshape(m, 1, d_sub)
+        return jnp.sum(jnp.square(qs - self.codebooks), axis=-1)
+
+
+def train_pq(key, train: jax.Array, num_books: int, book_size: int = 256,
+             iters: int = 25) -> PQModel:
+    d = train.shape[1]
+    assert d % num_books == 0
+    d_sub = d // num_books
+    xs = train.reshape(train.shape[0], num_books, d_sub)
+    keys = jax.random.split(key, num_books)
+    books = jnp.stack([kmeans(keys[m], xs[:, m, :], book_size, iters)
+                       for m in range(num_books)])
+    return PQModel(books)
+
+
+def train_opq(key, train: jax.Array, num_books: int, book_size: int = 256,
+              outer_iters: int = 8, kmeans_iters: int = 10) -> PQModel:
+    """OPQ-NP: alternate procrustes rotation and PQ codebooks."""
+    d = train.shape[1]
+    rot = jnp.eye(d, dtype=train.dtype)
+    model = None
+    for it in range(outer_iters):
+        key, sub = jax.random.split(key)
+        xr = train @ rot
+        model = train_pq(sub, xr, num_books, book_size, kmeans_iters)
+        recon = model.decode(model.encode(xr))       # in rotated space
+        # procrustes: argmin_R ||X R - recon||_F, R orthogonal
+        u, _, vt = jnp.linalg.svd(train.T @ recon, full_matrices=False)
+        rot = u @ vt
+    final = train_pq(key, train @ rot, num_books, book_size, iters=25)
+    final.rotation = rot
+    return final
+
+
+# ---------------------------------------------------------------------------
+# RVQ (additive family)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RVQModel:
+    codebooks: jax.Array          # (M, K, D) — full-dimensional codewords
+
+    def encode(self, x: jax.Array) -> jax.Array:
+        res = x
+        codes = []
+        for m in range(self.codebooks.shape[0]):
+            c = _assign(res, self.codebooks[m])
+            codes.append(c)
+            res = res - self.codebooks[m][c]
+        return jnp.stack(codes, axis=1).astype(jnp.uint8)
+
+    def decode(self, codes: jax.Array) -> jax.Array:
+        m_idx = jnp.arange(self.codebooks.shape[0])[None, :]
+        cw = self.codebooks[m_idx, codes.astype(jnp.int32)]   # (N, M, D)
+        return jnp.sum(cw, axis=1)
+
+    def lut_ip(self, q: jax.Array) -> jax.Array:
+        """Inner-product tables <q, c_mk>: (M, K)."""
+        return jnp.einsum("d,mkd->mk", q, self.codebooks)
+
+
+def train_rvq(key, train: jax.Array, num_books: int, book_size: int = 256,
+              iters: int = 20) -> RVQModel:
+    res = train
+    books = []
+    for m in range(num_books):
+        key, sub = jax.random.split(key)
+        cent = kmeans(sub, res, book_size, iters)
+        books.append(cent)
+        res = res - cent[_assign(res, cent)]
+    return RVQModel(jnp.stack(books))
+
+
+# ---------------------------------------------------------------------------
+# Search with shallow models (shares the ADC kernel with UNQ)
+# ---------------------------------------------------------------------------
+
+def search_pq(model: PQModel, queries: jax.Array, codes: jax.Array,
+              topk: int, *, scan_impl: str = "xla") -> jax.Array:
+    @jax.jit
+    def _one(q):
+        scores = ops.adc_scan(codes, model.lut(q), impl=scan_impl)
+        _, idx = jax.lax.top_k(-scores, topk)
+        return idx
+
+    return jax.vmap(_one)(queries)
+
+
+def search_rvq(model: RVQModel, queries: jax.Array, codes: jax.Array,
+               code_norms: jax.Array, topk: int, *,
+               scan_impl: str = "xla") -> jax.Array:
+    """ADC for additive codes: ||q - x~||^2 = ||x~||^2 - 2<q, x~> + const(q).
+
+    code_norms: (N,) precomputed ||decode(codes)||^2 (stored alongside codes,
+    the standard extra-4-bytes trick for additive quantizers)."""
+
+    @jax.jit
+    def _one(q):
+        ip = ops.adc_scan(codes, model.lut_ip(q), impl=scan_impl)  # sum <q, c>
+        scores = code_norms - 2.0 * ip
+        _, idx = jax.lax.top_k(-scores, topk)
+        return idx
+
+    return jax.vmap(_one)(queries)
+
+
+# ---------------------------------------------------------------------------
+# Learned rerank decoder ("LSQ + rerank" baseline)
+# ---------------------------------------------------------------------------
+
+def train_rerank_decoder(key, recon_train: jax.Array, target: jax.Array,
+                         hidden: int = 1024, steps: int = 2000,
+                         batch: int = 256, lr: float = 1e-3):
+    """MLP (two 1024-unit hidden layers, as the paper's LSQ+rerank) trained
+    to map shallow reconstructions -> original vectors, minimizing Eq. 9."""
+    from repro import optim as _optim
+    d_in, d_out = recon_train.shape[1], target.shape[1]
+    k1, k2, k3 = jax.random.split(key, 3)
+
+    def lin(k, i, o):
+        return {"w": (jax.random.normal(k, (i, o)) * jnp.sqrt(2.0 / i)
+                      ).astype(jnp.float32), "b": jnp.zeros((o,), jnp.float32)}
+
+    params = {"l1": lin(k1, d_in, hidden), "l2": lin(k2, hidden, hidden),
+              "l3": lin(k3, hidden, d_out)}
+
+    def apply_fn(p, x):
+        h = jax.nn.relu(x @ p["l1"]["w"] + p["l1"]["b"])
+        h = jax.nn.relu(h @ p["l2"]["w"] + p["l2"]["b"])
+        return h @ p["l3"]["w"] + p["l3"]["b"]
+
+    opt = _optim.adam()
+    opt_state = opt.init(params)
+    lr_fn = _optim.one_cycle(lr, steps)
+    n = recon_train.shape[0]
+
+    @jax.jit
+    def step_fn(p, s, xb, yb, step):
+        def loss(p):
+            return jnp.mean(jnp.sum(jnp.square(apply_fn(p, xb) - yb), axis=-1))
+        l, g = jax.value_and_grad(loss)(p)
+        p, s = opt.apply(p, g, s, lr_fn(step))
+        return p, s, l
+
+    rng = np.random.default_rng(0)
+    for i in range(steps):
+        sel = rng.integers(0, n, batch)
+        params, opt_state, _ = step_fn(params, opt_state,
+                                       recon_train[sel], target[sel],
+                                       jnp.asarray(i))
+    return params, apply_fn
+
+
+def rerank_with_decoder(apply_fn, dec_params, model, queries, codes,
+                        cand: jax.Array, topk: int) -> jax.Array:
+    """Re-rank candidate lists with ||q - decoder(decode(codes))||^2."""
+
+    @jax.jit
+    def _one(q, c_idx):
+        recon = apply_fn(dec_params, model.decode(codes[c_idx]))
+        d = jnp.sum(jnp.square(recon - q[None, :]), axis=-1)
+        _, order = jax.lax.top_k(-d, min(topk, d.shape[0]))
+        return c_idx[order]
+
+    return jax.vmap(_one)(queries, cand)

@@ -1,0 +1,120 @@
+"""UNQ training objective (paper §3.4).
+
+    L = L1 + alpha * L2 + beta * (1/M) sum_m CV^2(i_m)        (Eq. 12)
+
+  L1  — reconstruction MSE through the hard-ST Gumbel bottleneck   (Eq. 9)
+  L2  — triplet loss on d2 in the learned space                    (Eq. 10)
+  CV² — squared coefficient of variation of batch-averaged
+        codeword probabilities (load-balance regularizer, from the
+        sparsely-gated MoE literature)                             (Eq. 11)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import unq
+
+
+def reconstruction_loss(x, recon) -> jax.Array:
+    """L1 (Eq. 9): mean squared reconstruction error."""
+    return jnp.mean(jnp.sum(jnp.square(recon - x), axis=-1))
+
+
+def d2_scores(params, heads, codes) -> jax.Array:
+    """d2(q, i) up to const(q) (Eq. 8): -sum_m <net(q)_m, c_{m,i_m}>.
+
+    heads: (B, M, d_c) = net(q); codes: (B, M) integer codes of the
+    comparison points. Returns (B,).
+    """
+    cw = unq.codewords_for_codes(params, codes)       # (B, M, d_c)
+    return -jnp.sum(heads * cw, axis=(1, 2))
+
+
+def triplet_loss(params, heads, pos_codes, neg_codes, *, margin: float) -> jax.Array:
+    """L2 (Eq. 10): max(0, delta + d2(x, f(x+)) - d2(x, f(x-)))."""
+    d_pos = d2_scores(params, heads, pos_codes)
+    d_neg = d2_scores(params, heads, neg_codes)
+    return jnp.mean(jax.nn.relu(margin + d_pos - d_neg))
+
+
+def cv_squared_regularizer(log_probs) -> jax.Array:
+    """(1/M) sum_m CV^2 over batch-averaged codeword probabilities (Eq. 11).
+
+    log_probs: (B, M, K). CV^2(m) = Var_k[p_avg(k|X)] / (E_k[p_avg(k|X)])^2.
+    """
+    p_avg = jnp.mean(jnp.exp(log_probs), axis=0)       # (M, K)
+    mean = jnp.mean(p_avg, axis=-1)                    # (M,)
+    var = jnp.var(p_avg, axis=-1)                      # (M,)
+    cv2 = var / (jnp.square(mean) + 1e-10)
+    return jnp.mean(cv2)
+
+
+def commitment_loss(heads, onehots, codebooks):
+    """VQ-VAE-style auxiliary (van den Oord et al. [32], the paper's cited
+    lineage): pull selected codewords toward the head vectors and commit
+    heads to their codewords. Dramatically accelerates the joint
+    optimization that the straight-through estimator alone crawls through
+    (training stabilizer; the model/search are unchanged).
+
+    heads: (B, M, d_c); onehots: (B, M, K); codebooks: (M, K, d_c).
+    """
+    selected = jnp.einsum("bmk,mkd->bmd", onehots, codebooks)
+    codebook_term = jnp.mean(jnp.sum(
+        jnp.square(selected - jax.lax.stop_gradient(heads)), axis=-1))
+    commit_term = jnp.mean(jnp.sum(
+        jnp.square(heads - jax.lax.stop_gradient(selected)), axis=-1))
+    return codebook_term + 0.25 * commit_term
+
+
+def unq_loss(key, params, state, cfg, batch, *, alpha: float, beta,
+             margin: float = 1.0, hard: bool = True, use_triplet: bool = True,
+             gumbel_noise: bool = True, commit_coef: float = 0.0):
+    """Full UNQ objective on one minibatch.
+
+    batch: dict with
+      "x"   (B, D)  anchors
+      "pos" (B, D)  positive examples (sampled from top-3 true NNs)
+      "neg" (B, D)  negative examples (sampled from ranks 100..200)
+    Returns (loss, aux) where aux carries the new BN state and metrics.
+    """
+    out = unq.forward_train(key, params, state, cfg, batch["x"], hard=hard,
+                            gumbel_noise=gumbel_noise)
+    l1 = reconstruction_loss(batch["x"], out["recon"])
+    cv = cv_squared_regularizer(out["log_probs"])
+
+    if use_triplet and alpha > 0.0:
+        # Positives/negatives are encoded with the deterministic encoder f(x),
+        # exactly how database points would be stored (stop-grad: the codes
+        # are discrete indices; gradients flow via heads and codewords).
+        pos_codes = unq.encode(params, out["state"], cfg, batch["pos"])
+        neg_codes = unq.encode(params, out["state"], cfg, batch["neg"])
+        l2 = triplet_loss(params, out["heads"],
+                          jax.lax.stop_gradient(pos_codes),
+                          jax.lax.stop_gradient(neg_codes), margin=margin)
+    else:
+        l2 = jnp.zeros((), jnp.float32)
+
+    commit = commitment_loss(out["heads"], jax.lax.stop_gradient(
+        out["onehots"]), params["codebooks"]) if commit_coef else 0.0
+
+    loss = l1 + alpha * l2 + beta * cv + commit_coef * commit
+    aux = {
+        "state": out["state"],
+        "metrics": {
+            "loss": loss,
+            "recon": l1,
+            "triplet": l2,
+            "cv2": cv,
+            # codebook usage entropy: how many codes are effectively in use.
+            "usage_entropy": _usage_entropy(out["log_probs"]),
+        },
+    }
+    return loss, aux
+
+
+def _usage_entropy(log_probs) -> jax.Array:
+    p_avg = jnp.mean(jnp.exp(log_probs), axis=0)  # (M, K)
+    p_avg = p_avg / (jnp.sum(p_avg, axis=-1, keepdims=True) + 1e-10)
+    ent = -jnp.sum(p_avg * jnp.log(p_avg + 1e-10), axis=-1)  # (M,)
+    return jnp.mean(ent)

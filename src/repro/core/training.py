@@ -1,0 +1,182 @@
+"""UNQ training loop (paper §3.4).
+
+Minibatch SGD on L = L1 + alpha*L2 + beta*CV^2 with QHAdam and a One-Cycle
+learning-rate schedule; beta is annealed linearly 1.0 -> 0.05; triplet
+positives/negatives are resampled from the exact neighbor lists at the
+offset of every epoch, exactly as in the paper.
+
+The step function is a single jitted pure function of
+(params, state, opt_state, batch, step) so it drops into pjit unchanged for
+data-parallel training (see repro/launch/train_unq.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import losses, unq
+from repro.data import descriptors as ddata
+from repro import optim
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    epochs: int = 10
+    batch_size: int = 256
+    lr: float = 1e-3
+    # QHAdam per the paper; b1=0.995 is Ma & Yarats' recommendation for
+    # long schedules — at the few-thousand-step budgets this container can
+    # afford, that 200-step momentum horizon slows convergence ~3x
+    # (measured), so the default here is 0.9 (still QHAdam).
+    qh_b1: float = 0.9
+    alpha: float = 0.01          # triplet weight (paper grid {0.1,0.01,0.001})
+    beta_start: float = 1.0      # CV^2 weight anneal (paper: 1.0 -> 0.05)
+    beta_end: float = 0.05
+    triplet_margin: float = 1.0
+    commit_coef: float = 0.0     # optional VQ-VAE auxiliary (off: measured
+                                 # to slow the paper objective down)
+    hard_gumbel: bool = True     # ablation: "UNQ w/o hard"
+    gumbel_noise: bool = True    # ablation: "UNQ w/o Gumbel"
+    use_triplet: bool = True     # ablation: "No triplet loss"
+    use_regularizer: bool = True # ablation: "No regularizer"
+    # data-dependent codebook init: k-means over the initial encoder-head
+    # outputs. OFF by default: measured on the synthetic benchmark it traps
+    # the learned d2 space in a worse basin than the paper's random init
+    # once the optimizer horizon is fixed (see EXPERIMENTS.md §Repro,
+    # refuted-hypothesis log). Kept for experimentation.
+    kmeans_init: bool = False
+    seed: int = 0
+    log_every: int = 50
+
+
+def kmeans_init_codebooks(key, params, state, cfg: unq.UNQConfig, train_x,
+                          sample: int = 8192, iters: int = 10):
+    """Initialize each codebook with k-means over the initial encoder-head
+    outputs (one warm-up pass also seeds the BatchNorm running stats).
+
+    Codebook m is supported on its own d_c/M-dim slice of the code space,
+    so the decoder input (the SUM of selected codewords, paper §3.2) is a
+    concatenation at init — without this, all M codebooks start in the
+    same region of the shared head space and their sum destructively
+    interferes (measured: codes carry PQ-level information under a linear
+    probe while the sum-decoder path stays at the variance floor).
+    Training is free to rotate away from the block structure afterwards.
+    """
+    from repro.core.baselines import kmeans
+
+    x = jnp.asarray(train_x[:sample])
+    heads, enc_state = unq.encode_heads(params, state, cfg, x, train=True)
+    keys = jax.random.split(key, cfg.num_codebooks)
+    m_books = []
+    if cfg.code_dim % cfg.num_codebooks == 0:
+        d_sub = cfg.code_dim // cfg.num_codebooks
+        for m in range(cfg.num_codebooks):
+            sl = slice(m * d_sub, (m + 1) * d_sub)
+            cent = kmeans(keys[m], heads[:, m, sl], cfg.codebook_size, iters)
+            full = jnp.zeros((cfg.codebook_size, cfg.code_dim), cent.dtype)
+            m_books.append(full.at[:, sl].set(cent))
+    else:  # fall back to full-space k-means
+        for m in range(cfg.num_codebooks):
+            m_books.append(kmeans(keys[m], heads[:, m, :],
+                                  cfg.codebook_size, iters))
+    books = jnp.stack(m_books)
+
+    # Temperature calibration: k-means codewords produce dot products with
+    # std ~50-100, which saturates the softmax and kills the straight-
+    # through gradient (measured: encoder stops learning entirely). Set
+    # tau_m so the effective logits have std ~TARGET — sharp enough for
+    # stable assignments, soft enough for gradient flow; tau stays a
+    # learned parameter from here (paper Eq. 2).
+    TARGET = 4.0
+    dots = jnp.einsum("bmd,mkd->bmk", heads, books)
+    dot_std = jnp.std(dots, axis=(0, 2))                     # (M,)
+    log_tau = jnp.log(jnp.maximum(dot_std / TARGET, 1e-3)).astype(cfg.dtype)
+    return ({**params, "codebooks": books.astype(cfg.dtype),
+             "log_tau": log_tau},
+            {**state, "encoder": enc_state})
+
+
+def make_train_step(cfg: unq.UNQConfig, tcfg: TrainConfig, total_steps: int):
+    lr_fn = optim.one_cycle(tcfg.lr, total_steps)
+    beta_fn = optim.linear_anneal(tcfg.beta_start, tcfg.beta_end, total_steps)
+    opt = optim.qhadam(b1=tcfg.qh_b1)
+
+    @jax.jit
+    def train_step(key, params, state, opt_state, batch, step):
+        beta = beta_fn(step) if tcfg.use_regularizer else 0.0
+
+        def loss_fn(p):
+            return losses.unq_loss(
+                key, p, state, cfg, batch,
+                alpha=tcfg.alpha, beta=beta, margin=tcfg.triplet_margin,
+                hard=tcfg.hard_gumbel, use_triplet=tcfg.use_triplet,
+                gumbel_noise=tcfg.gumbel_noise,
+                commit_coef=tcfg.commit_coef)
+
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt_state = opt.apply(params, grads, opt_state, lr_fn(step))
+        return params, aux["state"], opt_state, aux["metrics"]
+
+    return train_step, opt
+
+
+def train_unq(dataset: ddata.DescriptorDataset, cfg: unq.UNQConfig,
+              tcfg: TrainConfig, *,
+              callback: Callable[[int, dict], None] | None = None):
+    """Train UNQ on a descriptor dataset. Returns (params, state, history)."""
+    rng = np.random.default_rng(tcfg.seed)
+    key = jax.random.PRNGKey(tcfg.seed)
+    key, init_key = jax.random.split(key)
+    params, state = unq.init(init_key, cfg)
+    if tcfg.kmeans_init:
+        key, km_key = jax.random.split(key)
+        params, state = kmeans_init_codebooks(
+            km_key, params, state, cfg, dataset.train)
+
+    n = dataset.train.shape[0]
+    steps_per_epoch = max(n // tcfg.batch_size, 1)
+    total_steps = steps_per_epoch * tcfg.epochs
+    train_step, opt = make_train_step(cfg, tcfg, total_steps)
+    opt_state = opt.init(params)
+
+    # Exact neighbor lists for triplet sampling (paper: once, re-sampled
+    # per-epoch). Top-200 per training point.
+    neighbors = None
+    if tcfg.use_triplet and tcfg.alpha > 0:
+        neighbors = ddata.epoch_neighbors(dataset.train, k=201)
+
+    train_x = jnp.asarray(dataset.train)
+    history: list[dict] = []
+    step = 0
+    for epoch in range(tcfg.epochs):
+        if neighbors is not None:
+            pos_idx, neg_idx = ddata.sample_triplets(rng, dataset.train,
+                                                     neighbors)
+        perm = rng.permutation(n)
+        for it in range(steps_per_epoch):
+            sel = perm[it * tcfg.batch_size:(it + 1) * tcfg.batch_size]
+            batch = {"x": train_x[sel]}
+            if neighbors is not None:
+                batch["pos"] = train_x[pos_idx[sel]]
+                batch["neg"] = train_x[neg_idx[sel]]
+            else:
+                batch["pos"] = batch["x"]
+                batch["neg"] = batch["x"]
+            key, step_key = jax.random.split(key)
+            params, state, opt_state, metrics = train_step(
+                step_key, params, state, opt_state, batch,
+                jnp.asarray(step, jnp.int32))
+            if step % tcfg.log_every == 0:
+                m = {k: float(v) for k, v in metrics.items()}
+                m.update(epoch=epoch, step=step, time=time.time())
+                history.append(m)
+                if callback:
+                    callback(step, m)
+            step += 1
+    return params, state, history

@@ -1,0 +1,16 @@
+from repro.data.descriptors import (
+    DescriptorDataset,
+    make_synthetic_dataset,
+    exact_knn,
+    sample_triplets,
+)
+from repro.data.tokens import TokenStream, masked_frame_batch
+
+__all__ = [
+    "DescriptorDataset",
+    "make_synthetic_dataset",
+    "exact_knn",
+    "sample_triplets",
+    "TokenStream",
+    "masked_frame_batch",
+]

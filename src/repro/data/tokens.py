@@ -1,0 +1,57 @@
+"""Synthetic token / frame pipelines for the LM architecture zoo.
+
+Deterministic, shardable streams:
+  * ``TokenStream`` — zipfian token-id batches for decoder LMs (each
+    data-parallel rank draws a disjoint substream; state = (step, rank) so
+    the pipeline is exactly resumable from a checkpoint).
+  * ``masked_frame_batch`` — HuBERT-style masked-prediction batches:
+    precomputed frame embeddings (the conv frontend is a stub per the
+    assignment) + k-means-style cluster targets + a mask.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class TokenStream:
+    vocab_size: int
+    seq_len: int
+    batch_size: int          # per-rank batch
+    rank: int = 0
+    world: int = 1
+    seed: int = 0
+    step: int = 0            # checkpointable pipeline position
+
+    def next_batch(self) -> dict:
+        """Returns {"tokens": (B, S+1) int32}; caller shifts for inputs/labels."""
+        rng = np.random.default_rng(
+            (self.seed, self.rank, self.step))
+        # Zipf-ish marginal with short-range repetition structure so the
+        # loss is learnable (pure uniform tokens give a flat loss surface).
+        base = rng.zipf(1.3, size=(self.batch_size, self.seq_len + 1))
+        tokens = (base % self.vocab_size).astype(np.int32)
+        rep = rng.random((self.batch_size, self.seq_len + 1)) < 0.3
+        shifted = np.roll(tokens, 1, axis=1)
+        tokens = np.where(rep, shifted, tokens)
+        self.step += 1
+        return {"tokens": tokens}
+
+    def state_dict(self) -> dict:
+        return {"step": self.step, "rank": self.rank, "seed": self.seed}
+
+    def load_state_dict(self, s: dict) -> None:
+        self.step = int(s["step"])
+        self.seed = int(s["seed"])
+
+
+def masked_frame_batch(seed: int, batch: int, frames: int, dim: int,
+                       num_targets: int, mask_prob: float = 0.2) -> dict:
+    """HuBERT-style batch: frame embeddings + cluster targets + span mask."""
+    rng = np.random.default_rng(seed)
+    emb = rng.normal(0, 1, (batch, frames, dim)).astype(np.float32)
+    targets = rng.integers(0, num_targets, (batch, frames)).astype(np.int32)
+    mask = (rng.random((batch, frames)) < mask_prob)
+    return {"frames": emb, "targets": targets, "mask": mask}

@@ -1,0 +1,78 @@
+"""Public entry points for the kernels package.
+
+Each op dispatches between:
+  impl="pallas"  — the Pallas TPU kernel (``interpret=True`` automatically on
+                   CPU so the kernel body is validated in this container);
+  impl="xla"     — the pure-jnp oracle from ``ref.py`` (always available,
+                   and what the distributed paths use inside pjit);
+  impl="onehot"  — XLA one-hot matmul formulation (the MXU-shaped algorithm
+                   without Pallas, useful to A/B the adaptation itself).
+
+All wrappers handle padding to kernel block multiples.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.adc_scan import adc_scan_pallas, DEFAULT_BLOCK_N
+from repro.kernels.unq_encode import unq_encode_pallas, DEFAULT_BLOCK_B
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, multiple: int, axis: int = 0):
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+def adc_scan(codes: jax.Array, lut: jax.Array, *, impl: str = "pallas",
+             block_n: int = DEFAULT_BLOCK_N) -> jax.Array:
+    """scores[n] = sum_m lut[m, codes[n, m]].  codes (N, M), lut (M, K) -> (N,)."""
+    if impl == "xla":
+        return ref.adc_scan_ref(codes, lut)
+    if impl == "onehot":
+        onehot = jax.nn.one_hot(codes.astype(jnp.int32), lut.shape[1],
+                                dtype=lut.dtype)          # (N, M, K)
+        return jnp.einsum("nmk,mk->n", onehot, lut)
+    if impl == "pallas":
+        padded, n = _pad_to(codes, block_n, axis=0)
+        out = adc_scan_pallas(padded, lut.astype(jnp.float32),
+                              block_n=block_n, interpret=not _on_tpu())
+        return out[:n]
+    raise ValueError(f"unknown impl: {impl!r}")
+
+
+def unq_encode(heads: jax.Array, codebooks: jax.Array, *, impl: str = "pallas",
+               block_b: int = DEFAULT_BLOCK_B) -> jax.Array:
+    """codes[b, m] = argmax_k <heads[b,m], codebooks[m,k]>.
+
+    heads (B, M, d_c), codebooks (M, K, d_c) -> (B, M) int32.
+    """
+    if impl == "xla":
+        return ref.unq_encode_ref(heads, codebooks)
+    if impl == "pallas":
+        padded, b = _pad_to(heads, block_b, axis=0)
+        out = unq_encode_pallas(padded, codebooks, block_b=block_b,
+                                interpret=not _on_tpu())
+        return out[:b]
+    raise ValueError(f"unknown impl: {impl!r}")
+
+
+def kv_adc_attention(q, k_codes, v_codes, k_books, v_books, length=None, *,
+                     impl: str = "xla"):
+    """Compressed-KV decode attention (see ref.kv_adc_attention_ref)."""
+    if impl == "xla":
+        return ref.kv_adc_attention_ref(q, k_codes, v_codes, k_books, v_books,
+                                        length)
+    raise ValueError(f"unknown impl: {impl!r}")

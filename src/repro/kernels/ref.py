@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (tests sweep
+shapes/dtypes and assert_allclose kernel-vs-oracle). They are also the
+fallback implementation used on backends without Pallas support.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adc_scan_ref(codes: jax.Array, lut: jax.Array) -> jax.Array:
+    """Compressed-domain distance scan (paper Eq. 8, the ADC hot loop).
+
+    codes: (N, M) integer codes (uint8/int32), lut: (M, K) float table with
+    ``lut[m, k] = -<net(q)_m, c_mk>`` (or any per-codebook score table).
+    Returns scores (N,): ``scores[n] = sum_m lut[m, codes[n, m]]``.
+    """
+    m_idx = jnp.arange(lut.shape[0])[None, :]            # (1, M)
+    return jnp.sum(lut[m_idx, codes.astype(jnp.int32)], axis=1)
+
+
+def unq_encode_ref(heads: jax.Array, codebooks: jax.Array) -> jax.Array:
+    """Codeword assignment (paper Eq. 4).
+
+    heads: (B, M, d_c) = net(x); codebooks: (M, K, d_c).
+    Returns codes (B, M) int32: argmax_k <heads[b, m], codebooks[m, k]>.
+    """
+    scores = jnp.einsum("bmd,mkd->bmk", heads, codebooks)
+    return jnp.argmax(scores, axis=-1).astype(jnp.int32)
+
+
+def kv_adc_attention_ref(q: jax.Array, k_codes: jax.Array, v_codes: jax.Array,
+                         k_books: jax.Array, v_books: jax.Array,
+                         length: jax.Array | int | None = None) -> jax.Array:
+    """Beyond-paper: single-step decode attention over an MCQ-compressed KV
+    cache, entirely in the compressed domain.
+
+    The attention logit against a compressed key IS the paper's d2 scan:
+        q . k_s  ~=  sum_m <q_m, cK_{m, i_{s,m}}>
+    and the value aggregation folds the softmax weights into a per-codeword
+    histogram before a single (M*K, d) matmul:
+        sum_s w_s v_s ~= sum_m sum_k (sum_{s: code=k} w_s) cV_{m,k}
+    so the per-token work is O(M) adds instead of O(d) MACs.
+
+    q:        (H, d)         query for one new token (per kv-head group or head)
+    k_codes:  (S, H, M) int  compressed keys
+    v_codes:  (S, H, M) int  compressed values
+    k_books:  (H, M, K, d/M) key codebooks (PQ-style subspace split)
+    v_books:  (H, M, K, d/M) value codebooks
+    length:   optional valid prefix length (<= S) for masking.
+    Returns attention output (H, d).
+    """
+    H, d = q.shape
+    S, _, M = k_codes.shape
+    K = k_books.shape[2]
+    d_sub = d // M
+    q_sub = q.reshape(H, M, d_sub)
+
+    # LUT build: one pass, O(H*M*K*d_sub) — independent of S.
+    lut = jnp.einsum("hms,hmks->hmk", q_sub, k_books)            # (H, M, K)
+
+    # ADC scan over the cache: O(S*H*M) lookups.
+    m_idx = jnp.arange(M)[None, None, :]
+    h_idx = jnp.arange(H)[None, :, None]
+    logits = jnp.sum(lut[h_idx, m_idx, k_codes.astype(jnp.int32)], axis=-1)  # (S, H)
+
+    if length is not None:
+        mask = jnp.arange(S)[:, None] < length
+        logits = jnp.where(mask, logits, -jnp.inf)
+
+    w = jax.nn.softmax(logits / jnp.sqrt(d).astype(logits.dtype), axis=0)  # (S, H)
+
+    # Compressed-domain value aggregation: scatter weights into (H, M, K).
+    onehot = jax.nn.one_hot(v_codes.astype(jnp.int32), K, dtype=w.dtype)  # (S,H,M,K)
+    hist = jnp.einsum("sh,shmk->hmk", w, onehot)                           # (H, M, K)
+    out_sub = jnp.einsum("hmk,hmks->hms", hist, v_books)                   # (H, M, d_sub)
+    return out_sub.reshape(H, d)

@@ -1,0 +1,293 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell against the production mesh and record the compiled artifact's
+memory/cost/collective statistics.
+
+The two lines above MUST stay first: jax locks the device count at first
+backend init, and the production mesh needs 512 placeholder host devices.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k \
+      [--multi-pod] [--out artifacts/dryrun]
+
+Per cell this writes artifacts/dryrun/<arch>__<shape>__<mesh>.json with
+bytes-per-device, HLO flops/bytes, and the per-collective byte totals the
+roofline analysis (repro/analysis/roofline.py) consumes.
+"""
+import argparse
+import dataclasses
+import math
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry
+from repro.models.config import ModelConfig
+from repro.parallel import sharding as shard_lib
+from repro.parallel import steps as steps_lib
+from repro.parallel import hints
+from repro import optim as optim_lib
+from repro.analysis import hlo as hlo_lib
+from repro.utils.pytree import param_count
+
+
+# gradient-accumulation factors per arch for train_4k, sized so the saved
+# per-layer activation stacks fit 16 GB/chip (derivation + before/after in
+# EXPERIMENTS.md §Perf). global_batch 256 stays divisible by mb * data size.
+_MICROBATCHES = {
+    "yi-6b": 8,
+    "minitron-8b": 8,
+    "mistral-large-123b": 16,
+    "gemma3-12b": 8,
+    "deepseek-moe-16b": 8,
+    "moonshot-v1-16b-a3b": 16,
+    "hubert-xlarge": 4,
+    "chameleon-34b": 16,
+    "rwkv6-1.6b": 8,
+    "recurrentgemma-2b": 8,
+}
+
+
+def _rules(multi_pod: bool, *, batch_shardable: bool = True,
+           serving: bool = False):
+    rules = dict(shard_lib.RULES_MULTI_POD if multi_pod
+                 else shard_lib.RULES_SINGLE_POD)
+    if serving:
+        # inference keeps weights resident in the TP layout: FSDP-sharding
+        # the embed axis would re-gather every weight every decoded token
+        # (measured 7e8 B/token on gemma3-kvq long_500k — §Perf iter. 7).
+        rules["embed"] = None
+        rules["seq_act"] = None
+    if not batch_shardable:
+        # e.g. long_500k: global_batch=1 -> keep batch replicated and give
+        # the cache sequence axis the whole mesh instead.
+        rules["batch"] = None
+        rules["kv_seq"] = (("pod", "data", "model") if multi_pod
+                           else ("data", "model"))
+    return rules
+
+
+def _named(mesh, tree_pspecs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# best-known beyond-baseline settings per arch (EXPERIMENTS.md §Perf)
+_OPTIMIZED = {
+    "rwkv6-1.6b": dict(rwkv_chunk=256),
+    "deepseek-moe-16b": dict(moe_ep=True),
+    "moonshot-v1-16b-a3b": dict(moe_ep=True),
+}
+_OPTIMIZED_MB = {"rwkv6-1.6b": 1, "mistral-large-123b": 8, "yi-6b": 2}
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               cfg: ModelConfig | None = None, donate: bool = True,
+               optimized: bool = False):
+    """Lower + compile one cell. Returns (compiled, lowered, info dict)."""
+    if cfg is None:
+        if arch == "gemma3-12b-kvq":
+            cfg = configs.get("gemma3-12b", variant="FULL_KVQ")
+        else:
+            cfg = configs.get(arch)
+    if optimized and arch.replace("-kvq", "") in _OPTIMIZED:
+        cfg = cfg.with_(**_OPTIMIZED[arch.replace("-kvq", "")])
+    shape = configs.SHAPES[shape_name]
+    if shape.step != "train":
+        # serving reality: inference weights are bf16 (halves weight HBM)
+        cfg = cfg.with_(param_dtype=jnp.bfloat16)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+
+    batch_shardable = shape.global_batch % (
+        mesh.shape["data"] * (mesh.shape.get("pod", 1))) == 0
+    # TP-resident weights for SINGLE-STREAM transformer decode (long_500k):
+    # kills per-token FSDP re-gathers (109x collective win on gemma3-kvq).
+    # Batched decode_32k keeps FSDP-sharded weights — measured better
+    # there (weight reads amortize over the batch, and replication
+    # regresses per-device temp memory); same for rwkv6/griffin decode,
+    # where GSPMD's partial-contraction + tiny-activation all-reduce is
+    # optimal (EXPERIMENTS.md §Perf iteration 7).
+    rules = _rules(multi_pod, batch_shardable=batch_shardable,
+                   serving=(shape.step == "decode"
+                            and not batch_shardable
+                            and cfg.family == "transformer"))
+
+    key = jax.random.PRNGKey(0)
+    params_struct = jax.eval_shape(lambda: registry.init(key, cfg))
+    params_ps = shard_lib.params_pspecs_shaped(
+        registry.logical_axes(cfg), params_struct, rules, mesh)
+    batch_struct = configs.input_specs(cfg, shape)
+    batch_ps = shard_lib.batch_pspec(batch_struct, rules)
+
+    t0 = time.time()
+    with mesh, hints.activation_sharding(rules, mesh):
+        if shape.step == "train":
+            opt = optim_lib.adamw()
+            mb = _MICROBATCHES.get(arch.replace("-kvq", ""), 1)
+            if optimized:
+                mb = _OPTIMIZED_MB.get(arch.replace("-kvq", ""), mb)
+            train_step, opt = steps_lib.make_train_step(
+                cfg, opt=opt, microbatches=mb)
+            opt_struct = jax.eval_shape(opt.init, params_struct)
+            # optimizer state shards exactly like the params (m/v mirror
+            # the param tree; scalars replicated)
+            opt_ps = {
+                "m": params_ps, "v": params_ps, "count": P(),
+            }
+            step_fn = jax.jit(
+                train_step,
+                in_shardings=(_named(mesh, params_ps), _named(mesh, opt_ps),
+                              _named(mesh, batch_ps), None),
+                donate_argnums=(0, 1) if donate else (),
+            )
+            lowered = step_fn.lower(params_struct, opt_struct, batch_struct,
+                                    jax.ShapeDtypeStruct((), jnp.int32))
+        elif shape.step == "prefill":
+            prefill_step = steps_lib.make_prefill_step(cfg)
+            step_fn = jax.jit(
+                prefill_step,
+                in_shardings=(_named(mesh, params_ps),
+                              _named(mesh, batch_ps)),
+            )
+            lowered = step_fn.lower(params_struct, batch_struct)
+        else:  # decode
+            decode_step = steps_lib.make_decode_step(cfg)
+            cache_struct = jax.eval_shape(
+                lambda: registry.init_cache(cfg, shape.global_batch,
+                                            shape.seq_len))
+            cache_ps = shard_lib.params_pspecs_shaped(
+                registry.cache_logical_axes(cfg, cache_struct),
+                cache_struct, rules, mesh)
+            step_fn = jax.jit(
+                decode_step,
+                in_shardings=(_named(mesh, params_ps),
+                              _named(mesh, cache_ps),
+                              _named(mesh, batch_ps["tokens"]), None),
+                donate_argnums=(1,) if donate else (),
+            )
+            lowered = step_fn.lower(
+                params_struct, cache_struct, batch_struct["tokens"],
+                jax.ShapeDtypeStruct((), jnp.int32))
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    executed = hlo_lib.executed_cost(compiled.as_text())
+    info = {
+        "arch": arch,
+        "config": cfg.name,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": n_dev,
+        "step": shape.step,
+        "param_count": sum(
+            math.prod(x.shape) for x in jax.tree.leaves(params_struct)),
+        "microbatches": (_MICROBATCHES.get(arch.replace("-kvq", ""), 1)
+                         if shape.step == "train" else None),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "generated_code_bytes": int(
+                getattr(mem, "generated_code_size_in_bytes", 0)),
+        },
+        # raw XLA cost_analysis (counts each while body ONCE — kept for
+        # reference); "executed" is the scan-scaled walk from analysis/hlo.py
+        "cost": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "transcendentals": float(cost.get("transcendentals", 0.0)),
+        },
+        "executed": executed,
+        "collectives": {
+            "per_kind_bytes": executed["collectives"],
+            "counts": executed["collective_counts"],
+            "total_bytes": executed["collective_bytes"],
+        },
+    }
+    return compiled, lowered, info
+
+
+def run_cell(arch: str, shape_name: str, out_dir: pathlib.Path, *,
+             multi_pod: bool, optimized: bool = False) -> dict:
+    status = (configs.cell_status(arch, shape_name)
+              if arch in configs.ARCH_IDS else "run")
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    tag = f"{arch}__{shape_name}__{mesh_tag}"
+    if status != "run":
+        info = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                "status": status}
+        (out_dir / f"{tag}.json").write_text(json.dumps(info, indent=2))
+        print(f"[dryrun] {tag}: {status}")
+        return info
+    try:
+        compiled, lowered, info = lower_cell(arch, shape_name,
+                                             multi_pod=multi_pod,
+                                             optimized=optimized)
+        info["status"] = "ok"
+        print(f"[dryrun] {tag}: ok  "
+              f"flops={info['executed']['flops']:.3e} "
+              f"coll={info['executed']['collective_bytes']:.3e}B "
+              f"compile={info['compile_s']}s")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        info = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                "status": f"error: {type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:]}
+        print(f"[dryrun] {tag}: FAILED {type(e).__name__}: {e}")
+    (out_dir / f"{tag}.json").write_text(json.dumps(info, indent=2))
+    return info
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply best-known per-arch perf settings (§Perf)")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    if args.all:
+        cells = [(a, s) for (a, s, _) in configs.all_cells()]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    results = []
+    for multi_pod in meshes:
+        for arch, shape in cells:
+            results.append(run_cell(arch, shape, out_dir,
+                                    multi_pod=multi_pod,
+                                    optimized=args.optimized))
+    ok = sum(1 for r in results if r.get("status") == "ok")
+    skip = sum(1 for r in results if str(r.get("status", "")).startswith("skip"))
+    fail = len(results) - ok - skip
+    print(f"[dryrun] done: {ok} ok, {skip} skipped, {fail} failed "
+          f"of {len(results)} cells")
+    return 1 if fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

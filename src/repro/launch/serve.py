@@ -1,0 +1,83 @@
+"""Serving launcher: batched prefill + decode for any decoder arch.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
+        --batch 4 --prompt-len 32 --gen 16 [--kvq]
+
+Runs prefill on the prompt batch, then step-wise decode with greedy
+sampling. With --kvq the global-attention KV cache is MCQ-compressed and
+scored in the compressed domain (the paper's technique; transformer
+family only).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import registry
+from repro.parallel import steps as steps_lib
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--kvq", action="store_true")
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch, smoke=args.smoke)
+    if cfg.kind == "encoder":
+        raise SystemExit(f"{args.arch} is encoder-only; no decode serving")
+    if args.kvq:
+        cfg = cfg.with_(kvq=True, kvq_books=4, kvq_book_size=16)
+
+    key = jax.random.PRNGKey(0)
+    params = registry.init(key, cfg)
+    max_len = args.prompt_len + args.gen
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
+        jnp.int32)
+
+    decode_step = jax.jit(steps_lib.make_decode_step(cfg))
+
+    # prefill via decode steps when caches must match decode layout exactly
+    # (works for every family); families also expose bulk prefill().
+    caches = registry.init_cache(cfg, args.batch, max_len,
+                                 dtype=jnp.float32)
+    t0 = time.time()
+    logits = None
+    for pos in range(args.prompt_len):
+        logits, caches = decode_step(params, caches, prompts[:, pos],
+                                     jnp.asarray(pos, jnp.int32))
+    t_prefill = time.time() - t0
+
+    generated = []
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    t0 = time.time()
+    for i in range(args.gen):
+        generated.append(tok)
+        logits, caches = decode_step(
+            params, caches, tok,
+            jnp.asarray(args.prompt_len + i, jnp.int32))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    jax.block_until_ready(logits)
+    t_gen = time.time() - t0
+
+    out = jnp.stack(generated, axis=1)
+    print(f"[serve] arch={cfg.name} kvq={cfg.kvq} batch={args.batch}")
+    print(f"[serve] prefill {args.prompt_len} tok: {t_prefill:.2f}s; "
+          f"decode {args.gen} tok: {t_gen:.2f}s "
+          f"({args.gen * args.batch / max(t_gen, 1e-9):.1f} tok/s)")
+    print(f"[serve] sample generation (batch 0): {out[0].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

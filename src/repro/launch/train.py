@@ -1,0 +1,117 @@
+"""LM training launcher: ``--arch <id>`` selects an assigned architecture.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \
+        --steps 50 [--grad-compress int8] [--ckpt-dir /tmp/ckpt]
+
+Full configs train on the production mesh (requires real hardware; on this
+container use --smoke, which runs the same code path on the reduced
+config over whatever local devices exist, data-parallel via pjit +
+elastic mesh). The loop is the fault-tolerant Trainer (auto-resume,
+atomic checkpoints, straggler watchdog).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs, optim
+from repro.data.tokens import TokenStream
+from repro.launch.mesh import make_elastic_mesh, make_production_mesh
+from repro.models import registry
+from repro.parallel import hints, sharding as shard_lib
+from repro.parallel import steps as steps_lib
+from repro.runtime import Trainer, TrainerConfig
+from repro.utils.pytree import param_count
+
+
+class _FrameStream:
+    """Masked-frame batches for encoder archs (hubert)."""
+
+    def __init__(self, cfg, batch, frames, seed=0):
+        self.cfg, self.batch, self.frames = cfg, batch, frames
+        self.step = 0
+        self.seed = seed
+
+    def next_batch(self):
+        from repro.data.tokens import masked_frame_batch
+        b = masked_frame_batch((self.seed, self.step), self.batch,
+                               self.frames, self.cfg.frame_dim,
+                               self.cfg.vocab_size)
+        self.step += 1
+        return b
+
+    def state_dict(self):
+        return {"step": self.step, "seed": self.seed}
+
+    def load_state_dict(self, s):
+        self.step = int(s["step"])
+
+
+def build(arch: str, *, smoke: bool, batch: int, seq: int,
+          grad_compress: str | None, lr: float, total_steps: int):
+    cfg = configs.get(arch, smoke=smoke)
+    mesh = make_elastic_mesh() if smoke else make_production_mesh()
+    rules = dict(shard_lib.RULES_SINGLE_POD)
+
+    params_ps = shard_lib.params_pspecs(registry.logical_axes(cfg), rules)
+    opt = optim.adamw(weight_decay=0.1)
+    lr_fn = optim.linear_warmup_cosine(lr, total_steps,
+                                       warmup=max(total_steps // 20, 1))
+    train_step, opt = steps_lib.make_train_step(
+        cfg, opt=opt, lr_fn=lr_fn, grad_compress=grad_compress)
+
+    with mesh, hints.activation_sharding(rules, mesh):
+        key = jax.random.PRNGKey(0)
+        params = jax.jit(
+            lambda: registry.init(key, cfg),
+            out_shardings=jax.tree.map(
+                lambda s: NamedSharding(mesh, s), params_ps,
+                is_leaf=lambda x: isinstance(x, P)))()
+        opt_state = jax.jit(opt.init)(params)
+        step_fn = jax.jit(train_step, donate_argnums=(0, 1))
+
+    if cfg.input_mode == "frames":
+        stream = _FrameStream(cfg, batch, seq)
+    else:
+        stream = TokenStream(vocab_size=cfg.vocab_size, seq_len=seq,
+                             batch_size=batch)
+    return cfg, mesh, rules, params, opt_state, step_fn, stream
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-compress", default=None, choices=[None, "int8"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--metrics", default=None)
+    args = ap.parse_args()
+
+    cfg, mesh, rules, params, opt_state, step_fn, stream = build(
+        args.arch, smoke=args.smoke, batch=args.batch, seq=args.seq,
+        grad_compress=args.grad_compress, lr=args.lr,
+        total_steps=args.steps)
+    print(f"[train] arch={cfg.name} params={param_count(params):,} "
+          f"devices={len(jax.devices())} mesh={dict(mesh.shape)}")
+
+    tcfg = TrainerConfig(total_steps=args.steps,
+                         checkpoint_every=args.ckpt_every,
+                         checkpoint_dir=args.ckpt_dir)
+    with mesh, hints.activation_sharding(rules, mesh):
+        trainer = Trainer(tcfg, step_fn, params, opt_state, stream,
+                          metrics_path=args.metrics)
+        final = trainer.run()
+    print(f"[train] done at step {trainer.step}: "
+          + " ".join(f"{k}={v:.4f}" for k, v in final.items()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Model zoo: the 10 assigned architectures as pure-JAX scanned-layer models.
+
+Families:
+  * transformer — dense decoder LMs (yi-6b, minitron-8b, mistral-large-123b,
+    gemma3-12b incl. 5:1 local:global, chameleon-34b), MoE decoder LMs
+    (deepseek-moe-16b, moonshot-v1-16b-a3b) and the encoder-only
+    hubert-xlarge (bidirectional + masked-frame objective).
+  * rwkv6 — attention-free SSM (Finch, data-dependent decay).
+  * griffin — RecurrentGemma hybrid (RG-LRU + local attention, 1:2).
+
+Every family exposes the same functional surface:
+  init(key, cfg) -> params                    (or jax.eval_shape-able)
+  forward(params, cfg, batch) -> logits
+  init_cache(cfg, batch, max_len) -> cache    (decoder families)
+  decode_step(params, cfg, cache, tok, pos) -> (logits, cache)
+  logical_axes(cfg) -> pytree of logical-axis tuples (for sharding rules)
+"""
+from repro.models.config import ModelConfig
+
+__all__ = ["ModelConfig"]

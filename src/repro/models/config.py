@@ -1,0 +1,81 @@
+"""Unified architecture config consumed by every model family."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "transformer"   # transformer | rwkv6 | griffin
+    kind: str = "decoder"         # decoder | encoder
+
+    # --- common dims ---
+    num_layers: int = 4
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4         # GQA; == num_heads -> MHA, 1 -> MQA
+    head_dim: int | None = None   # default d_model // num_heads
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    act: str = "silu"             # silu (SwiGLU) | gelu (GeGLU)
+    norm_eps: float = 1e-6
+    rope_theta: float = 1e4
+    qk_norm: bool = False         # chameleon-style QK layernorm
+    tie_embeddings: bool = False
+    use_post_norm: bool = False   # gemma-style post-block norms
+    embed_scale: bool = False     # gemma-style sqrt(d) embedding scaling
+
+    # --- attention pattern ---
+    window: int | None = None          # sliding window for "local" layers
+    local_global_ratio: int = 0        # gemma3: N local layers per 1 global
+    attn_chunk: int = 512              # kv-chunk for flash-chunked attention
+
+    # --- MoE ---
+    moe: bool = False
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    min_capacity: int = 4          # floor so tiny (decode) batches never drop
+    router_balance: str = "cv2"        # cv2 (paper-lineage) | switch
+    moe_ep: bool = False               # explicit shard_map expert-parallel
+                                       # dispatch (perf path; needs a mesh)
+    first_dense: int = 1               # leading dense layers (deepseek-moe)
+    moe_d_ff: int = 0                  # routed-expert hidden (fine-grained)
+
+    # --- recurrent (rwkv6 / griffin) ---
+    rwkv_chunk: int = 0                # 0 = sequential wkv scan (paper-
+                                       # faithful baseline); >0 = chunked
+                                       # parallel formulation (perf path)
+    rnn_width: int = 0                 # RG-LRU width (griffin)
+    conv_width: int = 4                # griffin temporal conv
+    attn_every: int = 3                # griffin: 1 attention per this many
+
+    # --- audio/vlm frontend stubs ---
+    input_mode: str = "tokens"         # tokens | frames (hubert stub)
+    frame_dim: int = 0                 # stub frame embedding dim
+
+    # --- numerics / memory ---
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    remat: str = "layer"               # none | layer (checkpoint each block)
+
+    # --- paper technique integration ---
+    kvq: bool = False                  # UNQ/MCQ-compressed KV cache (decode)
+    kvq_books: int = 8                 # M per head-vector
+    kvq_book_size: int = 256           # K
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.num_heads
+
+    @property
+    def q_rep(self) -> int:
+        return self.num_heads // self.num_kv_heads

@@ -1,0 +1,381 @@
+"""Griffin / RecurrentGemma (arXiv:2402.19427) — hybrid RG-LRU + local
+attention, 1 attention layer per 2 recurrent layers.
+
+Layer pattern for 26 layers: 8 scanned groups of (recurrent, recurrent,
+local-attention) + 2 trailing recurrent layers. The RG-LRU recurrence
+
+    a_t = exp(-c * softplus(Lambda) * sigmoid(W_a x_t + b_a))
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+is elementwise, so training uses ``lax.associative_scan`` (log-depth
+parallel scan) rather than a sequential loop. The temporal block is
+input-proj -> causal depthwise conv (width 4) -> RG-LRU -> gated output.
+
+Decode state is O(1) per recurrent layer (LRU state + conv tail) plus a
+bounded ring-buffer KV cache (window 2048) per attention layer — which is
+why this arch runs the long_500k cell natively.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import layers
+from repro.parallel import hints
+
+LRU_C = 8.0  # the fixed "c" constant from the paper
+
+
+def _rnn_width(cfg: ModelConfig) -> int:
+    return cfg.rnn_width or cfg.d_model
+
+
+def _pattern(cfg: ModelConfig) -> tuple[int, int]:
+    """Returns (num_groups, num_trailing_recurrent)."""
+    group = cfg.attn_every                       # rec, rec, attn
+    ng = cfg.num_layers // group
+    return ng, cfg.num_layers - ng * group
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_recurrent(key, cfg: ModelConfig):
+    d, dt = cfg.d_model, cfg.param_dtype
+    w = _rnn_width(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": layers.dense_init(ks[0], (d, w), dt),
+        "w_gate": layers.dense_init(ks[1], (d, w), dt),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, w)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((w,), dt),
+        # RG-LRU gates (dense projections) + per-channel Lambda
+        "w_a": layers.dense_init(ks[3], (w, w), dt),
+        "b_a": jnp.zeros((w,), dt),
+        "w_i": layers.dense_init(ks[4], (w, w), dt),
+        "b_i": jnp.zeros((w,), dt),
+        # softplus(lambda_p) ~ 0.7 -> decay ~ exp(-8*0.7*0.5) at mid-gate
+        "lambda_p": jnp.full((w,), 0.15, dt),
+        "w_out": layers.dense_init(ks[5], (w, d), dt),
+    }
+
+
+def _recurrent_axes(cfg: ModelConfig):
+    return {
+        "w_x": ("embed", "rnn"), "w_gate": ("embed", "rnn"),
+        "conv_w": (None, "rnn"), "conv_b": ("rnn",),
+        "w_a": ("embed", "rnn"), "b_a": ("rnn",),
+        "w_i": ("embed", "rnn"), "b_i": ("rnn",),
+        "lambda_p": ("rnn",), "w_out": ("rnn", "embed"),
+    }
+
+
+def _init_block(key, cfg: ModelConfig, kind: str):
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+         "ln2": jnp.zeros((cfg.d_model,), cfg.param_dtype)}
+    if kind == "rec":
+        p["rec"] = _init_recurrent(k1, cfg)
+    else:
+        p["attn"] = layers.init_attn(k1, cfg)
+    p["mlp"] = layers.init_mlp(k2, cfg)
+    return p
+
+
+def init(key, cfg: ModelConfig):
+    ng, trailing = _pattern(cfg)
+    k_emb, kg, kt = jax.random.split(key, 3)
+    gkeys = jax.random.split(kg, ng * 3).reshape(ng, 3, 2)
+
+    def group_init(keys3):
+        return {
+            "rec0": _init_block(keys3[0], cfg, "rec"),
+            "rec1": _init_block(keys3[1], cfg, "rec"),
+            "attn": _init_block(keys3[2], cfg, "attn"),
+        }
+
+    params = {
+        "embed": layers.embed_init(k_emb, cfg.vocab_size, cfg.d_model,
+                                   cfg.param_dtype),
+        "groups": jax.vmap(group_init)(gkeys),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+    }
+    if trailing:
+        tkeys = jax.random.split(kt, trailing)
+        params["trailing"] = jax.vmap(
+            lambda k: _init_block(k, cfg, "rec"))(tkeys)
+    return params
+
+
+def logical_axes(cfg: ModelConfig):
+    ng, trailing = _pattern(cfg)
+    rec_block = {"ln1": (None,), "ln2": (None,),
+                 "rec": _recurrent_axes(cfg), "mlp": layers.mlp_axes(cfg)}
+    attn_block = {"ln1": (None,), "ln2": (None,),
+                  "attn": layers.attn_axes(cfg), "mlp": layers.mlp_axes(cfg)}
+    group = {"rec0": rec_block, "rec1": rec_block, "attn": attn_block}
+    stack = lambda tree: jax.tree.map(
+        lambda ax: ("layers",) + tuple(ax), tree,
+        is_leaf=lambda x: isinstance(x, tuple))
+    axes = {"embed": ("vocab", "embed"), "groups": stack(group),
+            "final_norm": (None,)}
+    if trailing:
+        axes["trailing"] = stack(rec_block)
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU + temporal block
+# ---------------------------------------------------------------------------
+
+def _causal_conv(p, x, tail=None):
+    """Depthwise causal conv width W. x: (B, T, w). tail: (B, W-1, w) state.
+
+    Returns (y (B, T, w), new_tail)."""
+    wconv = p["conv_w"].astype(x.dtype)
+    width = wconv.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        tail = tail.astype(x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)         # (B, T+W-1, w)
+    y = sum(xp[:, i:i + x.shape[1]] * wconv[i] for i in range(width))
+    return y + p["conv_b"].astype(x.dtype), xp[:, -(width - 1):]
+
+
+def _rg_lru(p, x, h0):
+    """x: (B, T, w) post-conv; h0: (B, w) initial state.
+
+    Parallel associative scan over h_t = a_t h_{t-1} + b_t."""
+    r = jax.nn.sigmoid((x @ p["w_a"] + p["b_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((x @ p["w_i"] + p["b_i"]).astype(jnp.float32))
+    log_a = -LRU_C * jax.nn.softplus(p["lambda_p"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)                               # (B, T, w)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-9)) * i * x.astype(jnp.float32)
+    # fold initial state into the first b
+    b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def _temporal_block(p, cfg: ModelConfig, x, state):
+    """Griffin recurrent branch. x: (B,T,d); state: {"h": (B,w), "conv": ...}."""
+    gate = jax.nn.gelu(x @ p["w_gate"].astype(cfg.compute_dtype))
+    y = x @ p["w_x"].astype(cfg.compute_dtype)
+    y, new_conv = _causal_conv(p, y, state["conv"] if state else None)
+    h, h_last = _rg_lru(p, y, state["h"] if state else jnp.zeros(
+        (x.shape[0], y.shape[-1]), jnp.float32))
+    out = (h * gate) @ p["w_out"].astype(cfg.compute_dtype)
+    return out, {"h": h_last, "conv": new_conv}
+
+
+def _apply_block(p, cfg: ModelConfig, x, positions, kind: str, state=None):
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "rec":
+        out, new_state = _temporal_block(p["rec"], cfg, h, state)
+    else:
+        out = layers.attn_block(p["attn"], cfg, h, positions, causal=True,
+                                window=cfg.window)
+        new_state = None
+    x = x + out
+    h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + layers.mlp_block(p["mlp"], cfg, h)
+    return x, new_state
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def forward_with_aux(params, cfg: ModelConfig, batch):
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    x = x * jnp.sqrt(jnp.asarray(cfg.d_model, cfg.compute_dtype))
+    positions = jnp.arange(t)
+
+    def scan_body(x, p_group):
+        x = hints.hint(x, "batch", "seq_act", None)   # seq-sharded carry
+        x, _ = _apply_block(p_group["rec0"], cfg, x, positions, "rec")
+        x, _ = _apply_block(p_group["rec1"], cfg, x, positions, "rec")
+        x, _ = _apply_block(p_group["attn"], cfg, x, positions, "attn")
+        return hints.hint(x, "batch", "seq_act", None), None
+
+    if cfg.remat == "layer":
+        scan_body = jax.checkpoint(scan_body,
+                                   policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(scan_body, x, params["groups"])
+
+    if "trailing" in params:
+        def trail_body(x, p_layer):
+            x, _ = _apply_block(p_layer, cfg, x, positions, "rec")
+            return x, None
+        x, _ = jax.lax.scan(trail_body, x, params["trailing"])
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["embed"].T.astype(cfg.compute_dtype)   # tied head
+    return logits, {"balance": jnp.zeros((), jnp.float32)}
+
+
+def forward(params, cfg: ModelConfig, batch):
+    return forward_with_aux(params, cfg, batch)[0]
+
+
+def loss_fn(params, cfg: ModelConfig, batch, **_):
+    tokens = batch["tokens"]
+    logits, aux = forward_with_aux(params, cfg, {"tokens": tokens[:, :-1]})
+    loss = layers.softmax_cross_entropy(logits, tokens[:, 1:])
+    return loss, {"ce": loss, "balance": aux["balance"]}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
+               dtype=jnp.bfloat16):
+    ng, trailing = _pattern(cfg)
+    w = _rnn_width(cfg)
+    win = min(cfg.window or max_len, max_len)
+    dh = cfg.dh
+
+    def rec_state(n):
+        return {"h": jnp.zeros((n, batch_size, w), jnp.float32),
+                "conv": jnp.zeros((n, batch_size, cfg.conv_width - 1, w),
+                                  cfg.compute_dtype)}
+
+    cache = {
+        "rec0": rec_state(ng), "rec1": rec_state(ng),
+        "attn": {"k": jnp.zeros((ng, batch_size, win, cfg.num_kv_heads, dh),
+                                dtype),
+                 "v": jnp.zeros((ng, batch_size, win, cfg.num_kv_heads, dh),
+                                dtype)},
+    }
+    if trailing:
+        cache["trailing"] = rec_state(trailing)
+    return cache
+
+
+def cache_logical_axes(cfg: ModelConfig, cache):
+    def annotate(leaf):
+        if leaf.ndim == 5:   # attention kv: (ng, B, S, Hkv, dh)
+            return ("layers", "batch", "kv_seq", None, None)
+        return ("layers", "batch") + (None,) * (leaf.ndim - 2)
+    return jax.tree.map(annotate, cache)
+
+
+def _decode_rec(p, cfg: ModelConfig, x, state):
+    """Single-token recurrent block. x: (B, d)."""
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)[:, None, :]
+    out, new_state = _temporal_block(p["rec"], cfg, h, state)
+    x = x + out[:, 0]
+    h2 = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + layers.mlp_block(p["mlp"], cfg, h2), new_state
+
+
+def _decode_attn(p, cfg: ModelConfig, x, kv, pos):
+    b = x.shape[0]
+    dh = cfg.dh
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)[:, None, :]
+    q, k_new, v_new = layers.qkv_project(p["attn"], cfg, h,
+                                         jnp.full((1,), pos))
+    s = kv["k"].shape[1]
+    slot = pos % s
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        kv["k"], k_new.astype(kv["k"].dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        kv["v"], v_new.astype(kv["v"].dtype), slot, axis=1)
+    out = layers.decode_attention(q[:, 0], k_cache, v_cache,
+                                  jnp.minimum(pos, s - 1), dh)
+    x = x + out.reshape(b, -1) @ p["attn"]["wo"].astype(cfg.compute_dtype)
+    h2 = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + layers.mlp_block(p["mlp"], cfg, h2), {"k": k_cache, "v": v_cache}
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    x = x * jnp.sqrt(jnp.asarray(cfg.d_model, cfg.compute_dtype))
+
+    def scan_body(x, xs):
+        p_group, rec0, rec1, kv = xs
+        x, s0 = _decode_rec(p_group["rec0"], cfg, x, rec0)
+        x, s1 = _decode_rec(p_group["rec1"], cfg, x, rec1)
+        x, kv2 = _decode_attn(p_group["attn"], cfg, x, kv, pos)
+        return x, (s0, s1, kv2)
+
+    x, (rec0, rec1, kv) = jax.lax.scan(
+        scan_body, x,
+        (params["groups"], cache["rec0"], cache["rec1"], cache["attn"]))
+    new_cache = {"rec0": rec0, "rec1": rec1, "attn": kv}
+
+    if "trailing" in params:
+        def trail_body(x, xs):
+            p_layer, st = xs
+            x, s = _decode_rec(p_layer, cfg, x, st)
+            return x, s
+        x, ts = jax.lax.scan(trail_body, x,
+                             (params["trailing"], cache["trailing"]))
+        new_cache["trailing"] = ts
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["embed"].T.astype(cfg.compute_dtype)
+    return logits, new_cache
+
+
+def prefill(params, cfg: ModelConfig, batch: dict):
+    """Process the prompt; return (last_logits, decode cache): RG-LRU
+    states + conv tails (O(1)) and window-sliced attention KV rings."""
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    x = x * jnp.sqrt(jnp.asarray(cfg.d_model, cfg.compute_dtype))
+    positions = jnp.arange(t)
+    win = min(cfg.window or t, t)
+
+    def rec_with_state(p_block, x):
+        h = layers.rms_norm(x, p_block["ln1"], cfg.norm_eps)
+        out, st = _temporal_block(p_block["rec"], cfg, h, None)
+        x = x + out
+        h2 = layers.rms_norm(x, p_block["ln2"], cfg.norm_eps)
+        return x + layers.mlp_block(p_block["mlp"], cfg, h2), st
+
+    def attn_with_kv(p_block, x):
+        h = layers.rms_norm(x, p_block["ln1"], cfg.norm_eps)
+        q, k, v = layers.qkv_project(p_block["attn"], cfg, h, positions)
+        a = layers.attention(q, k, v, positions, positions, cfg, causal=True,
+                             window=cfg.window)
+        x = x + a.reshape(b, t, -1) @ p_block["attn"]["wo"].astype(
+            cfg.compute_dtype)
+        h2 = layers.rms_norm(x, p_block["ln2"], cfg.norm_eps)
+        x = x + layers.mlp_block(p_block["mlp"], cfg, h2)
+        return x, {"k": k[:, -win:], "v": v[:, -win:]}
+
+    def scan_body(x, p_group):
+        x, s0 = rec_with_state(p_group["rec0"], x)
+        x, s1 = rec_with_state(p_group["rec1"], x)
+        x, kv = attn_with_kv(p_group["attn"], x)
+        return x, (s0, s1, kv)
+
+    x, (rec0, rec1, kv) = jax.lax.scan(scan_body, x, params["groups"])
+    cache = {"rec0": rec0, "rec1": rec1, "attn": kv}
+
+    if "trailing" in params:
+        def trail_body(x, p_layer):
+            return rec_with_state(p_layer, x)
+        x, ts = jax.lax.scan(trail_body, x, params["trailing"])
+        cache["trailing"] = ts
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    last_logits = x[:, -1] @ params["embed"].T.astype(cfg.compute_dtype)
+    return last_logits, cache

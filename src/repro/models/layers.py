@@ -1,0 +1,312 @@
+"""Shared layer substrate for the model zoo.
+
+Everything is a pure function over plain dict pytrees. Parameters carry a
+parallel "logical axes" pytree (built by each family's ``logical_axes``)
+that the sharding rules in ``repro.parallel`` map to mesh axes.
+
+Attention comes in three execution strategies:
+  * full      — one (Tq, Tk) score matrix; used for short sequences.
+  * chunked   — flash-style: ``lax.scan`` over KV chunks with a running
+                (max, denom, acc) triple, outer ``lax.scan`` over Q chunks.
+                O(Tq * Ck) live memory; used for long prefill.
+  * decode    — single-token query against a cache (optionally
+                MCQ-compressed — see repro/models/kvq.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.parallel import hints
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, *, scale: float | None = None,
+               fan_in: int | None = None):
+    fan = fan_in if fan_in is not None else shape[0]
+    s = scale if scale is not None else 1.0 / jnp.sqrt(fan)
+    return (jax.random.normal(key, shape) * s).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x: (..., T, H, dh), positions: (..., T). Rotates pairs (even, odd)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., T, half)
+    cos = jnp.cos(ang)[..., :, None, :]                        # (..., T, 1, half)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _mask_bias(q_pos, k_pos, *, causal: bool, window: int | None,
+               k_valid=None):
+    """Additive mask bias (0 or -inf): q_pos (Tq,), k_pos (Tk,) -> (Tq, Tk)."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        ok &= q_pos[:, None] - k_pos[None, :] < window
+    if k_valid is not None:
+        ok &= k_valid[None, :]
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def repeat_kv(k, rep: int):
+    """GQA -> MHA expansion: (B, T, Hkv, dh) -> (B, T, Hkv*rep, dh).
+
+    TP-friendly formulation: the kv projections stay replicated across the
+    model axis (small), queries shard by head, and the repeated kv shards
+    by head too — avoids GSPMD padding a 4-8-way kv-head axis up to a
+    16-way mesh axis (verified 3x flops blowup without this)."""
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=2)
+
+
+def full_attention(q, k, v, q_pos, k_pos, *, causal: bool,
+                   window: int | None = None):
+    """q: (B, Tq, H, dh), k/v: (B, Tk, Hkv, dh). Returns (B, Tq, H, dh)."""
+    b, tq, h, dh = q.shape
+    k = repeat_kv(k, h // k.shape[2])
+    v = repeat_kv(v, h // v.shape[2])
+    k = hints.hint(k, "batch", None, "heads", None)
+    v = hints.hint(v, "batch", None, "heads", None)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(dh)
+    scores = hints.hint(scores, "batch", "heads", None, None)
+    bias = _mask_bias(q_pos, k_pos, causal=causal, window=window)
+    w = jax.nn.softmax(scores + bias[None, None], axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def chunked_attention(q, k, v, q_pos, k_pos, *, causal: bool,
+                      window: int | None = None, q_chunk: int = 512,
+                      kv_chunk: int = 512):
+    """Flash-style memory-efficient attention (pure JAX).
+
+    Outer scan over Q chunks, inner scan over KV chunks with a running
+    (row-max, denominator, accumulator). Live memory O(q_chunk * kv_chunk)
+    per (batch, head) instead of O(Tq * Tk).
+    """
+    b, tq, h, dh = q.shape
+    k = repeat_kv(k, h // k.shape[2])
+    v = repeat_kv(v, h // v.shape[2])
+    tk = k.shape[1]
+    q_chunk = min(q_chunk, tq)
+    kv_chunk = min(kv_chunk, tk)
+    assert tq % q_chunk == 0 and tk % kv_chunk == 0
+    nq, nk = tq // q_chunk, tk // kv_chunk
+
+    qc = q.reshape(b, nq, q_chunk, h, dh)
+    qp = q_pos.reshape(nq, q_chunk)
+    kc = k.reshape(b, nk, kv_chunk, h, dh)
+    vc = v.reshape(b, nk, kv_chunk, h, dh)
+    kp = k_pos.reshape(nk, kv_chunk)
+    scale = 1.0 / jnp.sqrt(dh)
+
+    def q_body(_, qi):
+        q_blk, qp_blk = qi                       # (B, Cq, H, dh), (Cq,)
+
+        def kv_body(carry, ki):
+            m, l, acc = carry
+            k_blk, v_blk, kp_blk = ki
+            s = jnp.einsum("bqhd,bkhd->bhqk",
+                           q_blk.astype(jnp.float32),
+                           k_blk.astype(jnp.float32)) * scale
+            s = hints.hint(s, "batch", "heads", None, None)
+            s = s + _mask_bias(qp_blk, kp_blk, causal=causal,
+                               window=window)[None, None]
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # guard fully-masked rows (m_new = -inf): exp(-inf - -inf)
+            m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+            p = jnp.exp(s - m_safe[..., None])
+            corr = jnp.exp(jnp.where(jnp.isinf(m), 0.0, m) - m_safe)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, v_blk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, h, q_chunk, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_body, (m0, l0, a0),
+            (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4), kp))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]   # (B,H,Cq,dh)
+        return None, out.transpose(0, 2, 1, 3)         # (B,Cq,H,dh)
+
+    _, outs = jax.lax.scan(q_body, None,
+                           (qc.transpose(1, 0, 2, 3, 4), qp))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, tq, h, dh)
+    return out.astype(q.dtype)
+
+
+def attention(q, k, v, q_pos, k_pos, cfg: ModelConfig, *, causal: bool,
+              window: int | None = None):
+    """Strategy dispatch: full matrix for short sequences, chunked for long."""
+    tq, tk = q.shape[1], k.shape[1]
+    if tq * tk <= 2048 * 2048 or tq % min(cfg.attn_chunk, tq) != 0:
+        return full_attention(q, k, v, q_pos, k_pos, causal=causal,
+                              window=window)
+    return chunked_attention(q, k, v, q_pos, k_pos, causal=causal,
+                             window=window, q_chunk=cfg.attn_chunk,
+                             kv_chunk=cfg.attn_chunk)
+
+
+def decode_attention(q, k_cache, v_cache, pos, dh: int):
+    """Single-step decode: q (B, H, dh) vs cache (B, S, Hkv, dh); positions
+    >= ``pos`` are masked (cache not yet filled). Returns (B, H, dh).
+
+    The natural decode sharding is the cache SEQUENCE axis (kv_seq rule):
+    each shard scores its slice and the softmax reduces across shards, so
+    the (small) kv-head axis never has to divide the mesh."""
+    b, s, hkv, _ = k_cache.shape
+    h = q.shape[1]
+    rep = h // hkv
+    qg = q.reshape(b, hkv, rep, dh)
+    scores = jnp.einsum("bhrd,bshd->bhrs", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) / jnp.sqrt(dh)
+    scores = hints.hint(scores, "batch", None, None, "kv_seq")
+    valid = (jnp.arange(s) <= pos)[None, None, None, :]
+    scores = jnp.where(valid, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhrs,bshd->bhrd", w, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block (projections + norms)
+# ---------------------------------------------------------------------------
+
+def init_attn(key, cfg: ModelConfig):
+    dh = cfg.dh
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, (cfg.d_model, cfg.num_heads * dh), cfg.param_dtype),
+        "wk": dense_init(k2, (cfg.d_model, cfg.num_kv_heads * dh), cfg.param_dtype),
+        "wv": dense_init(k3, (cfg.d_model, cfg.num_kv_heads * dh), cfg.param_dtype),
+        "wo": dense_init(k4, (cfg.num_heads * dh, cfg.d_model), cfg.param_dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((dh,), cfg.param_dtype)
+        p["k_norm"] = jnp.zeros((dh,), cfg.param_dtype)
+    return p
+
+
+def attn_axes(cfg: ModelConfig):
+    p = {
+        "wq": ("embed", "heads"),
+        "wk": ("embed", "kv_heads"),
+        "wv": ("embed", "kv_heads"),
+        "wo": ("heads", "embed"),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = (None,)
+        p["k_norm"] = (None,)
+    return p
+
+
+def qkv_project(p, cfg: ModelConfig, x, positions):
+    """x (B, T, d) -> q (B, T, H, dh), k/v (B, T, Hkv, dh) with RoPE."""
+    b, t, _ = x.shape
+    dh = cfg.dh
+    q = (x @ p["wq"].astype(cfg.compute_dtype)).reshape(b, t, cfg.num_heads, dh)
+    k = (x @ p["wk"].astype(cfg.compute_dtype)).reshape(b, t, cfg.num_kv_heads, dh)
+    v = (x @ p["wv"].astype(cfg.compute_dtype)).reshape(b, t, cfg.num_kv_heads, dh)
+    q = hints.hint(q, "batch", None, "heads", None)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_block(p, cfg: ModelConfig, x, positions, *, causal: bool,
+               window: int | None = None):
+    q, k, v = qkv_project(p, cfg, x, positions)
+    out = attention(q, k, v, positions, positions, cfg, causal=causal,
+                    window=window)
+    b, t = x.shape[:2]
+    return out.reshape(b, t, -1) @ p["wo"].astype(cfg.compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None):
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (cfg.d_model, d_ff), cfg.param_dtype),
+        "w_up": dense_init(k2, (cfg.d_model, d_ff), cfg.param_dtype),
+        "w_down": dense_init(k3, (d_ff, cfg.d_model), cfg.param_dtype),
+    }
+
+
+def mlp_axes(cfg: ModelConfig):
+    return {"w_gate": ("embed", "ffn"), "w_up": ("embed", "ffn"),
+            "w_down": ("ffn", "embed")}
+
+
+def mlp_block(p, cfg: ModelConfig, x):
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    ffn_axes = ("batch",) + (None,) * (x.ndim - 2) + ("ffn",)
+    g = act(hints.hint(x @ p["w_gate"].astype(cfg.compute_dtype), *ffn_axes))
+    u = hints.hint(x @ p["w_up"].astype(cfg.compute_dtype), *ffn_axes)
+    out = (g * u) @ p["w_down"].astype(cfg.compute_dtype)
+    return hints.hint(out, "batch", *([None] * (x.ndim - 1)))
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def softmax_cross_entropy(logits, labels, mask=None, *, z_loss: float = 0.0):
+    """Mean CE over valid positions. logits (..., V) f32-upcast; labels int."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(loss * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(loss)

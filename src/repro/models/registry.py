@@ -1,0 +1,47 @@
+"""Family dispatch: uniform functional surface over the three model families."""
+from __future__ import annotations
+
+from repro.models.config import ModelConfig
+from repro.models import transformer, rwkv6, griffin
+
+_FAMILIES = {
+    "transformer": transformer,
+    "rwkv6": rwkv6,
+    "griffin": griffin,
+}
+
+
+def family(cfg: ModelConfig):
+    return _FAMILIES[cfg.family]
+
+
+def init(key, cfg: ModelConfig):
+    return family(cfg).init(key, cfg)
+
+
+def forward(params, cfg: ModelConfig, batch):
+    return family(cfg).forward(params, cfg, batch)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, **kw):
+    return family(cfg).loss_fn(params, cfg, batch, **kw)
+
+
+def logical_axes(cfg: ModelConfig):
+    return family(cfg).logical_axes(cfg)
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int, **kw):
+    return family(cfg).init_cache(cfg, batch_size, max_len, **kw)
+
+
+def cache_logical_axes(cfg: ModelConfig, cache):
+    return family(cfg).cache_logical_axes(cfg, cache)
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    return family(cfg).decode_step(params, cfg, cache, tokens, pos)
+
+
+def supports_decode(cfg: ModelConfig) -> bool:
+    return cfg.kind == "decoder"

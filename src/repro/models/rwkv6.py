@@ -1,0 +1,407 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892) — attention-free SSM with
+data-dependent decay.
+
+Per layer: a time-mixing block (the wkv recurrence over a per-head
+(dk x dv) outer-product state with *input-conditioned* per-channel decay —
+the Finch novelty) and a channel-mixing block, both with token-shift
+interpolation. Data-dependent quantities (the five token-shift mixes and
+the decay) use the official low-rank "ddlerp" parameterization.
+
+Training runs the recurrence as a ``lax.scan`` over time (compact HLO, the
+sequential-scan baseline); a chunked parallel formulation is the documented
+perf upgrade path. Decode carries O(1) state per layer: the wkv state
+(B, H, dk, dv) plus the last token for the shifts — there is NO KV cache,
+which is why rwkv6 runs the long_500k cell natively and why the paper's
+KV-compression integration is inapplicable here (DESIGN.md §Arch-
+applicability).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import layers
+from repro.parallel import hints
+from repro.utils.pytree import tree_cast
+
+TM_EXTRA = 32      # ddlerp low-rank dim (official TIME_MIX_EXTRA_DIM)
+DECAY_EXTRA = 64   # decay lora dim (official TIME_DECAY_EXTRA_DIM)
+HEAD_DIM = 64      # rwkv6 head size
+
+
+def _num_heads(cfg: ModelConfig) -> int:
+    assert cfg.d_model % HEAD_DIM == 0
+    return cfg.d_model // HEAD_DIM
+
+
+def layer_norm(x, p, eps=1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = ((x - mean) * jax.lax.rsqrt(var + eps)
+         * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32))
+    return y.astype(dtype)
+
+
+def _ln_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def _init_time_mix(key, cfg: ModelConfig):
+    d = cfg.d_model
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 10)
+    h = _num_heads(cfg)
+    return {
+        # token-shift base mixes (x, then per-branch w/k/v/r/g)
+        "mu_x": jnp.full((d,), 0.5, dt),
+        "mu_wkvrg": jnp.full((5, d), 0.5, dt),
+        # ddlerp lora: (d, 5*TM) and (5, TM, d)
+        "maa_w1": layers.dense_init(ks[0], (d, 5 * TM_EXTRA), dt),
+        "maa_w2": (jax.random.normal(ks[1], (5, TM_EXTRA, d))
+                   * (1.0 / jnp.sqrt(TM_EXTRA))).astype(dt),
+        # decay: w0 + tanh(x @ d1) @ d2
+        "decay_w0": jnp.full((d,), -6.0, dt),   # slow decay at init
+        "decay_w1": layers.dense_init(ks[2], (d, DECAY_EXTRA), dt),
+        "decay_w2": (jax.random.normal(ks[3], (DECAY_EXTRA, d))
+                     * (1.0 / jnp.sqrt(DECAY_EXTRA))).astype(dt),
+        "bonus_u": jnp.zeros((h, HEAD_DIM), dt),      # first-token bonus
+        "w_r": layers.dense_init(ks[4], (d, d), dt),
+        "w_k": layers.dense_init(ks[5], (d, d), dt),
+        "w_v": layers.dense_init(ks[6], (d, d), dt),
+        "w_g": layers.dense_init(ks[7], (d, d), dt),
+        "w_o": layers.dense_init(ks[8], (d, d), dt),
+        "ln_x": _ln_init(HEAD_DIM, dt),               # per-head group norm
+    }
+
+
+def _init_channel_mix(key, cfg: ModelConfig):
+    d, dt = cfg.d_model, cfg.param_dtype
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, dt),
+        "mu_r": jnp.full((d,), 0.5, dt),
+        "w_k": layers.dense_init(k1, (d, cfg.d_ff), dt),
+        "w_v": layers.dense_init(k2, (cfg.d_ff, d), dt),
+        "w_r": layers.dense_init(k3, (d, d), dt),
+    }
+
+
+def _init_layer(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": _ln_init(cfg.d_model, cfg.param_dtype),
+        "ln2": _ln_init(cfg.d_model, cfg.param_dtype),
+        "tm": _init_time_mix(k1, cfg),
+        "cm": _init_channel_mix(k2, cfg),
+    }
+
+
+def init(key, cfg: ModelConfig):
+    k_emb, k_blocks, k_head = jax.random.split(key, 3)
+    block_keys = jax.random.split(k_blocks, cfg.num_layers)
+    stacked = jax.vmap(lambda k: _init_layer(k, cfg))(block_keys)
+    params = {
+        "embed": layers.embed_init(k_emb, cfg.vocab_size, cfg.d_model,
+                                   cfg.param_dtype),
+        "ln_in": _ln_init(cfg.d_model, cfg.param_dtype),
+        "blocks": stacked,
+        "ln_out": _ln_init(cfg.d_model, cfg.param_dtype),
+        "lm_head": layers.dense_init(k_head, (cfg.d_model, cfg.vocab_size),
+                                     cfg.param_dtype),
+    }
+    return params
+
+
+def logical_axes(cfg: ModelConfig):
+    d2 = ("embed", "ffn")
+    tm = {
+        "mu_x": (None,), "mu_wkvrg": (None, None),
+        "maa_w1": ("embed", None), "maa_w2": (None, None, "embed"),
+        "decay_w0": (None,), "decay_w1": ("embed", None),
+        "decay_w2": (None, "embed"), "bonus_u": ("heads", None),
+        "w_r": ("embed", "heads"), "w_k": ("embed", "heads"),
+        "w_v": ("embed", "heads"), "w_g": ("embed", "heads"),
+        "w_o": ("heads", "embed"),
+        "ln_x": {"scale": (None,), "bias": (None,)},
+    }
+    cm = {"mu_k": (None,), "mu_r": (None,),
+          "w_k": d2, "w_v": ("ffn", "embed"), "w_r": ("embed", "heads")}
+    ln = {"scale": (None,), "bias": (None,)}
+    block = {"ln1": ln, "ln2": ln, "tm": tm, "cm": cm}
+    stacked = jax.tree.map(lambda ax: ("layers",) + tuple(ax), block,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return {
+        "embed": ("vocab", "embed"), "ln_in": ln, "blocks": stacked,
+        "ln_out": ln, "lm_head": ("embed", "vocab"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# time mixing
+# ---------------------------------------------------------------------------
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent token-shift: returns the 5 mixed inputs (w,k,v,r,g).
+
+    x, x_prev: (B, T, d). Official RWKV6 formulation."""
+    xx = x_prev - x
+    x_base = x + xx * p["mu_x"]
+    lo = jnp.tanh(x_base @ p["maa_w1"])                    # (B,T,5*TM)
+    b, t, _ = x.shape
+    lo = lo.reshape(b, t, 5, TM_EXTRA)
+    deltas = jnp.einsum("btfe,fed->btfd", lo, p["maa_w2"])  # (B,T,5,d)
+    mixed = x[:, :, None, :] + xx[:, :, None, :] * (
+        p["mu_wkvrg"][None, None] + deltas)
+    return [mixed[:, :, i, :] for i in range(5)]            # w,k,v,r,g inputs
+
+
+def _wkv_scan(r, k, v, w, u, state):
+    """The wkv6 recurrence over time.
+
+    r,k,v: (B,T,H,dh); w: (B,T,H,dh) decay in (0,1); u: (H,dh) bonus.
+    state: (B,H,dh,dh) carry (key-dim x value-dim).
+    Returns (out (B,T,H,dh), final state)."""
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                 # (B,H,dh) each
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None] [..., None] * kv)
+        s = w_t[..., None] * s + kv
+        return s, out
+
+    xs = (r.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3))
+    state, outs = jax.lax.scan(step, state, xs)
+    return outs.transpose(1, 0, 2, 3), state
+
+
+def _wkv_chunked(r, k, v, w, u, state, chunk: int):
+    """Chunked-parallel wkv6 (the hillclimb path for train/prefill; see
+    EXPERIMENTS.md §Perf iteration 5).
+
+    Within a chunk of C steps the recurrence unrolls to matmuls by
+    factoring the cumulative decay: with la_t = sum_{s<=t} log w_s,
+
+        scores[t,s] = <r_t * e^{la_{t-1}}, k_s * e^{-la_s}>   (s < t)
+        S_C         = diag(e^{la_C}) S_0 + (k * e^{la_C - la})^T v
+
+    Both exponents are row/column-separable, so intra-chunk work is three
+    (C x d) matmuls on the MXU instead of C sequential rank-1 updates, and
+    the (dk x dv) state is read/written once per chunk instead of once per
+    step — T/C x less state traffic (the memory-roofline win). e^{-la} is
+    clamped (decay ~0.99+ at init; |la| within a chunk stays small).
+
+    r,k,v,w: (B,T,H,dh); u: (H,dh); state: (B,H,dh,dh) f32.
+    """
+    b, t, h, dh = r.shape
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    rs = r.reshape(b, nc, chunk, h, dh)
+    ks = k.reshape(b, nc, chunk, h, dh)
+    vs = v.reshape(b, nc, chunk, h, dh)
+    # per-chunk cumulative log-decay (restarts each chunk so every exponent
+    # below is bounded by the chunk length)
+    logw = jnp.log(jnp.maximum(w, 1e-12)).reshape(b, nc, chunk, h, dh)
+    la = jnp.cumsum(logw, axis=2)
+
+    mask = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), k=-1)
+
+    def chunk_body(s0, inp):
+        r_c, k_c, v_c, la_c = inp                  # (B,C,H,dh) each
+        la_prev = jnp.concatenate(
+            [jnp.zeros_like(la_c[:, :1]), la_c[:, :-1]], axis=1)
+        r_decayed = r_c * jnp.exp(la_prev)                   # <= |r|
+        k_grown = k_c * jnp.exp(jnp.minimum(-la_c, 30.0))
+        # intra-chunk attention (strictly causal) + bonus diagonal
+        scores = jnp.einsum("bthd,bshd->bhts", r_decayed, k_grown)
+        scores = scores * mask[None, None]
+        intra = jnp.einsum("bhts,bshd->bthd", scores, v_c)
+        bonus = jnp.einsum("bthd,bthd->bth", r_c * u[None, None], k_c)
+        intra = intra + bonus[..., None] * v_c
+        # inter-chunk: contribution of the carried state
+        inter = jnp.einsum("bthd,bhde->bthe", r_decayed, s0)
+        # state update
+        la_end = la_c[:, -1:]                                # (B,1,H,dh)
+        k_decayed = k_c * jnp.exp(la_end - la_c)             # <= |k|
+        s_new = (jnp.exp(la_end[:, 0])[..., None] * s0
+                 + jnp.einsum("bthd,bthe->bhde", k_decayed, v_c))
+        return s_new, intra + inter
+
+    xs = tuple(a.transpose(1, 0, 2, 3, 4) for a in
+               (rs, ks, vs, la))
+    state, outs = jax.lax.scan(chunk_body, state, xs)
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, t, h, dh)
+    return out, state
+
+
+def time_mix(p, cfg: ModelConfig, x, x_prev, state):
+    """x: (B,T,d); x_prev: (B,T,d) shifted-by-one inputs; state: wkv carry.
+
+    Returns (out (B,T,d), new_state)."""
+    b, t, d = x.shape
+    h = _num_heads(cfg)
+    xw, xk, xv, xr, xg = _ddlerp(p["tm"], x, x_prev)
+    tm = p["tm"]
+    r = (xr @ tm["w_r"]).reshape(b, t, h, HEAD_DIM)
+    k = (xk @ tm["w_k"]).reshape(b, t, h, HEAD_DIM)
+    v = (xv @ tm["w_v"]).reshape(b, t, h, HEAD_DIM)
+    g = xg @ tm["w_g"]
+    decay_logit = tm["decay_w0"] + jnp.tanh(xw @ tm["decay_w1"]) @ tm["decay_w2"]
+    w = jnp.exp(-jnp.exp(decay_logit.astype(jnp.float32)))   # (B,T,d) in (0,1)
+    w = w.reshape(b, t, h, HEAD_DIM)
+
+    if cfg.rwkv_chunk and t > 1 and t % cfg.rwkv_chunk == 0:
+        out, new_state = _wkv_chunked(
+            r.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), w,
+            tm["bonus_u"].astype(jnp.float32), state,
+            chunk=cfg.rwkv_chunk)
+    else:
+        out, new_state = _wkv_scan(
+            r.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), w,
+            tm["bonus_u"].astype(jnp.float32), state)
+    # per-head group norm, then silu(g) gate and output projection
+    out = layer_norm(out, tm["ln_x"])
+    out = out.reshape(b, t, d).astype(x.dtype) * jax.nn.silu(g)
+    return out @ tm["w_o"], new_state
+
+
+def channel_mix(p, x, x_prev):
+    cm = p["cm"]
+    xx = x_prev - x
+    xk = x + xx * cm["mu_k"]
+    xr = x + xx * cm["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ cm["w_k"]))
+    return jax.nn.sigmoid(xr @ cm["w_r"]) * (k @ cm["w_v"])
+
+
+def _shift(x, last=None):
+    """Token shift: x_prev[t] = x[t-1]; position 0 gets ``last`` (or 0)."""
+    prev = jnp.roll(x, 1, axis=1)
+    first = jnp.zeros_like(x[:, :1]) if last is None else last[:, None, :]
+    return jnp.concatenate([first, prev[:, 1:]], axis=1)
+
+
+def _block(p, cfg: ModelConfig, x, state):
+    h = layer_norm(x, p["ln1"])
+    tm_out, new_state = time_mix(p, cfg, h, _shift(h), state)
+    x = x + tm_out
+    h2 = layer_norm(x, p["ln2"])
+    x = x + channel_mix(p, h2, _shift(h2))
+    return x, new_state
+
+
+def forward_with_aux(params, cfg: ModelConfig, batch):
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    h = _num_heads(cfg)
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    x = layer_norm(x, params["ln_in"])
+    blocks = tree_cast(params["blocks"], cfg.compute_dtype)
+
+    def scan_body(x, p_layer):
+        x = hints.hint(x, "batch", "seq_act", None)   # seq-sharded carry
+        s0 = jnp.zeros((b, h, HEAD_DIM, HEAD_DIM), jnp.float32)
+        x, _ = _block(p_layer, cfg, x, s0)
+        return hints.hint(x, "batch", "seq_act", None), None
+
+    if cfg.remat == "layer":
+        scan_body = jax.checkpoint(scan_body,
+                                   policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(scan_body, x, blocks)
+    x = layer_norm(x, params["ln_out"])
+    logits = x @ params["lm_head"].astype(cfg.compute_dtype)
+    return logits, {"balance": jnp.zeros((), jnp.float32)}
+
+
+def forward(params, cfg: ModelConfig, batch):
+    return forward_with_aux(params, cfg, batch)[0]
+
+
+def loss_fn(params, cfg: ModelConfig, batch, **_):
+    tokens = batch["tokens"]
+    logits, aux = forward_with_aux(params, cfg, {"tokens": tokens[:, :-1]})
+    loss = layers.softmax_cross_entropy(logits, tokens[:, 1:])
+    return loss, {"ce": loss, "balance": aux["balance"]}
+
+
+# ---------------------------------------------------------------------------
+# decode: O(1) state, no KV cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
+               dtype=jnp.bfloat16):
+    """State per layer: wkv (B,H,dh,dh) + last-token activations for the two
+    token shifts. Size is independent of max_len (the whole point)."""
+    h = _num_heads(cfg)
+    l = cfg.num_layers
+    return {
+        "wkv": jnp.zeros((l, batch_size, h, HEAD_DIM, HEAD_DIM), jnp.float32),
+        "tm_prev": jnp.zeros((l, batch_size, cfg.d_model), cfg.compute_dtype),
+        "cm_prev": jnp.zeros((l, batch_size, cfg.d_model), cfg.compute_dtype),
+    }
+
+
+def cache_logical_axes(cfg: ModelConfig, cache):
+    return jax.tree.map(lambda x: ("layers", "batch") + (None,) * (x.ndim - 2),
+                        cache)
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    """One-token step: tokens (B,) -> (logits (B,V), new cache)."""
+    x = params["embed"][tokens].astype(cfg.compute_dtype)     # (B, d)
+    x = layer_norm(x, params["ln_in"])
+    blocks = tree_cast(params["blocks"], cfg.compute_dtype)
+
+    def scan_body(x, xs):
+        p_layer, wkv, tm_prev, cm_prev = xs
+        h = layer_norm(x, p_layer["ln1"])
+        tm_out, new_wkv = time_mix(p_layer, cfg, h[:, None, :],
+                                   tm_prev[:, None, :].astype(h.dtype), wkv)
+        x = x + tm_out[:, 0]
+        h2 = layer_norm(x, p_layer["ln2"])
+        cm_out = channel_mix(p_layer, h2[:, None, :],
+                             cm_prev[:, None, :].astype(h2.dtype))
+        x = x + cm_out[:, 0]
+        return x, (new_wkv, h.astype(tm_prev.dtype), h2.astype(cm_prev.dtype))
+
+    x, (wkv, tm_prev, cm_prev) = jax.lax.scan(
+        scan_body, x,
+        (blocks, cache["wkv"], cache["tm_prev"], cache["cm_prev"]))
+    x = layer_norm(x, params["ln_out"])
+    logits = x @ params["lm_head"].astype(cfg.compute_dtype)
+    return logits, {"wkv": wkv, "tm_prev": tm_prev, "cm_prev": cm_prev}
+
+
+def prefill(params, cfg: ModelConfig, batch: dict):
+    """Process the prompt; return (last_logits, decode cache). The cache is
+    the stacked per-layer wkv state + last normed activations — O(1) in T."""
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    h = _num_heads(cfg)
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    x = layer_norm(x, params["ln_in"])
+    blocks = tree_cast(params["blocks"], cfg.compute_dtype)
+
+    def scan_body(x, p_layer):
+        hh = layer_norm(x, p_layer["ln1"])
+        s0 = jnp.zeros((b, h, HEAD_DIM, HEAD_DIM), jnp.float32)
+        tm_out, state = time_mix(p_layer, cfg, hh, _shift(hh), s0)
+        x = x + tm_out
+        h2 = layer_norm(x, p_layer["ln2"])
+        x = x + channel_mix(p_layer, h2, _shift(h2))
+        return x, (state, hh[:, -1], h2[:, -1])
+
+    x, (wkv, tm_prev, cm_prev) = jax.lax.scan(scan_body, x, blocks)
+    x = layer_norm(x, params["ln_out"])
+    last_logits = x[:, -1] @ params["lm_head"].astype(cfg.compute_dtype)
+    cache = {"wkv": wkv, "tm_prev": tm_prev.astype(cfg.compute_dtype),
+             "cm_prev": cm_prev.astype(cfg.compute_dtype)}
+    return last_logits, cache

@@ -1,0 +1,415 @@
+"""Transformer family: dense decoder LMs, MoE decoder LMs, gemma3-style
+local:global attention patterns, and encoder-only (HuBERT) models.
+
+Layers are stacked along a leading "scan group" axis and executed with
+``lax.scan`` so the HLO stays compact at 88 layers (critical for the
+512-device dry-run compiles). A scan group is:
+
+  * 1 layer for uniform archs (yi, minitron, mistral-large, chameleon, MoE);
+  * ``local_global_ratio + 1`` layers for gemma3 (5 sliding-window + 1
+    global), unrolled inside the scan body with static window choices.
+
+Decode uses per-layer KV caches scanned alongside the layer params; local
+layers keep a ring buffer of ``window`` entries, so long-context decode
+memory is bounded for the sliding-window portion of the stack. With
+``cfg.kvq`` the global-attention cache is stored as MCQ codes and scored in
+the compressed domain (the paper's technique — see repro/models/kvq.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import layers, moe as moe_lib, kvq as kvq_lib
+from repro.parallel import hints
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _group_size(cfg: ModelConfig) -> int:
+    return cfg.local_global_ratio + 1 if cfg.local_global_ratio else 1
+
+
+def _num_groups(cfg: ModelConfig) -> int:
+    gs = _group_size(cfg)
+    assert cfg.num_layers % gs == 0, (cfg.num_layers, gs)
+    return cfg.num_layers // gs
+
+
+def _layer_window(cfg: ModelConfig, idx_in_group: int) -> int | None:
+    """Static window for sub-layer ``idx_in_group`` of a scan group.
+
+    gemma3 pattern: [local]*ratio + [global]; uniform archs use cfg.window
+    for every layer (None -> full attention)."""
+    if cfg.local_global_ratio:
+        return cfg.window if idx_in_group < cfg.local_global_ratio else None
+    return cfg.window
+
+
+def _init_layer(key, cfg: ModelConfig):
+    k_attn, k_ffn = jax.random.split(key)
+    p = {
+        "ln1": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+        "ln2": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+        "attn": layers.init_attn(k_attn, cfg),
+    }
+    if cfg.moe:
+        p["moe"] = moe_lib.init_moe(k_ffn, cfg)
+    else:
+        p["mlp"] = layers.init_mlp(k_ffn, cfg)
+    if cfg.use_post_norm:
+        p["post_ln1"] = jnp.zeros((cfg.d_model,), cfg.param_dtype)
+        p["post_ln2"] = jnp.zeros((cfg.d_model,), cfg.param_dtype)
+    return p
+
+
+def _layer_axes(cfg: ModelConfig):
+    p = {
+        "ln1": (None,),
+        "ln2": (None,),
+        "attn": layers.attn_axes(cfg),
+    }
+    if cfg.moe:
+        p["moe"] = moe_lib.moe_axes(cfg)
+    else:
+        p["mlp"] = layers.mlp_axes(cfg)
+    if cfg.use_post_norm:
+        p["post_ln1"] = (None,)
+        p["post_ln2"] = (None,)
+    return p
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    gs, ng = _group_size(cfg), _num_groups(cfg)
+    k_emb, k_blocks, k_head, k_front = jax.random.split(key, 4)
+
+    # stacked (ng, gs, ...) block params via double-vmapped init
+    block_keys = jax.random.split(k_blocks, ng * gs).reshape(ng, gs, 2)
+    stacked = jax.vmap(jax.vmap(lambda k: _init_layer(k, cfg)))(block_keys)
+
+    params = {
+        "blocks": stacked,
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+    }
+    if cfg.input_mode == "frames":
+        params["frontend"] = {
+            "proj": layers.dense_init(k_front, (cfg.frame_dim, cfg.d_model),
+                                      cfg.param_dtype),
+            "mask_embed": (jax.random.normal(k_emb, (cfg.frame_dim,))
+                           * 0.02).astype(cfg.param_dtype),
+        }
+    else:
+        params["embed"] = layers.embed_init(k_emb, cfg.vocab_size,
+                                            cfg.d_model, cfg.param_dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(
+            k_head, (cfg.d_model, cfg.vocab_size), cfg.param_dtype)
+    return params
+
+
+def logical_axes(cfg: ModelConfig):
+    la = _layer_axes(cfg)
+    stacked = jax.tree.map(lambda ax: ("layers", "sub") + tuple(ax), la,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    axes = {"blocks": stacked, "final_norm": (None,)}
+    if cfg.input_mode == "frames":
+        axes["frontend"] = {"proj": (None, "embed"), "mask_embed": (None,)}
+    else:
+        axes["embed"] = ("vocab", "embed")
+    if not cfg.tie_embeddings:
+        axes["lm_head"] = ("embed", "vocab")
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _block_apply(p, cfg: ModelConfig, x, positions, *, causal: bool,
+                 window: int | None, collect_kv: bool = False):
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if collect_kv:
+        q, k, v = layers.qkv_project(p["attn"], cfg, h, positions)
+        a_heads = layers.attention(q, k, v, positions, positions, cfg,
+                                   causal=causal, window=window)
+        b, t = x.shape[:2]
+        a = a_heads.reshape(b, t, -1) @ p["attn"]["wo"].astype(cfg.compute_dtype)
+        kv = (k, v)
+    else:
+        a = layers.attn_block(p["attn"], cfg, h, positions, causal=causal,
+                              window=window)
+        kv = None
+    if cfg.use_post_norm:
+        a = layers.rms_norm(a, p["post_ln1"], cfg.norm_eps)
+    x = x + a
+    h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.moe:
+        mesh = hints.current_mesh()
+        if (cfg.moe_ep and mesh is not None and h.ndim == 3
+                and h.shape[1] % mesh.shape["model"] == 0
+                and cfg.num_experts % mesh.shape["model"] == 0):
+            from repro.parallel import ep
+            f, balance = ep.moe_block_ep(p["moe"], cfg, h, mesh)
+        else:
+            f, balance = moe_lib.moe_block(p["moe"], cfg, h)
+    else:
+        f, balance = layers.mlp_block(p["mlp"], cfg, h), jnp.zeros((), jnp.float32)
+    if cfg.use_post_norm:
+        f = layers.rms_norm(f, p["post_ln2"], cfg.norm_eps)
+    return x + f, balance, kv
+
+
+def _group_apply(p_group, cfg: ModelConfig, x, positions, *, causal: bool,
+                 collect_kv: bool = False):
+    """Apply one scan group (gs sub-layers, static windows)."""
+    gs = _group_size(cfg)
+    balance = jnp.zeros((), jnp.float32)
+    kvs = []
+    for i in range(gs):
+        p_i = jax.tree.map(lambda a: a[i], p_group)
+        x, b, kv = _block_apply(p_i, cfg, x, positions, causal=causal,
+                                window=_layer_window(cfg, i),
+                                collect_kv=collect_kv)
+        balance = balance + b
+        kvs.append(kv)
+    return x, balance, kvs
+
+
+def embed_tokens(params, cfg: ModelConfig, tokens):
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.sqrt(jnp.asarray(cfg.d_model, cfg.compute_dtype))
+    return hints.hint(x, "batch", *([None] * (x.ndim - 1)))
+
+
+def embed_frames(params, cfg: ModelConfig, frames, mask=None):
+    """HuBERT frontend stub: precomputed frame embeddings + learned mask
+    token at masked positions, projected to d_model."""
+    if mask is not None:
+        me = params["frontend"]["mask_embed"].astype(frames.dtype)
+        frames = jnp.where(mask[..., None], me[None, None, :], frames)
+    return (frames @ params["frontend"]["proj"].astype(cfg.compute_dtype))
+
+
+def forward_with_aux(params, cfg: ModelConfig, batch: dict):
+    """Full-sequence forward -> (logits (B, T, V), {"balance": scalar}).
+
+    batch: {"tokens": (B, T)} for decoders / chameleon; {"frames": (B,T,F),
+    "mask": (B,T)} for hubert.
+    """
+    if cfg.input_mode == "frames":
+        x = embed_frames(params, cfg, batch["frames"].astype(cfg.compute_dtype),
+                         batch.get("mask"))
+        t = x.shape[1]
+    else:
+        x = embed_tokens(params, cfg, batch["tokens"])
+        t = batch["tokens"].shape[1]
+    positions = jnp.arange(t)
+    causal = cfg.kind == "decoder"
+
+    body = functools.partial(_group_apply, cfg=cfg, positions=positions,
+                             causal=causal)
+
+    def scan_body(carry, p_group):
+        x, bal = carry
+        # sequence-sharded at the layer boundary: this is the tensor the
+        # scan saves per layer for backward (Megatron SP — DESIGN.md §5)
+        x = hints.hint(x, "batch", "seq_act", None)
+        x, b, _ = body(p_group, x=x)
+        x = hints.hint(x, "batch", "seq_act", None)
+        return (x, bal + b), None
+
+    if cfg.remat == "layer":
+        scan_body = jax.checkpoint(scan_body,
+                                   policy=jax.checkpoint_policies.nothing_saveable)
+    elif cfg.remat == "dots":
+        scan_body = jax.checkpoint(
+            scan_body, policy=jax.checkpoint_policies.checkpoint_dots)
+
+    (x, balance), _ = jax.lax.scan(
+        scan_body, (x, jnp.zeros((), jnp.float32)), params["blocks"])
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params, cfg, x)
+    return logits, {"balance": balance}
+
+
+def unembed(params, cfg: ModelConfig, x):
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T.astype(cfg.compute_dtype)
+    else:
+        logits = x @ params["lm_head"].astype(cfg.compute_dtype)
+    return hints.hint(logits, "batch", *([None] * (x.ndim - 2)), "vocab")
+
+
+def forward(params, cfg: ModelConfig, batch: dict) -> jax.Array:
+    return forward_with_aux(params, cfg, batch)[0]
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, *,
+            balance_coef: float = 0.01):
+    """Next-token CE for decoders; masked-frame CE for encoders."""
+    if cfg.kind == "encoder":
+        logits, aux = forward_with_aux(params, cfg, batch)
+        loss = layers.softmax_cross_entropy(
+            logits, batch["targets"], mask=batch["mask"])
+    else:
+        tokens = batch["tokens"]
+        logits, aux = forward_with_aux(
+            params, cfg, {**batch, "tokens": tokens[:, :-1]})
+        loss = layers.softmax_cross_entropy(logits, tokens[:, 1:])
+    total = loss + balance_coef * aux["balance"]
+    return total, {"ce": loss, "balance": aux["balance"]}
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
+               dtype=jnp.bfloat16):
+    """Per-layer KV caches, stacked (ng, gs, ...) to scan with the params.
+
+    Local (sliding-window) layers allocate a ring buffer of ``window``
+    slots; global layers allocate ``max_len`` (or MCQ code storage under
+    cfg.kvq)."""
+    gs, ng = _group_size(cfg), _num_groups(cfg)
+    dh = cfg.dh
+    caches = []
+    for i in range(gs):
+        w = _layer_window(cfg, i)
+        s = min(w, max_len) if w else max_len
+        if cfg.kvq and w is None:
+            caches.append(kvq_lib.init_kvq_cache(cfg, ng, batch_size, s))
+        else:
+            shape = (ng, batch_size, s, cfg.num_kv_heads, dh)
+            caches.append({"k": jnp.zeros(shape, dtype),
+                           "v": jnp.zeros(shape, dtype)})
+    # stack over sub-layer axis -> pytree leaves (ng, gs_variant...) kept as
+    # a per-sub-layer list because shapes differ between local/global.
+    return caches
+
+
+def cache_logical_axes(cfg: ModelConfig, caches):
+    """Sharding annotation for the cache: sequence axis over 'model';
+    kvq codebooks ((ng, Hkv, M, K, d_sub)) are replicated serving constants."""
+    def annotate(path, leaf):
+        name = str(path[-1].key) if path else ""
+        if "books" in name:
+            return ("layers",) + (None,) * (leaf.ndim - 1)
+        # (ng, B, S, Hkv, dh) or kvq codes (ng, B, S, Hkv, M)
+        return ("layers", "batch", "kv_seq", None, None)[: leaf.ndim]
+    return jax.tree_util.tree_map_with_path(annotate, caches)
+
+
+def _decode_layer(p, cfg: ModelConfig, cache_i, x, pos, window):
+    """One layer of single-token decode. x: (B, d). Returns (x, new_cache)."""
+    b = x.shape[0]
+    dh = cfg.dh
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)[:, None, :]   # (B, 1, d)
+    positions = jnp.full((1,), pos)
+    q, k_new, v_new = layers.qkv_project(p["attn"], cfg, h, positions)
+    q = q[:, 0]                                                  # (B, H, dh)
+
+    if cfg.kvq and window is None:
+        out, new_cache = kvq_lib.decode_attention_kvq(
+            cfg, cache_i, q, k_new[:, 0], v_new[:, 0], pos)
+    else:
+        s = cache_i["k"].shape[1]
+        slot = pos % s if window else pos
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache_i["k"], k_new.astype(cache_i["k"].dtype), slot, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache_i["v"], v_new.astype(cache_i["v"].dtype), slot, axis=1)
+        # ring buffer: every slot < min(pos+1, S) is valid
+        valid_upto = jnp.minimum(pos, s - 1)
+        out = layers.decode_attention(q, k_cache, v_cache, valid_upto, dh)
+        new_cache = {"k": k_cache, "v": v_cache}
+
+    a = out.reshape(b, -1) @ p["attn"]["wo"].astype(cfg.compute_dtype)
+    if cfg.use_post_norm:
+        a = layers.rms_norm(a, p["post_ln1"], cfg.norm_eps)
+    x = x + a
+    h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.moe:
+        f, _ = moe_lib.moe_block(p["moe"], cfg, h[:, None, :])
+        f = f[:, 0]
+    else:
+        f = layers.mlp_block(p["mlp"], cfg, h)
+    if cfg.use_post_norm:
+        f = layers.rms_norm(f, p["post_ln2"], cfg.norm_eps)
+    return x + f, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, caches, tokens, pos):
+    """serve_step: one new token per sequence.
+
+    tokens: (B,) int32; pos: scalar int32 (current position, 0-based).
+    Returns (logits (B, V), new_caches).
+    """
+    x = embed_tokens(params, cfg, tokens[:, None])[:, 0]        # (B, d)
+    gs = _group_size(cfg)
+
+    def scan_body(x, xs):
+        p_group = xs[0]
+        cache_group = xs[1:]
+        new_caches = []
+        for i in range(gs):
+            p_i = jax.tree.map(lambda a: a[i], p_group)
+            x, nc = _decode_layer(p_i, cfg, cache_group[i], x, pos,
+                                  _layer_window(cfg, i))
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(scan_body, x, (params["blocks"], *caches))
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params, cfg, x)
+    return logits, list(new_caches)
+
+
+# ---------------------------------------------------------------------------
+# prefill (serve: process the prompt, emit last-token logits + decode cache)
+# ---------------------------------------------------------------------------
+
+def prefill(params, cfg: ModelConfig, batch: dict):
+    """Run the prompt through the stack, returning (last_logits (B, V),
+    caches) where caches match ``init_cache``'s layout (local layers keep
+    only the trailing ``window`` ring — aligned when T % window == 0)."""
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    x = embed_tokens(params, cfg, tokens)
+    positions = jnp.arange(t)
+    gs = _group_size(cfg)
+
+    def scan_body(x, p_group):
+        x, _, kvs = _group_apply(p_group, cfg, x, positions, causal=True,
+                                 collect_kv=True)
+        return x, tuple(kvs)
+
+    if cfg.remat == "layer":
+        scan_body = jax.checkpoint(
+            scan_body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, kv_stacks = jax.lax.scan(scan_body, x, params["blocks"])
+
+    caches = []
+    for i in range(gs):
+        k, v = kv_stacks[i]                     # (ng, B, T, Hkv, dh)
+        w = _layer_window(cfg, i)
+        if w and w < t:
+            k, v = k[:, :, -w:], v[:, :, -w:]   # ring-aligned iff t % w == 0
+        caches.append({"k": k, "v": v})
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    last_logits = unembed(params, cfg, x[:, -1])
+    return last_logits, caches

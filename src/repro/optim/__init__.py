@@ -1,0 +1,23 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adam,
+    adamw,
+    qhadam,
+    sgd,
+    clip_by_global_norm,
+    chain_clip,
+)
+from repro.optim.schedules import (
+    one_cycle,
+    cosine_decay,
+    linear_warmup_cosine,
+    constant,
+    linear_anneal,
+)
+
+__all__ = [
+    "Optimizer", "adam", "adamw", "qhadam", "sgd",
+    "clip_by_global_norm", "chain_clip",
+    "one_cycle", "cosine_decay", "linear_warmup_cosine", "constant",
+    "linear_anneal",
+]

@@ -1,0 +1,138 @@
+"""Pure-JAX pytree optimizers (optax is not available in this environment).
+
+An ``Optimizer`` is a pair of pure functions over arbitrary parameter
+pytrees, mirroring the optax GradientTransformation contract so the training
+loops compose with pjit (optimizer state shards exactly like the params):
+
+    state  = opt.init(params)
+    params, state = opt.apply(params, grads, state, lr)
+
+Implemented: SGD(+momentum), Adam, AdamW, and QHAdam (Quasi-Hyperbolic Adam,
+Ma & Yarats 2018) — the optimizer the UNQ paper trains with (§3.4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.pytree import global_norm
+
+Params = Any
+Grads = Any
+OptState = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Params], OptState]
+    apply: Callable[[Params, Grads, OptState, jax.Array], tuple[Params, OptState]]
+    name: str = "optimizer"
+
+
+def _zeros_like_f32(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def sgd(momentum: float = 0.0, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"mu": _zeros_like_f32(params), "count": jnp.zeros((), jnp.int32)}
+
+    def apply(params, grads, state, lr):
+        def upd(p, g, mu):
+            g = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+            mu = momentum * mu + g
+            return (p.astype(jnp.float32) - lr * mu).astype(p.dtype), mu
+
+        flat = jax.tree.map(upd, params, grads, state["mu"])
+        new_params = jax.tree.map(lambda t: t[0], flat,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"mu": new_mu, "count": state["count"] + 1}
+
+    return Optimizer(init, apply, "sgd")
+
+
+def _adam_family(b1: float, b2: float, eps: float, weight_decay: float,
+                 nu1: float | None, nu2: float | None, name: str,
+                 decay_mask: Callable[[str], bool] | None = None) -> Optimizer:
+    """Shared Adam/AdamW/QHAdam machinery.
+
+    nu1/nu2 None -> plain Adam update; otherwise the quasi-hyperbolic
+    interpolation between the raw gradient and the EMA (QHAdam):
+        num = (1 - nu1) * g + nu1 * m_hat
+        den = sqrt((1 - nu2) * g^2 + nu2 * v_hat) + eps
+    """
+
+    def init(params):
+        return {
+            "m": _zeros_like_f32(params),
+            "v": _zeros_like_f32(params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def apply(params, grads, state, lr):
+        count = state["count"] + 1
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            m_hat = m / c1
+            v_hat = v / c2
+            if nu1 is None:
+                num, den = m_hat, jnp.sqrt(v_hat) + eps
+            else:
+                num = (1 - nu1) * g + nu1 * m_hat
+                den = jnp.sqrt((1 - nu2) * jnp.square(g) + nu2 * v_hat) + eps
+            step = num / den
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        is_t = lambda t: isinstance(t, tuple)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=is_t)
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=is_t)
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=is_t)
+        return new_params, {"m": new_m, "v": new_v, "count": count}
+
+    return Optimizer(init, apply, name)
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    return _adam_family(b1, b2, eps, 0.0, None, None, "adam")
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    return _adam_family(b1, b2, eps, weight_decay, None, None, "adamw")
+
+
+def qhadam(nu1: float = 0.7, nu2: float = 1.0, b1: float = 0.995,
+           b2: float = 0.999, eps: float = 1e-8,
+           weight_decay: float = 0.0) -> Optimizer:
+    """Quasi-Hyperbolic Adam with the recommended defaults from the paper."""
+    return _adam_family(b1, b2, eps, weight_decay, nu1, nu2, "qhadam")
+
+
+def clip_by_global_norm(grads: Grads, max_norm: float) -> tuple[Grads, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+def chain_clip(opt: Optimizer, max_norm: float) -> Optimizer:
+    """Wrap an optimizer with global-norm gradient clipping."""
+
+    def apply(params, grads, state, lr):
+        grads, _ = clip_by_global_norm(grads, max_norm)
+        return opt.apply(params, grads, state, lr)
+
+    return Optimizer(opt.init, apply, f"{opt.name}+clip{max_norm}")

@@ -1,0 +1,59 @@
+"""Learning-rate / coefficient schedules as pure ``step -> value`` functions.
+
+Includes One-Cycle (Smith & Topin 2017), which the UNQ paper uses for fast
+convergence (§3.4), and the linear anneal used for the paper's beta
+coefficient (1.0 -> 0.05 over training).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def linear_anneal(start: float, end: float, total_steps: int):
+    """Paper's beta schedule: linear from ``start`` to ``end``."""
+
+    def fn(step):
+        frac = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        return jnp.asarray(start + (end - start) * frac, jnp.float32)
+
+    return fn
+
+
+def one_cycle(max_lr: float, total_steps: int, pct_start: float = 0.3,
+              div_factor: float = 25.0, final_div_factor: float = 1e4):
+    """One-Cycle LR: cosine ramp lr0 -> max_lr over ``pct_start`` of training,
+    then cosine anneal max_lr -> max_lr / final_div_factor."""
+    lr0 = max_lr / div_factor
+    lr_end = max_lr / final_div_factor
+    up = max(int(total_steps * pct_start), 1)
+    down = max(total_steps - up, 1)
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        frac_up = jnp.clip(step / up, 0.0, 1.0)
+        lr_up = lr0 + (max_lr - lr0) * 0.5 * (1 - jnp.cos(jnp.pi * frac_up))
+        frac_dn = jnp.clip((step - up) / down, 0.0, 1.0)
+        lr_dn = lr_end + (max_lr - lr_end) * 0.5 * (1 + jnp.cos(jnp.pi * frac_dn))
+        return jnp.where(step < up, lr_up, lr_dn).astype(jnp.float32)
+
+    return fn
+
+
+def cosine_decay(max_lr: float, total_steps: int, warmup: int = 0,
+                 min_lr: float = 0.0):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = max_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        cos = min_lr + (max_lr - min_lr) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos).astype(jnp.float32)
+
+    return fn
+
+
+def linear_warmup_cosine(max_lr: float, total_steps: int, warmup: int):
+    return cosine_decay(max_lr, total_steps, warmup=warmup)

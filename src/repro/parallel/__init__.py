@@ -1,0 +1,10 @@
+from repro.parallel.sharding import (
+    RULES_SINGLE_POD,
+    RULES_MULTI_POD,
+    partition_spec,
+    params_pspecs,
+    batch_pspec,
+)
+
+__all__ = ["RULES_SINGLE_POD", "RULES_MULTI_POD", "partition_spec",
+           "params_pspecs", "batch_pspec"]

@@ -1,0 +1,86 @@
+"""Activation sharding hints (with_sharding_constraint anchors).
+
+GSPMD propagates shardings from inputs/outputs, but inside a deep scanned
+body it can pick flop-equivalent-but-communication-heavy layouts (e.g.
+token-replicated contraction sharding) or pad small head axes up to the
+mesh. The model code therefore drops logical-axis *hints* at the canonical
+anchor points (embeddings, q/k/v, attention scores, MLP hidden, MoE
+buffers, logits), resolved against the active rules + mesh.
+
+Outside a mesh context (unit tests, single-device runs) hints are no-ops.
+Axes that do not divide the corresponding mesh axis are dropped from the
+hint rather than padded.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "activation_sharding", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(rules: dict, mesh: Mesh):
+    token = _CTX.set((rules, mesh))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+@contextlib.contextmanager
+def disabled():
+    """No-op hints (required inside shard_map bodies, where
+    with_sharding_constraint on manual axes is disallowed)."""
+    token = _CTX.set(None)
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def current_mesh() -> Mesh | None:
+    """The mesh of the active activation_sharding context (None outside)."""
+    ctx = _CTX.get()
+    return ctx[1] if ctx else None
+
+
+def current_rules() -> dict | None:
+    ctx = _CTX.get()
+    return ctx[0] if ctx else None
+
+
+def _mesh_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def hint(x: jax.Array, *logical_axes) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axes; no-op without context."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    rules, mesh = ctx
+    spec = []
+    for i, ax in enumerate(logical_axes):
+        mesh_ax = rules.get(ax) if ax is not None else None
+        if mesh_ax is None:
+            spec.append(None)
+            continue
+        if x.shape[i] % _mesh_size(mesh, mesh_ax) != 0:
+            spec.append(None)         # drop instead of padding
+            continue
+        spec.append(mesh_ax)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,126 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Every model family annotates its params with *logical* axes
+(``logical_axes(cfg)``); a rules table maps logical -> mesh axes and
+``params_pspecs`` materializes ``PartitionSpec`` pytrees for pjit.
+
+Mesh axes:
+  pod    — pure data parallelism across pods (cross-DCI gradient reduce)
+  data   — FSDP: batch sharding + parameter/optimizer-state sharding
+  model  — tensor parallelism: attention heads / FFN hidden / MoE experts /
+           vocab; KV-cache sequence axis during decode (sequence
+           parallelism for the cache scan)
+
+Rules (single pod):
+  embed      -> data    (FSDP shard of the model dimension)
+  heads/ffn/
+  kv_heads   -> model   (megatron TP)
+  experts    -> model   (expert parallelism)
+  vocab      -> model   (sharded embedding/logits; softmax reduces over it)
+  rnn        -> model   (RG-LRU / rwkv channel dim)
+  layers/sub -> None    (scanned)
+  batch      -> data (+pod)
+  kv_seq     -> model   (decode cache sequence parallelism)
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+RULES_SINGLE_POD: dict[str | None, Any] = {
+    "embed": "data",
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "ffn": "model",
+    "experts": "model",
+    "rnn": "model",
+    "layers": None,
+    "sub": None,
+    "batch": "data",
+    "kv_seq": "model",
+    # Megatron-style sequence parallelism for the residual stream at layer
+    # boundaries: the per-layer activations saved for backward shard their
+    # sequence axis over "model" (16x smaller saved stacks); attention/MLP
+    # internals re-gather as needed.
+    "seq_act": "model",
+    None: None,
+}
+
+# multi-pod: identical placement inside each pod; params replicated across
+# the pod axis (pure DP), batch additionally split across pods.
+RULES_MULTI_POD = dict(RULES_SINGLE_POD)
+RULES_MULTI_POD["batch"] = ("pod", "data")
+
+
+def partition_spec(axes: tuple, rules: dict) -> P:
+    """Map one logical-axis tuple to a PartitionSpec.
+
+    A mesh axis may appear at most once per spec; on conflicts the first
+    (leftmost) logical axis keeps it (e.g. MoE expert weights
+    ("experts","embed","ffn") -> ("model","data",None): the expert axis
+    claims "model", so the per-expert ffn dim stays unsharded)."""
+    used: set = set()
+    out = []
+    for a in axes:
+        mesh_ax = rules.get(a, None)
+        flat = (tuple(mesh_ax) if isinstance(mesh_ax, (tuple, list))
+                else (mesh_ax,)) if mesh_ax is not None else ()
+        if mesh_ax is None or any(m in used for m in flat):
+            out.append(None)
+        else:
+            used.update(flat)
+            out.append(mesh_ax)
+    return P(*out)
+
+
+def params_pspecs(logical: Any, rules: dict) -> Any:
+    """Pytree of logical-axis tuples -> pytree of PartitionSpec."""
+    return jax.tree.map(lambda ax: partition_spec(ax, rules), logical,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def _mesh_axis_size(mesh, axis) -> int:
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def params_pspecs_shaped(logical: Any, struct: Any, rules: dict, mesh) -> Any:
+    """Shape-aware variant: mesh axes that do not evenly divide the
+    corresponding dimension are dropped (e.g. hubert's 504-way vocab head
+    on a 16-way model axis stays replicated instead of erroring)."""
+
+    def spec(axes, leaf):
+        base = partition_spec(axes, rules)
+        out = []
+        for i, mesh_ax in enumerate(base):
+            if mesh_ax is None or i >= len(leaf.shape):
+                out.append(None)
+                continue
+            if leaf.shape[i] % _mesh_axis_size(mesh, mesh_ax) != 0:
+                out.append(None)
+            else:
+                out.append(mesh_ax)
+        return P(*out)
+
+    return jax.tree.map(spec, logical, struct,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def batch_pspec(batch_tree: Any, rules: dict) -> Any:
+    """Shard every batch leaf on its leading (batch) axis."""
+    def spec(leaf):
+        b = rules["batch"]
+        return P(b, *([None] * (leaf.ndim - 1)))
+    return jax.tree.map(spec, batch_tree)
+
+
+def shardings(mesh: Mesh, pspecs: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))

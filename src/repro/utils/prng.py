@@ -1,0 +1,28 @@
+"""Deterministic PRNG-key sequencing."""
+from __future__ import annotations
+
+import jax
+
+
+class PRNGSeq:
+    """An infinite, deterministic sequence of PRNG keys.
+
+    >>> keys = PRNGSeq(0)
+    >>> k1, k2 = next(keys), next(keys)
+    """
+
+    def __init__(self, seed_or_key):
+        if isinstance(seed_or_key, int):
+            self._key = jax.random.PRNGKey(seed_or_key)
+        else:
+            self._key = seed_or_key
+
+    def __next__(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def __iter__(self):
+        return self
+
+    def take(self, n: int):
+        return [next(self) for _ in range(n)]

@@ -1,0 +1,83 @@
+"""Pytree utilities shared across the framework.
+
+Pure-JAX (no flax/optax available in this environment), so all parameter
+containers in repro are plain nested dicts of jnp arrays and these helpers are
+the substrate every other subsystem builds on.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_flatten_with_names(tree: Any) -> list[tuple[str, Any]]:
+    """Flatten a pytree to ``[("a/b/0/c", leaf), ...]`` with stable paths.
+
+    Paths use '/' separators and work for dicts, lists, tuples and dataclass
+    pytrees. Used by checkpointing (manifest keys) and debugging.
+    """
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        parts = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                parts.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                parts.append(str(p.idx))
+            elif isinstance(p, jax.tree_util.GetAttrKey):
+                parts.append(str(p.name))
+            else:  # FlattenedIndexKey and anything exotic
+                parts.append(str(getattr(p, "key", p)))
+        out.append(("/".join(parts), leaf))
+    return out
+
+
+def param_count(tree: Any) -> int:
+    """Total number of elements across all leaves."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def param_bytes(tree: Any) -> int:
+    """Total bytes across all leaves (uses each leaf's dtype)."""
+    total = 0
+    for x in jax.tree_util.tree_leaves(tree):
+        total += int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+    return total
+
+
+def global_norm(tree: Any) -> jax.Array:
+    """L2 norm over all leaves (float32 accumulation)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros((), jnp.float32)
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    return jnp.sqrt(sq)
+
+
+def tree_zeros_like(tree: Any, dtype=None) -> Any:
+    return jax.tree.map(
+        lambda x: jnp.zeros(x.shape, dtype or x.dtype), tree
+    )
+
+
+def tree_cast(tree: Any, dtype) -> Any:
+    """Cast floating-point leaves to ``dtype``; leave integer leaves alone."""
+
+    def _cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree.map(_cast, tree)
+
+
+def tree_map_with_names(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """Map ``fn(path, leaf)`` over a pytree, preserving structure."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    named = tree_flatten_with_names(tree)
+    new_leaves = [fn(name, leaf) for (name, leaf) in named]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

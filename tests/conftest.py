@@ -1,0 +1,31 @@
+import jax
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here on purpose — unit tests/benches must see the real
+# single CPU device; only launch/dryrun.py forces 512 host devices, and the
+# multi-device tests spawn subprocesses with their own flags.
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def tiny_dataset():
+    from repro.data.descriptors import make_synthetic_dataset
+    return make_synthetic_dataset("deep", n_train=1500, n_base=4000,
+                                  n_query=150, n_centers=64, seed=0)
+
+
+@pytest.fixture(scope="session")
+def tiny_unq(tiny_dataset):
+    """A small UNQ model trained for a couple of epochs (shared by search /
+    integration tests; quality asserted loosely, mechanics strictly)."""
+    import jax.numpy as jnp
+    from repro.core import unq, training
+
+    cfg = unq.UNQConfig(dim=96, num_codebooks=8, codebook_size=64,
+                        code_dim=32, hidden_dim=96)
+    tcfg = training.TrainConfig(epochs=20, batch_size=256, lr=5e-3,
+                                log_every=10)
+    params, state, history = training.train_unq(tiny_dataset, cfg, tcfg)
+    return cfg, params, state, history

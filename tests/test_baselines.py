@@ -1,0 +1,96 @@
+"""Shallow MCQ baselines: k-means, PQ, OPQ, RVQ (paper's comparison set)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines as bl
+from repro.core.search import recall_at_k
+from repro.data.descriptors import exact_knn
+
+
+@pytest.fixture(scope="module")
+def data(tiny_dataset):
+    return (jnp.asarray(tiny_dataset.train), jnp.asarray(tiny_dataset.base),
+            jnp.asarray(tiny_dataset.queries),
+            jnp.asarray(tiny_dataset.gt_nn))
+
+
+def _distortion(x, recon):
+    return float(jnp.mean(jnp.sum(jnp.square(x - recon), axis=-1)))
+
+
+def test_kmeans_reduces_distortion(data):
+    train, *_ = data
+    key = jax.random.PRNGKey(0)
+    x = train[:800]
+    c1 = bl.kmeans(key, x, 16, iters=1)
+    c25 = bl.kmeans(key, x, 16, iters=25)
+    d1 = _distortion(x, c1[bl._assign(x, c1)])
+    d25 = _distortion(x, c25[bl._assign(x, c25)])
+    assert d25 <= d1 * 1.01
+
+
+def test_pq_roundtrip_and_recall(data):
+    train, base, queries, gt = data
+    model = bl.train_pq(jax.random.PRNGKey(0), train, num_books=8,
+                        book_size=32, iters=8)
+    codes = model.encode(base)
+    assert codes.shape == (base.shape[0], 8) and codes.dtype == jnp.uint8
+    dist = _distortion(base, model.decode(codes))
+    base_var = _distortion(base, jnp.mean(base, 0, keepdims=True))
+    assert dist < base_var * 0.9          # better than the mean predictor
+    got = bl.search_pq(model, queries[:100], codes, topk=100)
+    rec = recall_at_k(got, gt[:100])
+    assert rec["recall@100"] > 0.3, rec   # far above random (100/4000)
+
+
+def test_opq_rotation_is_orthogonal_and_helps(data):
+    train, base, queries, gt = data
+    key = jax.random.PRNGKey(1)
+    pq = bl.train_pq(key, train, num_books=4, book_size=32, iters=8)
+    opq = bl.train_opq(key, train, num_books=4, book_size=32,
+                       outer_iters=4, kmeans_iters=6)
+    r = np.asarray(opq.rotation)
+    np.testing.assert_allclose(r @ r.T, np.eye(r.shape[0]), atol=1e-4)
+    d_pq = _distortion(train, pq.decode(pq.encode(train)))
+    d_opq = _distortion(train, opq.decode(opq.encode(train)))
+    assert d_opq <= d_pq * 1.05           # OPQ >= PQ (allow tie + noise)
+
+
+def test_rvq_distortion_decreases_with_depth(data):
+    train, *_ = data
+    key = jax.random.PRNGKey(2)
+    prev = None
+    for m in (1, 2, 4):
+        model = bl.train_rvq(key, train, num_books=m, book_size=32, iters=8)
+        d = _distortion(train, model.decode(model.encode(train)))
+        if prev is not None:
+            assert d <= prev * 1.01, (m, d, prev)
+        prev = d
+
+
+def test_rvq_adc_search_matches_decoded_distances(data):
+    """ADC-with-norms must rank identically to exact reconstruction dists."""
+    train, base, queries, _ = data
+    model = bl.train_rvq(jax.random.PRNGKey(3), train[:600], num_books=4,
+                         book_size=16, iters=6)
+    codes = model.encode(base[:500])
+    recon = model.decode(codes)
+    norms = jnp.sum(recon * recon, axis=-1)
+    got = bl.search_rvq(model, queries[:10], codes, norms, topk=20)
+    for i in range(10):
+        d_exact = jnp.sum(jnp.square(recon - queries[i]), axis=-1)
+        want = np.asarray(jax.lax.top_k(-d_exact, 20)[1])
+        assert set(np.asarray(got[i]).tolist()) == set(want.tolist())
+
+
+def test_rerank_decoder_reduces_reconstruction_error(data):
+    train, *_ = data
+    model = bl.train_pq(jax.random.PRNGKey(4), train, num_books=4,
+                        book_size=16, iters=6)
+    recon = model.decode(model.encode(train))
+    params, apply_fn = bl.train_rerank_decoder(
+        jax.random.PRNGKey(5), recon, train, hidden=128, steps=1000)
+    improved = apply_fn(params, recon)
+    assert _distortion(train, improved) < _distortion(train, recon)

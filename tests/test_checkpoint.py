@@ -1,0 +1,81 @@
+"""Checkpoint manager: roundtrip, atomicity, retention, elastic restore."""
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "a": jax.random.normal(k, (4, 3)),
+        "nested": {"b": jnp.arange(7, dtype=jnp.int32),
+                   "c": [jnp.ones((2,)), jnp.zeros((1,), jnp.bfloat16)]},
+    }
+
+
+def test_roundtrip(tmp_path):
+    tree = _tree()
+    save_pytree(tmp_path / "ck", tree, step=5, metadata={"foo": 1})
+    restored, manifest = load_pytree(tmp_path / "ck", tree)
+    assert manifest["step"] == 5 and manifest["metadata"]["foo"] == 1
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+
+
+def test_structure_mismatch_fails_loudly(tmp_path):
+    save_pytree(tmp_path / "ck", _tree())
+    other = {"a": jnp.zeros((4, 3)), "renamed": jnp.zeros((7,))}
+    with pytest.raises(ValueError, match="structure mismatch"):
+        load_pytree(tmp_path / "ck", other)
+
+
+def test_no_tmp_left_behind_and_overwrite(tmp_path):
+    save_pytree(tmp_path / "ck", _tree(0))
+    save_pytree(tmp_path / "ck", _tree(1), step=2)
+    assert not (tmp_path / "ck.tmp").exists()
+    _, manifest = load_pytree(tmp_path / "ck", _tree())
+    assert manifest["step"] == 2
+
+
+def test_manager_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 5, 9, 12):
+        mgr.save(s, _tree(s))
+    assert mgr.all_steps() == [9, 12]
+    assert mgr.latest_step() == 12
+
+
+def test_manager_ignores_corrupt_dirs(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save(3, _tree())
+    (tmp_path / "step_0000000099").mkdir()      # no manifest -> ignored
+    assert mgr.latest_step() == 3
+    restored = mgr.restore_latest(_tree())
+    assert restored is not None
+
+
+def test_async_save_then_restore(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    tree = _tree(7)
+    mgr.save(4, tree, blocking=False)
+    mgr.wait()
+    restored, manifest = mgr.restore_latest(_tree())
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+
+
+def test_restore_with_shapedtypestruct_skeleton(tmp_path):
+    tree = _tree(3)
+    save_pytree(tmp_path / "ck", tree, step=1)
+    skeleton = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    restored, _ = load_pytree(tmp_path / "ck", skeleton)
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))

@@ -1,0 +1,119 @@
+"""HLO analyzer: scan-scaled flops/bytes/collectives (the roofline source)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import hlo
+
+
+def test_scan_flops_scale_with_trip_count():
+    def f(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        return jax.lax.scan(body, x, w)[0]
+
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+
+    def flops(n_layers):
+        w = jax.ShapeDtypeStruct((n_layers, 128, 128), jnp.float32)
+        text = jax.jit(f).lower(x, w).compile().as_text()
+        return hlo.executed_cost(text)["flops"]
+
+    per_layer = 2 * 64 * 128 * 128
+    np.testing.assert_allclose(flops(4), 4 * per_layer, rtol=1e-6)
+    np.testing.assert_allclose(flops(16), 16 * per_layer, rtol=1e-6)
+
+
+def test_nested_scan_flops():
+    def f(x, w):
+        def outer(c, wi):
+            def inner(ci, _):
+                return jnp.tanh(ci @ wi), None
+            return jax.lax.scan(inner, c, None, length=3)[0], None
+        return jax.lax.scan(outer, x, w)[0]
+
+    x = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((5, 64, 64), jnp.float32)
+    text = jax.jit(f).lower(x, w).compile().as_text()
+    got = hlo.executed_cost(text)["flops"]
+    np.testing.assert_allclose(got, 5 * 3 * 2 * 32 * 64 * 64, rtol=1e-6)
+
+
+def test_collective_bytes_parsed_from_handcrafted_hlo():
+    text = """
+HloModule test
+
+ENTRY %main (p0: f32[16,128]) -> f32[16,128] {
+  %p0 = f32[16,128]{1,0} parameter(0)
+  %ag = f32[64,128]{1,0} all-gather(%p0), replica_groups={}, dimensions={0}
+  %ar = f32[16,128]{1,0} all-reduce(%p0), to_apply=%add
+  %rs = f32[4,128]{1,0} reduce-scatter(%p0), to_apply=%add
+  ROOT %out = f32[16,128]{1,0} add(%ar, %ar)
+}
+"""
+    stats = hlo.collective_bytes(text)
+    assert stats["per_kind_bytes"]["all-gather"] == 64 * 128 * 4
+    assert stats["per_kind_bytes"]["all-reduce"] == 16 * 128 * 4
+    assert stats["per_kind_bytes"]["reduce-scatter"] == 4 * 128 * 4
+    assert stats["counts"]["all-gather"] == 1
+
+
+def test_collectives_inside_while_scale():
+    text = """
+HloModule test
+
+%body (arg: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %arg = (s32[], f32[8,8]{1,0}) parameter(0)
+  %gte = f32[8,8]{1,0} get-tuple-element(%arg), index=1
+  %ar = f32[8,8]{1,0} all-reduce(%gte), to_apply=%add
+  ROOT %t = (s32[], f32[8,8]{1,0}) tuple(%gte, %ar)
+}
+
+%cond (arg: (s32[], f32[8,8])) -> pred[] {
+  %arg = (s32[], f32[8,8]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %c = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (p: f32[8,8]) -> f32[8,8] {
+  %p = f32[8,8]{1,0} parameter(0)
+  %init = (s32[], f32[8,8]{1,0}) tuple(%p, %p)
+  %w = (s32[], f32[8,8]{1,0}) while(%init), condition=%cond, body=%body
+  ROOT %r = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+    stats = hlo.collective_bytes(text)
+    assert stats["per_kind_bytes"]["all-reduce"] == 7 * 8 * 8 * 4
+    assert stats["counts"]["all-reduce"] == 7
+
+
+def test_dtype_bytes_table():
+    text = """
+HloModule t
+
+ENTRY %main (p: bf16[4,4]) -> bf16[4,4] {
+  %p = bf16[4,4]{1,0} parameter(0)
+  ROOT %ag = bf16[8,4]{1,0} all-gather(%p), dimensions={0}
+}
+"""
+    stats = hlo.collective_bytes(text)
+    assert stats["per_kind_bytes"]["all-gather"] == 8 * 4 * 2
+
+
+def test_bytes_scale_with_scan():
+    def f(x, w):
+        def body(c, wi):
+            return c * wi, None
+        return jax.lax.scan(body, x, w)[0]
+
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+
+    def nbytes(n):
+        w = jax.ShapeDtypeStruct((n, 256, 256), jnp.float32)
+        text = jax.jit(f).lower(x, w).compile().as_text()
+        return hlo.executed_cost(text)["bytes"]
+
+    b4, b16 = nbytes(4), nbytes(16)
+    assert 3.2 < b16 / b4 < 4.3   # ~linear in trip count

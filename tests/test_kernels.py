@@ -1,0 +1,124 @@
+"""Per-kernel validation: Pallas (interpret mode on CPU) vs pure-jnp oracle,
+swept over shapes/dtypes, plus hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n", [1, 7, 256, 1024, 2500])
+@pytest.mark.parametrize("m,k", [(8, 256), (16, 256), (4, 64)])
+@pytest.mark.parametrize("code_dtype", [jnp.uint8, jnp.int32])
+def test_adc_scan_matches_oracle(n, m, k, code_dtype):
+    rng = np.random.default_rng(n * m)
+    codes = jnp.asarray(rng.integers(0, k, (n, m)), code_dtype)
+    lut = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    want = ref.adc_scan_ref(codes, lut)
+    for impl in ("pallas", "onehot"):
+        got = ops.adc_scan(codes, lut, impl=impl)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b", [1, 64, 300])
+@pytest.mark.parametrize("m,k,d", [(8, 256, 64), (4, 32, 16)])
+def test_unq_encode_matches_oracle(b, m, k, d):
+    rng = np.random.default_rng(b + m)
+    heads = jnp.asarray(rng.normal(size=(b, m, d)), jnp.float32)
+    books = jnp.asarray(rng.normal(size=(m, k, d)), jnp.float32)
+    want = ref.unq_encode_ref(heads, books)
+    got = ops.unq_encode(heads, books, impl="pallas")
+    np.testing.assert_array_equal(got, want)
+
+
+def test_adc_scan_block_size_invariance():
+    rng = np.random.default_rng(0)
+    codes = jnp.asarray(rng.integers(0, 256, (2048, 8)), jnp.uint8)
+    lut = jnp.asarray(rng.normal(size=(8, 256)), jnp.float32)
+    a = ops.adc_scan(codes, lut, impl="pallas", block_n=256)
+    b = ops.adc_scan(codes, lut, impl="pallas", block_n=1024)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 300),
+    m=st.integers(1, 16),
+    k=st.sampled_from([16, 64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_adc_scan_property(n, m, k, seed):
+    """Property: scores equal the sum of per-codebook table entries, and
+    shifting one LUT row by a constant shifts every score by the same."""
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, k, (n, m)), jnp.uint8)
+    lut = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    base = np.asarray(ops.adc_scan(codes, lut, impl="pallas"))
+    manual = np.take_along_axis(
+        np.asarray(lut), np.asarray(codes, np.int64).T, axis=1).sum(0)
+    np.testing.assert_allclose(base, manual, rtol=1e-4, atol=1e-4)
+    shifted = np.asarray(ops.adc_scan(codes, lut + 1.0, impl="pallas"))
+    np.testing.assert_allclose(shifted - base, np.full(n, float(m)),
+                               rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.integers(1, 64), seed=st.integers(0, 2**31 - 1))
+def test_unq_encode_argmax_property(b, seed):
+    """codes[b,m] must maximize the dot product within codebook m."""
+    rng = np.random.default_rng(seed)
+    m, k, d = 4, 16, 8
+    heads = jnp.asarray(rng.normal(size=(b, m, d)), jnp.float32)
+    books = jnp.asarray(rng.normal(size=(m, k, d)), jnp.float32)
+    codes = np.asarray(ops.unq_encode(heads, books, impl="pallas"))
+    scores = np.einsum("bmd,mkd->bmk", np.asarray(heads), np.asarray(books))
+    np.testing.assert_array_equal(codes, scores.argmax(-1))
+
+
+def test_kv_adc_attention_exact_when_lossless():
+    """If every key/value lies exactly on a codeword, compressed-domain
+    attention must equal dense attention."""
+    rng = np.random.default_rng(0)
+    h, m, k, d_sub, s = 2, 4, 8, 4, 24
+    d = m * d_sub
+    k_books = jnp.asarray(rng.normal(size=(h, m, k, d_sub)), jnp.float32)
+    v_books = jnp.asarray(rng.normal(size=(h, m, k, d_sub)), jnp.float32)
+    k_codes = jnp.asarray(rng.integers(0, k, (s, h, m)), jnp.int32)
+    v_codes = jnp.asarray(rng.integers(0, k, (s, h, m)), jnp.int32)
+
+    def decode(codes, books):
+        m_idx = np.arange(m)
+        # per head: (s, m, d_sub) -> (s, d)
+        out = np.stack([
+            np.asarray(books)[hh, m_idx][
+                np.arange(m)[None, :], np.asarray(codes)[:, hh]]
+            for hh in range(h)], axis=1)
+        return out.reshape(s, h, d)
+
+    keys = decode(k_codes, k_books)
+    vals = decode(v_codes, v_books)
+    q = jnp.asarray(rng.normal(size=(h, d)), jnp.float32)
+
+    got = ops.kv_adc_attention(q, k_codes, v_codes, k_books, v_books)
+    logits = np.einsum("hd,shd->sh", np.asarray(q), keys) / np.sqrt(d)
+    w = np.exp(logits - logits.max(0))
+    w = w / w.sum(0)
+    want = np.einsum("sh,shd->hd", w, vals)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+
+
+def test_kv_adc_attention_respects_length_mask():
+    rng = np.random.default_rng(1)
+    h, m, k, d_sub, s = 1, 2, 4, 2, 10
+    d = m * d_sub
+    books = jnp.asarray(rng.normal(size=(h, m, k, d_sub)), jnp.float32)
+    codes = jnp.asarray(rng.integers(0, k, (s, h, m)), jnp.int32)
+    q = jnp.asarray(rng.normal(size=(h, d)), jnp.float32)
+    full = ops.kv_adc_attention(q, codes, codes, books, books, length=5)
+    # changing codes beyond the mask must not change the output
+    codes2 = codes.at[7:].set((codes[7:] + 1) % k)
+    masked = ops.kv_adc_attention(q, codes2, codes2, books, books, length=5)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(masked),
+                               rtol=1e-5, atol=1e-5)

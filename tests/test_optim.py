@@ -1,0 +1,116 @@
+"""Optimizer math vs independent numpy references + schedule shapes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+
+
+def _run_steps(opt, x0, grads, lrs):
+    params = {"x": jnp.asarray(x0)}
+    state = opt.init(params)
+    for g, lr in zip(grads, lrs):
+        params, state = opt.apply(params, {"x": jnp.asarray(g)}, state,
+                                  jnp.asarray(lr))
+    return np.asarray(params["x"])
+
+
+def test_adam_matches_numpy_reference():
+    rng = np.random.default_rng(0)
+    x0 = rng.normal(size=(5,)).astype(np.float32)
+    grads = [rng.normal(size=(5,)).astype(np.float32) for _ in range(7)]
+    got = _run_steps(optim.adam(), x0, grads, [1e-2] * 7)
+
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    m = np.zeros(5)
+    v = np.zeros(5)
+    x = x0.astype(np.float64).copy()
+    for t, g in enumerate(grads, 1):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / (1 - b1 ** t)
+        vh = v / (1 - b2 ** t)
+        x -= 1e-2 * mh / (np.sqrt(vh) + eps)
+    np.testing.assert_allclose(got, x, rtol=1e-5, atol=1e-6)
+
+
+def test_qhadam_matches_numpy_reference():
+    """QHAdam (Ma & Yarats 2018): update interpolates raw grad and EMA."""
+    rng = np.random.default_rng(1)
+    x0 = rng.normal(size=(4,)).astype(np.float32)
+    grads = [rng.normal(size=(4,)).astype(np.float32) for _ in range(5)]
+    nu1, nu2, b1, b2, eps = 0.7, 1.0, 0.995, 0.999, 1e-8
+    got = _run_steps(optim.qhadam(), x0, grads, [1e-2] * 5)
+
+    m = np.zeros(4)
+    v = np.zeros(4)
+    x = x0.astype(np.float64).copy()
+    for t, g in enumerate(grads, 1):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / (1 - b1 ** t)
+        vh = v / (1 - b2 ** t)
+        num = (1 - nu1) * g + nu1 * mh
+        den = np.sqrt((1 - nu2) * g * g + nu2 * vh) + eps
+        x -= 1e-2 * num / den
+    np.testing.assert_allclose(got, x, rtol=1e-5, atol=1e-6)
+
+
+def test_qhadam_nu1_1_equals_adam_with_matching_betas():
+    rng = np.random.default_rng(2)
+    x0 = rng.normal(size=(3,)).astype(np.float32)
+    grads = [rng.normal(size=(3,)).astype(np.float32) for _ in range(4)]
+    qh = _run_steps(optim.qhadam(nu1=1.0, nu2=1.0, b1=0.9, b2=0.999),
+                    x0, grads, [1e-3] * 4)
+    ad = _run_steps(optim.adam(b1=0.9, b2=0.999), x0, grads, [1e-3] * 4)
+    np.testing.assert_allclose(qh, ad, rtol=1e-6)
+
+
+def test_sgd_momentum():
+    x0 = np.array([1.0], np.float32)
+    got = _run_steps(optim.sgd(momentum=0.9), x0,
+                     [np.array([1.0], np.float32)] * 3, [0.1] * 3)
+    # mu: 1, 1.9, 2.71; x: 1 - .1*(1+1.9+2.71)
+    np.testing.assert_allclose(got, [1 - 0.1 * (1 + 1.9 + 2.71)], rtol=1e-6)
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.asarray([3.0, 4.0])}       # norm 5
+    clipped, norm = optim.clip_by_global_norm(grads, 1.0)
+    np.testing.assert_allclose(float(norm), 5.0, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(clipped["a"]), [0.6, 0.8],
+                               rtol=1e-5)
+    same, _ = optim.clip_by_global_norm(grads, 10.0)
+    np.testing.assert_allclose(np.asarray(same["a"]), [3.0, 4.0], rtol=1e-6)
+
+
+def test_one_cycle_schedule_shape():
+    fn = optim.one_cycle(1.0, 100, pct_start=0.3, div_factor=10,
+                         final_div_factor=100)
+    lrs = np.array([float(fn(s)) for s in range(101)])
+    assert abs(lrs[0] - 0.1) < 1e-6
+    assert abs(lrs.max() - 1.0) < 1e-3
+    assert np.argmax(lrs) == 30
+    assert lrs[-1] <= 0.0101
+    # monotone up then down
+    assert (np.diff(lrs[:30]) >= -1e-9).all()
+    assert (np.diff(lrs[31:]) <= 1e-9).all()
+
+
+def test_linear_anneal_matches_paper_beta():
+    fn = optim.linear_anneal(1.0, 0.05, 200)
+    assert abs(float(fn(0)) - 1.0) < 1e-6
+    assert abs(float(fn(100)) - 0.525) < 1e-6
+    assert abs(float(fn(200)) - 0.05) < 1e-6
+    assert abs(float(fn(400)) - 0.05) < 1e-6   # clamped
+
+
+def test_optimizer_state_is_f32_regardless_of_param_dtype():
+    opt = optim.adamw()
+    params = {"w": jnp.zeros((3,), jnp.bfloat16)}
+    state = opt.init(params)
+    assert state["m"]["w"].dtype == jnp.float32
+    new_params, _ = opt.apply(params, {"w": jnp.ones((3,), jnp.bfloat16)},
+                              state, 1e-2)
+    assert new_params["w"].dtype == jnp.bfloat16
