@@ -10,10 +10,16 @@
   no-hard              — soft Gumbel (no ST discretization) during training
   no-gumbel            — deterministic softmax relaxation (no Gumbel noise)
   no-regularizer       — beta = 0
+
+The search-stage ablations are now just ``Index.search`` flags
+(``use_rerank`` / ``use_d2``).
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
+
 from benchmarks import common
+from repro.core.search import recall_at_k
 
 
 def run(scale: str = "default", kind: str = "sift", num_books: int = 8):
@@ -21,8 +27,8 @@ def run(scale: str = "default", kind: str = "sift", num_books: int = 8):
 
     variants = {
         "unq": dict(),
-        "exhaustive-rerank": dict(search_overrides=dict()),
-        "no-rerank": dict(search_overrides=dict()),
+        "exhaustive-rerank": dict(search_kw=dict(use_d2=False)),
+        "no-rerank": dict(search_kw=dict(use_rerank=False)),
         "no-triplet": dict(tcfg_overrides=dict(alpha=0.0)),
         "triplet-only": dict(tcfg_overrides=dict(alpha=1.0)),
         "no-hard": dict(tcfg_overrides=dict(hard_gumbel=False)),
@@ -30,20 +36,13 @@ def run(scale: str = "default", kind: str = "sift", num_books: int = 8):
         "no-regularizer": dict(tcfg_overrides=dict(use_regularizer=False)),
     }
 
-    import jax.numpy as jnp
-    from repro.core import search
-
     for name, kw in variants.items():
-        rec, enc_us, search_us, (params, state, cfg, codes) = common.run_unq(
+        rec, enc_us, search_us, index = common.run_unq(
             ds, num_books, scale, tcfg_overrides=kw.get("tcfg_overrides"))
-        if name in ("exhaustive-rerank", "no-rerank"):
-            scfg = search.SearchConfig(
-                rerank=common.SCALES[scale]["rerank"], topk=100)
-            got = search.search(
-                params, state, cfg, scfg, jnp.asarray(ds.queries), codes,
-                use_rerank=(name == "exhaustive-rerank"),
-                use_d2=(name == "no-rerank"))
-            rec = search.recall_at_k(got, jnp.asarray(ds.gt_nn))
+        if "search_kw" in kw:
+            _, got = index.search(jnp.asarray(ds.queries), 100,
+                                  **kw["search_kw"])
+            rec = recall_at_k(got, jnp.asarray(ds.gt_nn))
         common.emit(f"ablation/{kind}{num_books}B/{name}", search_us,
                     common.fmt_recalls(rec))
 

@@ -1,6 +1,8 @@
 """Paper Table 2: compressed-domain retrieval recall on Deep/BigANN-style
 data at 8 and 16 bytes/vector — OPQ, PQ, RVQ (additive family), RVQ+rerank
-(the LSQ+rerank analog) and UNQ."""
+(the LSQ+rerank analog) and UNQ. Every method runs behind the unified
+``repro.index`` protocol (one factory string per table row), so this whole
+table is one loop."""
 from __future__ import annotations
 
 from benchmarks import common

@@ -1,11 +1,12 @@
 """Paper Tables 3/4: does the UNQ advantage persist as the base set grows?
-One trained model per method; recall measured on nested base subsets."""
+One trained model per method; recall measured on nested base subsets
+(``Index.with_codes`` gives a truncated view over the same quantizer)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 from benchmarks import common
-from repro.core import search
+from repro.core.search import recall_at_k
 from repro.data import descriptors as dd
 
 
@@ -13,27 +14,23 @@ def run(scale: str = "default", kind: str = "deep", num_books: int = 8):
     ds = common.dataset(kind, scale)
     sizes = [ds.base.shape[0] // 8, ds.base.shape[0] // 2, ds.base.shape[0]]
 
-    rec_u, _, _, (params, state, cfg, codes_full) = common.run_unq(
-        ds, num_books, scale)
-    rec_p, _, _, (pq_model, pq_codes) = common.run_pq(ds, num_books, scale)
+    _, _, _, unq_index = common.run_unq(ds, num_books, scale)
+    _, _, _, pq_index = common.run_pq(ds, num_books, scale)
 
+    queries = jnp.asarray(ds.queries)
     for n in sizes:
         base = ds.base[:n]
-        gt = dd.exact_knn(ds.queries, base, k=1)[:, 0]
-        scfg = search.SearchConfig(
-            rerank=min(common.SCALES[scale]["rerank"], n), topk=100)
-        got = search.search(params, state, cfg, scfg,
-                            jnp.asarray(ds.queries), codes_full[:n])
-        rec = search.recall_at_k(got, jnp.asarray(gt))
-        common.emit(f"scale/{kind}{num_books}B/unq/n={n}", 0.0,
-                    common.fmt_recalls(rec))
+        gt = jnp.asarray(dd.exact_knn(ds.queries, base, k=1)[:, 0])
 
-        from repro.core import baselines as bl
-        got_pq = bl.search_pq(pq_model, jnp.asarray(ds.queries),
-                              pq_codes[:n], topk=100)
-        rec_pq = search.recall_at_k(got_pq, jnp.asarray(gt))
+        sub = unq_index.subset(n)
+        sub.rerank = min(common.SCALES[scale]["rerank"], n)
+        _, got = sub.search(queries, 100)
+        common.emit(f"scale/{kind}{num_books}B/unq/n={n}", 0.0,
+                    common.fmt_recalls(recall_at_k(got, gt)))
+
+        _, got_pq = pq_index.subset(n).search(queries, 100)
         common.emit(f"scale/{kind}{num_books}B/pq/n={n}", 0.0,
-                    common.fmt_recalls(rec_pq))
+                    common.fmt_recalls(recall_at_k(got_pq, gt)))
 
 
 if __name__ == "__main__":

@@ -45,6 +45,17 @@ def run(scale: str = "default"):
         common.emit(f"timings/adc_scan/{impl}", us,
                     f"{n / (us / 1e6) / 1e6:.1f} Mvec/s")
 
+    # --- batched multi-query scan (the Index.search hot path): one code
+    # stream amortized over all Q LUTs vs Q per-query scans ---
+    qn = 32
+    luts = jnp.asarray(rng.normal(size=(qn, 8, 256)), jnp.float32)
+    for impl in ("xla", "onehot", "pallas"):
+        fn = jax.jit(
+            lambda c, l, impl=impl: ops.adc_scan_batch(c, l, impl=impl))
+        _, us = common.timed(fn, codes, luts, repeats=3)
+        common.emit(f"timings/adc_scan_batch/{impl}", us,
+                    f"{qn * n / (us / 1e6) / 1e6:.1f} Mquery-vec/s")
+
     # --- top-L + rerank stage cost (paper: rerank is ~negligible) ---
     queries = jnp.asarray(ds.queries[:64])
     scfg = search.SearchConfig(rerank=common.SCALES[scale]["rerank"],

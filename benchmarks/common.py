@@ -1,22 +1,25 @@
 """Shared benchmark plumbing: datasets, method runners, CSV emission.
 
+Every method now runs through the unified ``repro.index`` API (one
+factory-built index per paper row), so the per-method runners are thin
+wrappers around one timed train/add/search harness.
+
 Scales: --quick (CI, ~1 min), default (a few minutes/table), --full
 (closest to the paper's 500k-train/1M-base protocol this container can do).
 The synthetic Deep/BigANN stand-ins come from repro.data.descriptors.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import baselines as bl
-from repro.core import search, training, unq
+from repro.core.search import recall_at_k
 from repro.data import descriptors as dd
+from repro.index import index_factory
 
 SCALES = {
     "quick": dict(n_train=3000, n_base=8000, n_query=300, epochs=30,
@@ -51,94 +54,84 @@ def timed(fn, *args, repeats: int = 1, **kw):
 
 
 # ---------------------------------------------------------------------------
-# method runners: each returns (recalls dict, encode_time_us, search_time_us)
+# method runners: each returns (recalls, encode_us, search_us, index)
 # ---------------------------------------------------------------------------
+
+def _timed_add_search(index, ds, *, topk: int = 100, search_kw=None):
+    """Shared harness: time index.add over the base set and index.search
+    over the query set; returns (recalls, encode_us, search_us)."""
+    base = jnp.asarray(ds.base)
+    t0 = time.time()
+    index.add(base)
+    jax.block_until_ready(index.codes)
+    encode_us = (time.time() - t0) * 1e6
+
+    queries = jnp.asarray(ds.queries)
+    t0 = time.time()
+    _, retrieved = index.search(queries, topk, **(search_kw or {}))
+    jax.block_until_ready(retrieved)
+    search_us = (time.time() - t0) * 1e6 / len(ds.queries)
+    rec = recall_at_k(retrieved, jnp.asarray(ds.gt_nn))
+    return rec, encode_us, search_us
+
 
 def run_unq(ds, num_books: int, scale: str, *, tcfg_overrides=None,
             search_overrides=None, scan_impl: str = "xla"):
     s = SCALES[scale]
-    cfg = unq.UNQConfig(dim=ds.dim, num_codebooks=num_books)
+    so = dict(search_overrides or {})
+    rerank = so.pop("rerank", s["rerank"])
+    topk = so.pop("topk", 100)
+    scan_impl = so.pop("scan_impl", scan_impl)   # old SearchConfig field
+    index = index_factory(f"UNQ{num_books}x256,Rerank{rerank}",
+                          dim=ds.dim, backend=scan_impl)
     tkw = dict(epochs=s["epochs"], batch_size=256, lr=5e-3, alpha=0.01,
                log_every=200)
     tkw.update(tcfg_overrides or {})
-    tcfg = training.TrainConfig(**tkw)
-    params, state, hist = training.train_unq(ds, cfg, tcfg)
-
-    base = jnp.asarray(ds.base)
-    t0 = time.time()
-    codes = search.encode_database(params, state, cfg, base)
-    jax.block_until_ready(codes)
-    encode_us = (time.time() - t0) * 1e6
-
-    skw = dict(rerank=s["rerank"], topk=100, scan_impl=scan_impl)
-    skw.update(search_overrides or {})
-    scfg = search.SearchConfig(**skw)
-    queries = jnp.asarray(ds.queries)
-    t0 = time.time()
-    retrieved = search.search(params, state, cfg, scfg, queries, codes)
-    jax.block_until_ready(retrieved)
-    search_us = (time.time() - t0) * 1e6 / len(ds.queries)
-    rec = search.recall_at_k(retrieved, jnp.asarray(ds.gt_nn))
-    return rec, encode_us, search_us, (params, state, cfg, codes)
+    index.train(ds.train, **tkw)
+    rec, encode_us, search_us = _timed_add_search(index, ds, topk=topk,
+                                                  search_kw=so)
+    return rec, encode_us, search_us, index
 
 
-def run_pq(ds, num_books: int, scale: str, *, opq: bool = False):
+def run_pq(ds, num_books: int, scale: str, *, opq: bool = False,
+           scan_impl: str = "auto"):
     s = SCALES[scale]
-    key = jax.random.PRNGKey(0)
-    train = jnp.asarray(ds.train)
+    spec = ("OPQ" if opq else "PQ") + f"{num_books}x256"
+    index = index_factory(spec, dim=ds.dim, backend=scan_impl)
     if opq:
-        model = bl.train_opq(key, train, num_books,
-                             outer_iters=s["opq_iters"],
-                             kmeans_iters=max(s["kmeans_iters"] // 2, 4))
+        index.train(ds.train, outer_iters=s["opq_iters"],
+                    kmeans_iters=max(s["kmeans_iters"] // 2, 4))
     else:
-        model = bl.train_pq(key, train, num_books, iters=s["kmeans_iters"])
-    base = jnp.asarray(ds.base)
-    t0 = time.time()
-    codes = model.encode(base)
-    jax.block_until_ready(codes)
-    encode_us = (time.time() - t0) * 1e6
-    t0 = time.time()
-    retrieved = bl.search_pq(model, jnp.asarray(ds.queries), codes, topk=100)
-    jax.block_until_ready(retrieved)
-    search_us = (time.time() - t0) * 1e6 / len(ds.queries)
-    rec = search.recall_at_k(retrieved, jnp.asarray(ds.gt_nn))
-    return rec, encode_us, search_us, (model, codes)
+        index.train(ds.train, iters=s["kmeans_iters"])
+    rec, encode_us, search_us = _timed_add_search(index, ds)
+    return rec, encode_us, search_us, index
 
 
-def run_rvq(ds, num_books: int, scale: str, *, rerank_decoder: bool = False):
+def run_rvq(ds, num_books: int, scale: str, *, rerank_decoder: bool = False,
+            scan_impl: str = "auto"):
     s = SCALES[scale]
-    key = jax.random.PRNGKey(0)
-    train = jnp.asarray(ds.train)
-    model = bl.train_rvq(key, train, num_books, iters=s["kmeans_iters"])
-    base = jnp.asarray(ds.base)
-    t0 = time.time()
-    codes = model.encode(base)
-    recon_base = model.decode(codes)
-    norms = jnp.sum(recon_base * recon_base, axis=-1)
-    jax.block_until_ready(norms)
-    encode_us = (time.time() - t0) * 1e6
-
-    queries = jnp.asarray(ds.queries)
+    index = index_factory(f"RVQ{num_books}x256", dim=ds.dim,
+                          backend=scan_impl)
+    index.train(ds.train, iters=s["kmeans_iters"])
     if not rerank_decoder:
-        t0 = time.time()
-        retrieved = bl.search_rvq(model, queries, codes, norms, topk=100)
-        jax.block_until_ready(retrieved)
-        search_us = (time.time() - t0) * 1e6 / len(ds.queries)
-        rec = search.recall_at_k(retrieved, jnp.asarray(ds.gt_nn))
-        return rec, encode_us, search_us, (model, codes)
+        rec, encode_us, search_us = _timed_add_search(index, ds)
+        return rec, encode_us, search_us, index
 
     # "LSQ + rerank"-style: learned MLP decoder reranks the shallow top-L
-    recon_train = model.decode(model.encode(train))
+    rec, encode_us, _ = _timed_add_search(index, ds)   # populates codes
+    train = jnp.asarray(ds.train)
+    recon_train = index.model.decode(index.model.encode(train))
     dec_params, apply_fn = bl.train_rerank_decoder(
         jax.random.PRNGKey(1), recon_train, train, steps=1500)
+    queries = jnp.asarray(ds.queries)
     t0 = time.time()
-    cand = bl.search_rvq(model, queries, codes, norms, topk=s["rerank"])
-    retrieved = bl.rerank_with_decoder(apply_fn, dec_params, model, queries,
-                                       codes, cand, topk=100)
+    _, cand = index.search(queries, s["rerank"], use_rerank=False)
+    retrieved = bl.rerank_with_decoder(apply_fn, dec_params, index.model,
+                                       queries, index.codes, cand, topk=100)
     jax.block_until_ready(retrieved)
     search_us = (time.time() - t0) * 1e6 / len(ds.queries)
-    rec = search.recall_at_k(retrieved, jnp.asarray(ds.gt_nn))
-    return rec, encode_us, search_us, (model, codes)
+    rec = recall_at_k(retrieved, jnp.asarray(ds.gt_nn))
+    return rec, encode_us, search_us, index
 
 
 def fmt_recalls(rec: dict) -> str:

@@ -2,8 +2,13 @@
 
     PYTHONPATH=src python -m benchmarks.run [--scale quick|default|full]
         [--only recall,scale,ablation,timings,roofline]
+    PYTHONPATH=src python -m benchmarks.run --smoke
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows. ``--smoke`` is the CI path:
+it exercises ``Index.search`` on ALL registered scan backends (xla /
+onehot / pallas-interpret) over a tiny factory-built index and fails
+loudly if any backend disagrees with the xla oracle — perf regressions
+and backend drift in the new surface both surface here.
 """
 from __future__ import annotations
 
@@ -12,13 +17,67 @@ import time
 import traceback
 
 
+def smoke() -> None:
+    """Tiny end-to-end pass over the unified index API, per scan backend."""
+    import numpy as np
+    import jax.numpy as jnp
+
+    from benchmarks import common
+    from repro.index import available_scan_backends, index_factory
+
+    ds = common.dataset("deep", "quick")
+    queries = jnp.asarray(ds.queries[:64])
+
+    for spec, train_kw in (
+        ("PQ8x64,Rerank64", dict(iters=4)),
+        ("UNQ8x64,Rerank64", dict(epochs=2, log_every=1000)),
+    ):
+        index = index_factory(spec, dim=ds.dim)
+        index.train(ds.train, **train_kw)
+        index.add(ds.base)
+        want = None
+        for backend in sorted(available_scan_backends()):
+            index.backend = backend
+            _, got = index.search(queries, 10)           # warmup/compile
+            t0 = time.time()
+            _, got = index.search(queries, 10)
+            got.block_until_ready()
+            us = (time.time() - t0) * 1e6 / queries.shape[0]
+            if backend == "xla":
+                want = np.asarray(got)
+            common.emit(f"smoke/{spec}/search[{backend}]", us,
+                        f"ntotal={index.ntotal}")
+        for backend in available_scan_backends():
+            index.backend = backend
+            _, got = index.search(queries, 10)
+            got = np.asarray(got)
+            if backend in ("xla", "pallas"):
+                if not np.array_equal(got, want):   # bit-exact scan pair
+                    raise AssertionError(
+                        f"{spec}: backend {backend!r} disagrees with xla")
+            else:   # reassociated reductions may swap exact d2 ties
+                overlap = np.mean([len(set(a) & set(b)) / len(a)
+                                   for a, b in zip(got, want)])
+                if overlap < 0.99:
+                    raise AssertionError(
+                        f"{spec}: backend {backend!r} overlap {overlap:.3f}")
+        print(f"# smoke {spec}: all backends agree with xla")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", default="quick",
                     choices=["quick", "default", "full"])
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of benches")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI path: Index.search on every scan backend")
     args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    if args.smoke:
+        smoke()
+        return
 
     from benchmarks import (bench_ablation, bench_recall, bench_roofline,
                             bench_scale, bench_timings)
@@ -32,7 +91,6 @@ def main() -> None:
     }
     selected = (args.only.split(",") if args.only else list(benches))
 
-    print("name,us_per_call,derived")
     for name in selected:
         t0 = time.time()
         try:

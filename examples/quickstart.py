@@ -1,5 +1,6 @@
-"""Quickstart: train UNQ on synthetic descriptors, compress a base set,
-run the two-stage compressed-domain search, report Recall@k.
+"""Quickstart: the three-line ``index_factory -> train -> search`` flow —
+train UNQ on synthetic descriptors, compress a base set, run the two-stage
+compressed-domain search, report Recall@k.
 
     PYTHONPATH=src python examples/quickstart.py [--epochs 30]
 """
@@ -8,15 +9,18 @@ import time
 
 import jax.numpy as jnp
 
-from repro.configs import unq_paper
-from repro.core import search, training, unq
+from repro.core.search import recall_at_k
 from repro.data.descriptors import make_synthetic_dataset
+from repro.index import index_factory
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--epochs", type=int, default=20)
     ap.add_argument("--bytes", type=int, default=8, choices=[8, 16])
+    ap.add_argument("--factory", default=None,
+                    help="override the index factory string, e.g. "
+                         "'OPQ8x256,Rerank200' or 'UNQ8x256,Scan(onehot)'")
     args = ap.parse_args()
 
     print("== 1. data (Deep1M-style synthetic) ==")
@@ -25,30 +29,25 @@ def main():
     print(f"train={ds.train.shape} base={ds.base.shape} "
           f"queries={ds.queries.shape}")
 
-    print("== 2. train UNQ ==")
-    cfg = unq.UNQConfig(dim=ds.dim, num_codebooks=args.bytes)
-    tcfg = training.TrainConfig(epochs=args.epochs, lr=5e-3, log_every=100)
+    spec = args.factory or f"UNQ{args.bytes}x256,Rerank200"
+    print(f"== 2. build index: {spec} ==")
+    index = index_factory(spec, dim=ds.dim)
     t0 = time.time()
-    params, state, hist = training.train_unq(
-        ds, cfg, tcfg,
-        callback=lambda s, m: print(
-            f"  step {s:5d} recon={m['recon']:.3f} cv2={m['cv2']:.3f}"))
-    print(f"trained in {time.time() - t0:.0f}s; "
-          f"model {unq.model_size_bytes(params) / 2**20:.1f} MB")
+    index.train(ds.train, epochs=args.epochs, lr=5e-3, log_every=100)
+    print(f"trained in {time.time() - t0:.0f}s")
 
-    print("== 3. compress the base set ==")
-    codes = search.encode_database(params, state, cfg, jnp.asarray(ds.base))
+    print("== 3. compress the base set (index.add) ==")
+    index.add(ds.base)
+    codes = index.codes
     print(f"codes {codes.shape} {codes.dtype} -> "
           f"{codes.size / 2**20:.2f} MB for "
-          f"{ds.base.nbytes / 2**20:.1f} MB of vectors")
+          f"{ds.base.nbytes / 2**20:.1f} MB of vectors; {index}")
 
-    print("== 4. two-stage search (LUT scan + decoder rerank) ==")
-    scfg = search.SearchConfig(rerank=200, topk=100)
+    print("== 4. two-stage search (batched LUT scan + decoder rerank) ==")
     t0 = time.time()
-    retrieved = search.search(params, state, cfg, scfg,
-                              jnp.asarray(ds.queries), codes)
+    _, retrieved = index.search(jnp.asarray(ds.queries), 100)
     dt = (time.time() - t0) / len(ds.queries) * 1e3
-    rec = search.recall_at_k(retrieved, jnp.asarray(ds.gt_nn))
+    rec = recall_at_k(retrieved, jnp.asarray(ds.gt_nn))
     print(f"recall: {rec}  ({dt:.1f} ms/query on CPU)")
 
 

@@ -1,7 +1,7 @@
 """End-to-end serving driver (the paper's deployment shape): build a
 compressed ANN index, then serve batched similarity queries with latency
-stats — index sharded as it would be across a pod (one shard per device;
-on this CPU container the shards are logical).
+stats. The index is wrapped in ``ShardedIndex`` — stage 1 scans one code
+shard per (logical) device and merges, exactly as it would across a pod.
 
     PYTHONPATH=src python examples/serve_search.py [--shards 8]
 """
@@ -11,8 +11,9 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import search, training, unq
+from repro.core.search import recall_at_k
 from repro.data.descriptors import make_synthetic_dataset
+from repro.index import ShardedIndex, index_factory
 
 
 def main():
@@ -20,26 +21,21 @@ def main():
     ap.add_argument("--shards", type=int, default=8)
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--factory", default="UNQ8x256,Rerank200")
     args = ap.parse_args()
 
-    print("== build index ==")
+    print(f"== build index: {args.factory} x{args.shards} shards ==")
     ds = make_synthetic_dataset("deep", n_train=5000, n_base=40000,
                                 n_query=args.batch * args.requests)
-    cfg = unq.UNQConfig(dim=ds.dim, num_codebooks=8)
-    tcfg = training.TrainConfig(epochs=15, lr=5e-3, log_every=1000)
-    params, state, _ = training.train_unq(ds, cfg, tcfg)
+    index = ShardedIndex(index_factory(args.factory, dim=ds.dim),
+                         num_shards=args.shards)
+    index.train(ds.train, epochs=15, lr=5e-3, log_every=1000)
 
-    base = jnp.asarray(ds.base)
     t0 = time.time()
-    codes = search.encode_database(params, state, cfg, base)
-    print(f"encoded {base.shape[0]} vectors in {time.time() - t0:.1f}s "
-          f"({base.shape[0] / (time.time() - t0):.0f} vec/s)")
-
-    n = codes.shape[0]
-    per = n // args.shards
-    shards = [codes[i * per:(i + 1) * per] for i in range(args.shards)]
-    offsets = [i * per for i in range(args.shards)]
-    scfg = search.SearchConfig(rerank=200, topk=100)
+    index.add(ds.base)
+    dt = time.time() - t0
+    print(f"encoded {index.ntotal} vectors in {dt:.1f}s "
+          f"({index.ntotal / dt:.0f} vec/s)")
 
     print(f"== serve {args.requests} batches of {args.batch} queries "
           f"({args.shards} index shards) ==")
@@ -49,17 +45,11 @@ def main():
         q = jnp.asarray(ds.queries[r * args.batch:(r + 1) * args.batch])
         gt = ds.gt_nn[r * args.batch:(r + 1) * args.batch]
         t0 = time.time()
-        cand = search.search_sharded(params, state, cfg, scfg, q,
-                                     shards, offsets)
-        # stage 2: exact rerank of merged candidates with the decoder
-        final = []
-        for i in range(q.shape[0]):
-            recon = unq.decode_codes(params, state, cfg, codes[cand[i]])
-            d1 = jnp.sum(jnp.square(recon - q[i]), axis=-1)
-            order = jnp.argsort(d1)[:100]
-            final.append(np.asarray(cand[i])[np.asarray(order)])
+        _, retrieved = index.search(q, 100)
+        retrieved.block_until_ready()
         lat.append((time.time() - t0) / args.batch * 1e3)
-        hits += sum(gt[i] in final[i][:10] for i in range(args.batch))
+        rec = recall_at_k(retrieved, jnp.asarray(gt), ks=(10,))
+        hits += rec["recall@10"] * args.batch
     lat = np.array(lat)
     print(f"latency/query: p50={np.percentile(lat, 50):.1f}ms "
           f"p95={np.percentile(lat, 95):.1f}ms")

@@ -1,26 +1,35 @@
 """Two-stage compressed-domain nearest-neighbor search (paper §3.3).
 
+.. deprecated::
+    This module is now a thin compatibility shim. The canonical
+    implementation lives behind the FAISS-style ``repro.index`` API::
+
+        from repro.index import index_factory
+        index = index_factory("UNQ8x256,Rerank500", dim=96)
+        index.train(xs); index.add(base)
+        distances, indices = index.search(queries, k)
+
+    ``search`` / ``search_sharded`` / ``encode_database`` below delegate to
+    ``repro.index.UNQIndex`` / ``ShardedIndex`` and return the same values
+    they always did, so existing callers keep working. New code should use
+    the index objects directly — they own the batched multi-query ADC scan
+    (``ops.adc_scan_batch``) and per-device scan-backend resolution.
+
 Stage 1 — candidate generation with d2 (Eq. 8): build a (M, K) lookup table
     ``lut[m, k] = -<net(q)_m, c_mk>`` with one encoder pass + M*K dot
     products, then scan the compressed database (M adds per point) and take
     the top-L candidates.
 Stage 2 — reranking with d1 (Eq. 7): reconstruct only the L candidates with
     the decoder and re-score with exact distances ``||q - g(i)||^2``.
-
-The scan supports sharded databases: each device scans its own code shard
-with the (replicated) LUT and the per-shard top-L are merged — the same
-pattern scales the paper's billion-vector experiments across a pod.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import unq
 from repro.kernels import ops
 
 
@@ -28,13 +37,13 @@ from repro.kernels import ops
 class SearchConfig:
     rerank: int = 500         # L: candidates reranked with d1 (paper: 500 @ 1M)
     topk: int = 100           # neighbors returned (recall@k evaluated up to this)
-    scan_impl: str = "xla"    # "xla" | "onehot" | "pallas"
+    scan_impl: str = "xla"    # scan backend: "xla" | "onehot" | "pallas" | "auto"
 
 
 def build_lut(params, state, cfg, queries) -> jax.Array:
     """(Q, D) queries -> (Q, M, K) tables of -<net(q)_m, c_mk>."""
-    heads, _ = unq.encode_heads(params, state, cfg, queries, train=False)
-    return -unq.head_logits(params, heads)
+    from repro.index.unq_index import build_luts
+    return build_luts(params, state, cfg, queries)
 
 
 def encode_database(params, state, cfg, base, *, batch_size: int = 8192,
@@ -44,16 +53,8 @@ def encode_database(params, state, cfg, base, *, batch_size: int = 8192,
     One feed-forward pass per batch (the paper's headline encoding speed:
     no iterative optimization, unlike AQ/LSQ).
     """
-    @jax.jit
-    def _encode(xb):
-        heads, _ = unq.encode_heads(params, state, cfg, xb, train=False)
-        return ops.unq_encode(heads, params["codebooks"], impl=impl).astype(jnp.uint8)
-
-    n = base.shape[0]
-    outs = []
-    for s in range(0, n, batch_size):
-        outs.append(_encode(base[s:s + batch_size]))
-    return jnp.concatenate(outs, axis=0)
+    from repro.index.unq_index import encode_database as _encode
+    return _encode(params, state, cfg, base, batch_size=batch_size, impl=impl)
 
 
 @functools.partial(jax.jit, static_argnames=("topl", "scan_impl"))
@@ -61,17 +62,19 @@ def candidates_for_query(lut: jax.Array, codes: jax.Array, *, topl: int,
                          scan_impl: str = "xla"):
     """Stage 1 for one query: lut (M, K), codes (N, M) -> (scores, idx) top-L.
 
-    Scores are d2 up to const(q): lower = closer.
+    Scores are d2 up to const(q): lower = closer. Kept for single-query
+    callers; batched search goes through ``ops.adc_scan_batch``.
     """
     scores = ops.adc_scan(codes, lut, impl=scan_impl)   # (N,)
     neg, idx = jax.lax.top_k(-scores, topl)
     return -neg, idx
 
 
-def _rerank_one(params, state, cfg, q, cand_codes):
-    """Stage 2: d1(q, i) = ||q - g(i)||^2 over the L candidates."""
-    recon = unq.decode_codes(params, state, cfg, cand_codes)   # (L, D)
-    return jnp.sum(jnp.square(recon - q[None, :]), axis=-1)    # (L,)
+def _index_for(params, state, cfg, search_cfg: SearchConfig, codes=None):
+    from repro.index import UNQIndex
+    return UNQIndex.from_trained(params, state, cfg, codes=codes,
+                                 rerank=search_cfg.rerank,
+                                 backend=search_cfg.scan_impl)
 
 
 def search(params, state, cfg, search_cfg: SearchConfig, queries, codes,
@@ -80,48 +83,28 @@ def search(params, state, cfg, search_cfg: SearchConfig, queries, codes,
 
     ``use_rerank=False`` reproduces the "No reranking" ablation;
     ``use_d2=False`` (exhaustive d1) reproduces "Exhaustive reranking".
+
+    Deprecated shim over ``UNQIndex.search`` (see module docstring).
     """
-    topl = search_cfg.rerank if use_rerank else search_cfg.topk
-    luts = build_lut(params, state, cfg, queries)     # (Q, M, K)
-
-    @jax.jit
-    def _one(q, lut):
-        if use_d2:
-            _, cand = candidates_for_query(lut, codes, topl=topl,
-                                           scan_impl=search_cfg.scan_impl)
-        else:
-            cand = jnp.arange(codes.shape[0])         # exhaustive d1
-        if not use_rerank and use_d2:
-            return cand[: search_cfg.topk]
-        d1 = _rerank_one(params, state, cfg, q, codes[cand])
-        k = min(search_cfg.topk, d1.shape[0])
-        _, order = jax.lax.top_k(-d1, k)
-        return cand[order]
-
-    return jax.vmap(_one)(queries, luts)
+    index = _index_for(params, state, cfg, search_cfg, codes)
+    _, indices = index.search(jnp.asarray(queries), search_cfg.topk,
+                              use_rerank=use_rerank, use_d2=use_d2)
+    return indices
 
 
 def search_sharded(params, state, cfg, search_cfg: SearchConfig, queries,
                    codes_shards: list[jax.Array], shard_offsets: list[int]):
-    """Distributed stage 1: per-shard top-L merged across shards, then a
-    single stage-2 rerank over the merged candidate pool. Host-side driver
-    used by the serving example; on a real pod each shard lives on its own
-    device and the merge is an all-gather of (L, 2) tuples.
+    """Distributed stage 1: per-shard top-L merged across shards; the
+    caller reranks the merged pool. Returns (Q, L) global candidates.
+
+    Deprecated shim over ``ShardedIndex.stage1_candidates``.
     """
-    luts = build_lut(params, state, cfg, queries)
-    all_scores, all_idx = [], []
-    for shard, off in zip(codes_shards, shard_offsets):
-        s, i = jax.vmap(
-            lambda lut: candidates_for_query(
-                lut, shard, topl=min(search_cfg.rerank, shard.shape[0]),
-                scan_impl=search_cfg.scan_impl)
-        )(luts)
-        all_scores.append(s)
-        all_idx.append(i + off)
-    scores = jnp.concatenate(all_scores, axis=1)       # (Q, n_shards*L)
-    idx = jnp.concatenate(all_idx, axis=1)
-    _, order = jax.lax.top_k(-scores, min(search_cfg.rerank, scores.shape[1]))
-    return jnp.take_along_axis(idx, order, axis=1)     # (Q, L) global candidates
+    from repro.index import ShardedIndex
+    index = _index_for(params, state, cfg, search_cfg)
+    sharded = ShardedIndex.from_shards(index, codes_shards, shard_offsets)
+    _, cand = sharded.stage1_candidates(jnp.asarray(queries),
+                                        topl=search_cfg.rerank)
+    return cand
 
 
 def recall_at_k(retrieved: jax.Array, gt_nn: jax.Array, ks=(1, 10, 100)) -> dict:

@@ -1,0 +1,40 @@
+"""``repro.index`` — the public entry point for compressed-domain
+similarity search: a FAISS-style ``train / add / search / save / load``
+surface over UNQ (the paper's method) and the shallow MCQ baselines.
+
+    from repro.index import index_factory, Index
+
+    index = index_factory("UNQ8x256,Rerank500", dim=96)
+    index.train(train_vectors, epochs=30)
+    index.add(base_vectors)
+    distances, indices = index.search(queries, k=100)
+    index.save("ckpt/index"); index = Index.load("ckpt/index")
+
+Scan backends (xla | onehot | pallas) resolve per device via
+``repro.index.backend``; wrap any index in ``ShardedIndex`` for
+pod-style per-shard scanning with a merged rerank.
+"""
+from repro.index.backend import (available_scan_backends,
+                                 register_scan_backend,
+                                 resolve_scan_backend)
+from repro.index.base import Index
+from repro.index.factory import index_factory
+from repro.index.pq_index import OPQIndex, PQIndex, RVQIndex
+from repro.index.sharded import ShardedIndex
+from repro.index.unq_index import UNQIndex
+
+load_index = Index.load
+
+__all__ = [
+    "Index",
+    "UNQIndex",
+    "PQIndex",
+    "OPQIndex",
+    "RVQIndex",
+    "ShardedIndex",
+    "index_factory",
+    "load_index",
+    "available_scan_backends",
+    "register_scan_backend",
+    "resolve_scan_backend",
+]

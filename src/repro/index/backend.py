@@ -1,0 +1,87 @@
+"""Scan-backend registry: resolves which ADC-scan implementation an index
+uses on the current device, instead of threading ``impl=`` strings through
+every call site.
+
+Backends are the kernel dispatch targets of ``repro.kernels.ops``:
+
+  * ``xla``    — pure-jnp gather oracle; always available, and what the
+                 distributed paths use inside pjit.
+  * ``onehot`` — the MXU-shaped one-hot matmul formulation in plain XLA.
+  * ``pallas`` — the fused Pallas TPU kernel (interpret mode off-TPU, so it
+                 stays exercisable in CI but is never auto-selected there).
+
+``resolve_scan_backend("auto")`` picks the highest-priority backend whose
+``auto_select`` predicate holds on the current device (pallas on TPU, xla
+elsewhere). Explicitly naming a registered backend always works — e.g.
+benchmarks A/B all three on one host.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanBackend:
+    name: str
+    priority: int                       # higher wins for "auto"
+    auto_select: Callable[[], bool]     # eligible for auto-resolution?
+    description: str = ""
+
+
+_REGISTRY: dict[str, ScanBackend] = {}
+
+
+def register_scan_backend(name: str, *, priority: int,
+                          auto_select: Callable[[], bool] = lambda: True,
+                          description: str = "") -> None:
+    """Register (or override) a scan backend for auto-resolution."""
+    _REGISTRY[name] = ScanBackend(name, priority, auto_select, description)
+
+
+def available_scan_backends() -> list[str]:
+    """All registered backend names, highest priority first."""
+    return [b.name for b in
+            sorted(_REGISTRY.values(), key=lambda b: -b.priority)]
+
+
+def resolve_scan_backend(name: str | None = "auto") -> str:
+    """Map a backend request to a concrete ``impl`` string for kernels.ops.
+
+    ``"auto"``/None picks per-device; a concrete registered name is passed
+    through (letting callers pin a backend for A/B runs); anything else is
+    an error listing the registry.
+    """
+    if name is None or name == "auto":
+        eligible = [b for b in _REGISTRY.values() if b.auto_select()]
+        if not eligible:
+            return "xla"
+        return max(eligible, key=lambda b: b.priority).name
+    if name in _REGISTRY:
+        return name
+    raise ValueError(
+        f"unknown scan backend {name!r}; registered: "
+        f"{available_scan_backends()} (or 'auto')")
+
+
+def encode_impl_for(backend: str) -> str:
+    """The encode-kernel impl paired with a scan backend (``unq_encode``
+    has no one-hot variant, so ``onehot`` scans encode via xla)."""
+    return "pallas" if backend == "pallas" else "xla"
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+register_scan_backend(
+    "xla", priority=0,
+    description="pure-jnp gather oracle (always available)")
+register_scan_backend(
+    "onehot", priority=10, auto_select=lambda: False,
+    description="one-hot matmul formulation in plain XLA (A/B target)")
+register_scan_backend(
+    "pallas", priority=100, auto_select=_on_tpu,
+    description="fused Pallas TPU kernel (interpret mode off-TPU)")

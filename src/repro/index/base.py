@@ -1,0 +1,260 @@
+"""The ``Index`` protocol: a FAISS-style object that owns a compressed
+database you can query (paper §3.3 generalized over quantizers).
+
+Lifecycle::
+
+    index = index_factory("UNQ8x256,Rerank500", dim=96)
+    index.train(train_vectors)        # fit the quantizer
+    index.add(base_vectors)           # compress + append to the database
+    D, I = index.search(queries, k)   # two-stage compressed-domain search
+    index.save(path); index = Index.load(path)
+
+Every implementation reduces to four primitives (train / encode / LUT
+build / reconstruct); the two-stage search itself — batched multi-query
+ADC scan (d2, Eq. 8), top-L candidates, decoder rerank (d1, Eq. 7) — is
+implemented ONCE here and shared by UNQ and every shallow baseline, which
+is what makes paper-style method comparisons a single loop.
+
+Stage 1 runs on ``ops.adc_scan_batch``: one kernel launch scans the whole
+code matrix against all Q query LUTs (the code stream is read once per
+block for all queries), replacing the per-query ``vmap`` scan. Backends
+resolve per device through ``repro.index.backend`` instead of threading
+``impl=`` strings through every call.
+"""
+from __future__ import annotations
+
+import abc
+import functools
+import json
+import pathlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import load_pytree, save_pytree
+from repro.index.backend import resolve_scan_backend
+from repro.kernels import ops
+
+# kind -> Index subclass, populated by __init_subclass__
+_KINDS: dict[str, type["Index"]] = {}
+
+
+@functools.partial(jax.jit, static_argnames=("topl", "impl"))
+def _stage1_topl(codes, luts, bias, *, topl: int, impl: str):
+    """Batched stage 1: d2 scores for all queries + per-query top-L.
+
+    codes (N, M), luts (Q, M, K), bias None | (N,) -> ((Q, L), (Q, L)).
+    Lower score = closer; ``bias`` carries per-point terms that do not fit
+    the LUT decomposition (RVQ's stored ||decode(code)||^2).
+    """
+    scores = ops.adc_scan_batch(codes, luts, impl=impl)    # (Q, N)
+    if bias is not None:
+        scores = scores + bias[None, :]
+    neg, idx = jax.lax.top_k(-scores, topl)
+    return -neg, idx
+
+
+class Index(abc.ABC):
+    """Abstract compressed-database index (see module docstring)."""
+
+    kind: str = "abstract"
+
+    def __init_subclass__(cls, **kw):
+        super().__init_subclass__(**kw)
+        if cls.kind != "abstract":
+            _KINDS[cls.kind] = cls
+
+    def __init__(self, dim: int, *, rerank: int = 0, backend: str = "auto"):
+        self.dim = dim
+        self.rerank = rerank          # L: stage-2 candidates (0 = ADC only)
+        self.backend = backend        # scan backend name or "auto"
+        self._codes: jax.Array | None = None     # (N, M) uint8
+        self._bias: jax.Array | None = None      # (N,) f32 or None
+        self._rerank_fn = None                   # cached jitted stage 2
+
+    # -- database state ----------------------------------------------------
+
+    @property
+    def ntotal(self) -> int:
+        return 0 if self._codes is None else int(self._codes.shape[0])
+
+    @property
+    def codes(self) -> jax.Array | None:
+        """The compressed database, (ntotal, M) uint8."""
+        return self._codes
+
+    @property
+    @abc.abstractmethod
+    def is_trained(self) -> bool:
+        ...
+
+    def reset(self) -> None:
+        """Drop the database (the trained quantizer is kept)."""
+        self._codes = None
+        self._bias = None
+
+    def with_codes(self, codes, bias=None) -> "Index":
+        """A shallow view over the same trained quantizer with a different
+        code matrix (shard construction, external code stores)."""
+        import copy
+        clone = copy.copy(self)
+        clone._codes = None if codes is None else jnp.asarray(codes)
+        clone._bias = bias
+        return clone
+
+    def subset(self, n: int) -> "Index":
+        """View over the first ``n`` database entries (nested-subset
+        scaling studies, paper Tables 3/4)."""
+        return self.with_codes(
+            self._codes[:n],
+            None if self._bias is None else self._bias[:n])
+
+    # -- quantizer primitives (implementation-specific) --------------------
+
+    @abc.abstractmethod
+    def train(self, xs, **kw) -> "Index":
+        """Fit the quantizer on (n, dim) training vectors. Returns self."""
+
+    @abc.abstractmethod
+    def _encode(self, xs) -> jax.Array:
+        """(n, dim) -> (n, M) uint8 codes."""
+
+    @abc.abstractmethod
+    def _build_luts(self, queries) -> jax.Array:
+        """(Q, dim) -> (Q, M, K) float32 additive score tables (lower=closer
+        after summation, up to a per-query constant)."""
+
+    @abc.abstractmethod
+    def _reconstruct(self, codes) -> jax.Array:
+        """(n, M) codes -> (n, dim) reconstructions for stage-2 rerank."""
+
+    def _encode_bias(self, codes) -> jax.Array | None:
+        """Per-point additive score term for new codes (None for most)."""
+        return None
+
+    # -- add / search ------------------------------------------------------
+
+    def add(self, xs) -> "Index":
+        """Compress (n, dim) vectors and append them to the database."""
+        if not self.is_trained:
+            raise RuntimeError(f"{type(self).__name__}.add before train()")
+        codes = self._encode(jnp.asarray(xs))
+        bias = self._encode_bias(codes)
+        if self._codes is None:
+            self._codes, self._bias = codes, bias
+        else:
+            self._codes = jnp.concatenate([self._codes, codes], axis=0)
+            if bias is not None:
+                self._bias = jnp.concatenate([self._bias, bias], axis=0)
+        return self
+
+    def search(self, queries, k: int, *, use_rerank: bool | None = None,
+               use_d2: bool = True):
+        """Two-stage search: (Q, dim) queries -> (distances, indices), each
+        (Q, k), sorted closest-first.
+
+        ``use_rerank=None`` reranks iff the index has a rerank budget;
+        ``use_rerank=False`` returns raw d2 ranking ("No reranking"
+        ablation); ``use_d2=False`` reranks the ENTIRE database with exact
+        reconstruction distances ("Exhaustive reranking" ablation).
+        """
+        if self.ntotal == 0:
+            raise RuntimeError("search on an empty index (call add first)")
+        queries = jnp.asarray(queries)
+        if use_rerank is None:
+            use_rerank = self.rerank > 0
+        if use_rerank and self.rerank <= 0:
+            raise ValueError(
+                f"{type(self).__name__} has no rerank budget (rerank=0); "
+                "set index.rerank or pass use_rerank=False")
+        impl = resolve_scan_backend(self.backend)
+
+        if use_d2:
+            topl = min(self.rerank if use_rerank else k, self.ntotal)
+            luts = self._build_luts(queries)
+            d2, cand = _stage1_topl(self._codes, luts, self._bias,
+                                    topl=topl, impl=impl)
+            if not use_rerank:
+                return d2[:, :k], cand[:, :k]
+        else:
+            cand = jnp.broadcast_to(jnp.arange(self.ntotal),
+                                    (queries.shape[0], self.ntotal))
+
+        return self._rerank_topk(queries, cand, k)
+
+    def _rerank_topk(self, queries, cand, k: int):
+        """Shared stage-2 tail: d1 rerank of the candidate pool + final
+        top-k. Also used by ShardedIndex on the merged pool."""
+        d1 = self._rerank_distances(queries, cand)         # (Q, L)
+        kk = min(k, d1.shape[1])
+        neg, order = jax.lax.top_k(-d1, kk)
+        return -neg, jnp.take_along_axis(cand, order, axis=1)
+
+    def _rerank_distances(self, queries, cand) -> jax.Array:
+        """Stage 2: exact reconstruction distances d1 = ||q - recon||^2
+        over each query's candidate list. queries (Q, D), cand (Q, L).
+
+        The jitted kernel is cached on the instance (codes passed as an
+        argument, so ``add``/``with_codes`` don't invalidate it); anything
+        that swaps quantizer parameters must call ``_invalidate_caches``.
+        """
+        if self._rerank_fn is None:
+            def _one(codes, q, c_idx):
+                recon = self._reconstruct(codes[c_idx])    # (L, D)
+                return jnp.sum(jnp.square(recon - q[None, :]), axis=-1)
+
+            self._rerank_fn = jax.jit(jax.vmap(_one, in_axes=(None, 0, 0)))
+        return self._rerank_fn(self._codes, queries, cand)
+
+    def _invalidate_caches(self) -> None:
+        """Drop compiled closures over quantizer params (after train/load)."""
+        self._rerank_fn = None
+
+    # -- persistence (checkpoint/manager: atomic, self-describing) ---------
+
+    @abc.abstractmethod
+    def _tree(self) -> Any:
+        """Pytree of everything save/load roundtrips (params + codes)."""
+
+    @abc.abstractmethod
+    def _metadata(self) -> dict:
+        """JSON-serializable config sufficient to rebuild ``_tree`` shapes."""
+
+    @classmethod
+    @abc.abstractmethod
+    def _empty_from_metadata(cls, meta: dict) -> "Index":
+        """Rebuild an index whose ``_tree`` has the saved structure/shapes
+        (leaf values are placeholders until ``_set_tree``)."""
+
+    @abc.abstractmethod
+    def _set_tree(self, tree: Any) -> None:
+        """Install a restored ``_tree``."""
+
+    def save(self, path) -> None:
+        """Atomic save to a checkpoint directory (manager.save_pytree)."""
+        save_pytree(pathlib.Path(path), self._tree(),
+                    metadata={"index_kind": self.kind,
+                              "index_meta": self._metadata()})
+
+    @staticmethod
+    def load(path) -> "Index":
+        """Load any saved index, dispatching on the manifest's kind tag."""
+        path = pathlib.Path(path)
+        with open(path / "manifest.json") as f:
+            manifest = json.load(f)
+        meta = manifest["metadata"]
+        kind = meta.get("index_kind")
+        if kind not in _KINDS:
+            raise ValueError(
+                f"{path} is not a saved index (kind={kind!r}; "
+                f"known: {sorted(_KINDS)})")
+        index = _KINDS[kind]._empty_from_metadata(meta["index_meta"])
+        tree, _ = load_pytree(path, index._tree())
+        index._set_tree(tree)
+        return index
+
+    def __repr__(self):
+        return (f"{type(self).__name__}(dim={self.dim}, "
+                f"ntotal={self.ntotal}, rerank={self.rerank}, "
+                f"backend={self.backend!r}, trained={self.is_trained})")

@@ -1,0 +1,72 @@
+"""FAISS-style string factory for compressed-domain indexes.
+
+    index = index_factory("UNQ8x256,Rerank500", dim=96)
+
+Grammar — comma-separated components, exactly one quantizer:
+
+  quantizers                         modifiers
+  ----------------------------       ---------------------------------
+  UNQ{M}x{K}   neural (the paper)    Rerank{L}   stage-2 budget (d1)
+  PQ{M}[x{K}]  product quant.        Scan(name)  pin a scan backend
+  OPQ{M}[x{K}] rotated PQ                        (xla|onehot|pallas|auto)
+  RVQ{M}[x{K}] residual/additive
+
+M = codebooks (bytes/vector at K<=256), K = codebook size (default 256).
+Without ``Rerank``, UNQ keeps its paper default (L=500) and the shallow
+quantizers are ADC-only — the classic FAISS IndexPQ behavior.
+"""
+from __future__ import annotations
+
+import re
+
+from repro.index.base import Index
+from repro.index.pq_index import OPQIndex, PQIndex, RVQIndex
+from repro.index.unq_index import UNQIndex
+
+_QUANT_RE = re.compile(r"^(UNQ|PQ|OPQ|RVQ)(\d+)(?:x(\d+))?$")
+_RERANK_RE = re.compile(r"^Rerank(\d+)$")
+_SCAN_RE = re.compile(r"^Scan\((\w+)\)$")
+
+_QUANTIZERS = {"UNQ": UNQIndex, "PQ": PQIndex, "OPQ": OPQIndex,
+               "RVQ": RVQIndex}
+
+
+def index_factory(spec: str, dim: int, *, backend: str = "auto") -> Index:
+    """Build an untrained Index from a factory string (see module doc)."""
+    quant = None          # (cls, M, K)
+    rerank = None
+    scan = backend
+    for comp in spec.split(","):
+        comp = comp.strip()
+        if not comp:
+            continue
+        m = _QUANT_RE.match(comp)
+        if m:
+            if quant is not None:
+                raise ValueError(f"multiple quantizers in {spec!r}")
+            quant = (_QUANTIZERS[m.group(1)], int(m.group(2)),
+                     int(m.group(3) or 256))
+            continue
+        m = _RERANK_RE.match(comp)
+        if m:
+            rerank = int(m.group(1))
+            continue
+        m = _SCAN_RE.match(comp)
+        if m:
+            scan = m.group(1)
+            continue
+        raise ValueError(
+            f"cannot parse component {comp!r} of factory string {spec!r} "
+            "(expected UNQ8x256 / PQ8 / OPQ8x256 / RVQ8 / Rerank500 / "
+            "Scan(xla))")
+    if quant is None:
+        raise ValueError(f"no quantizer component in factory string {spec!r}")
+
+    cls, num_books, book_size = quant
+    kw: dict = {"backend": scan}
+    if rerank is not None:
+        kw["rerank"] = rerank
+    if cls is UNQIndex:
+        return cls(dim, num_codebooks=num_books, codebook_size=book_size,
+                   **kw)
+    return cls(dim, num_books=num_books, book_size=book_size, **kw)

@@ -1,0 +1,157 @@
+"""ShardedIndex: distributed stage 1 over logical code shards.
+
+Subsumes the old ``core.search.search_sharded`` free function and the
+host-side shard driver in ``examples/serve_search.py``: each shard scans
+its own code block with the (replicated) LUTs, the per-shard top-L merge
+to a global candidate pool, and stage 2 reranks the merged pool once —
+the same pattern that scales the paper's billion-vector experiments
+across a pod (one shard per device, merge = all-gather of (L, 2) tuples;
+on a single host the shards are logical views).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.index import base
+from repro.index.backend import resolve_scan_backend
+
+
+class ShardedIndex:
+    """Wraps a trained Index, presenting the same train/add/search surface
+    with stage 1 executed per-shard and merged."""
+
+    def __init__(self, inner: base.Index, num_shards: int = 8):
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        self.inner = inner
+        self.num_shards = num_shards
+        # explicit shard mode (from_shards): pre-split code blocks
+        self._shards = None
+        self._offsets = None
+        self._biases = None
+
+    @classmethod
+    def from_shards(cls, inner: base.Index, shards, offsets,
+                    biases=None) -> "ShardedIndex":
+        """Wrap pre-split code shards (arbitrary offsets). Only stage-1
+        candidate generation is available in this mode unless the shards
+        are a contiguous split of the inner index's codes.
+
+        ``biases``: per-shard (n_s,) score-bias arrays for additive
+        quantizers (RVQ stores ||decode(code)||^2). Required whenever the
+        inner index carries a bias — dropping it silently would corrupt
+        the stage-1 ranking.
+        """
+        index = cls(inner, num_shards=len(shards))
+        index._shards = [jnp.asarray(s) for s in shards]
+        index._offsets = list(offsets)
+        if biases is None and inner._bias is not None:
+            raise ValueError(
+                f"{type(inner).__name__} scores carry a per-point bias; "
+                "pass the matching per-shard `biases` to from_shards")
+        if biases is not None:
+            biases = [jnp.asarray(b) for b in biases]
+            if [int(b.shape[0]) for b in biases] != \
+                    [int(s.shape[0]) for s in index._shards]:
+                raise ValueError("biases/shards length mismatch")
+        index._biases = biases
+        return index
+
+    # -- delegated surface -------------------------------------------------
+
+    @property
+    def dim(self) -> int:
+        return self.inner.dim
+
+    @property
+    def ntotal(self) -> int:
+        if self._shards is not None:
+            return int(sum(s.shape[0] for s in self._shards))
+        return self.inner.ntotal
+
+    @property
+    def is_trained(self) -> bool:
+        return self.inner.is_trained
+
+    def train(self, xs, **kw) -> "ShardedIndex":
+        self.inner.train(xs, **kw)
+        return self
+
+    def add(self, xs) -> "ShardedIndex":
+        if self._shards is not None:
+            raise RuntimeError("add() is not supported in from_shards mode")
+        self.inner.add(xs)
+        return self
+
+    def _shard_views(self):
+        """[(codes, offset, bias)] — explicit shards, or a contiguous
+        equal split of the inner code matrix (tail rides the last shard)."""
+        if self._shards is not None:
+            biases = self._biases or [None] * len(self._shards)
+            return list(zip(self._shards, self._offsets, biases))
+        codes, bias = self.inner.codes, self.inner._bias
+        n = codes.shape[0]
+        per = max(n // self.num_shards, 1)
+        views = []
+        for i in range(self.num_shards):
+            lo = i * per
+            hi = n if i == self.num_shards - 1 else min((i + 1) * per, n)
+            if lo >= hi:
+                break
+            views.append((codes[lo:hi], lo,
+                          None if bias is None else bias[lo:hi]))
+        return views
+
+    # -- search ------------------------------------------------------------
+
+    def stage1_candidates(self, queries, topl: int | None = None):
+        """Distributed stage 1: per-shard top-L merged into the global
+        candidate pool. Returns (d2 scores, global indices), each
+        (Q, min(topl, sum of per-shard L)), closest-first."""
+        if topl is None:
+            topl = self.inner.rerank
+        queries = jnp.asarray(queries)
+        luts = self.inner._build_luts(queries)
+        impl = resolve_scan_backend(self.inner.backend)
+        all_scores, all_idx = [], []
+        for shard, off, bias in self._shard_views():
+            s, i = base._stage1_topl(shard, luts, bias,
+                                     topl=min(topl, shard.shape[0]),
+                                     impl=impl)
+            all_scores.append(s)
+            all_idx.append(i + off)
+        scores = jnp.concatenate(all_scores, axis=1)     # (Q, n_shards*L)
+        idx = jnp.concatenate(all_idx, axis=1)
+        neg, order = jax.lax.top_k(-scores, min(topl, scores.shape[1]))
+        return -neg, jnp.take_along_axis(idx, order, axis=1)
+
+    def search(self, queries, k: int, *, use_rerank: bool | None = None):
+        """Full two-stage sharded search: merged stage-1 candidates, then
+        ONE stage-2 rerank over the merged pool. Same (distances, indices)
+        contract as ``Index.search``."""
+        queries = jnp.asarray(queries)
+        if use_rerank is None:
+            use_rerank = self.inner.rerank > 0
+        topl = self.inner.rerank if use_rerank else k
+        d2, cand = self.stage1_candidates(queries, topl=max(topl, k))
+        if not use_rerank:
+            return d2[:, :k], cand[:, :k]
+        if self._shards is not None and not self._is_contiguous_view():
+            raise RuntimeError(
+                "stage-2 rerank in from_shards mode needs the shards to be "
+                "a contiguous split of the inner index's code matrix "
+                "(global candidate ids must index inner.codes)")
+        return self.inner._rerank_topk(queries, cand, k)
+
+    def _is_contiguous_view(self) -> bool:
+        """True iff the explicit shards tile inner.codes front to back, so
+        shard-local index + offset is a valid row of inner.codes."""
+        if self.inner.ntotal != self.ntotal:
+            return False
+        expect = 0
+        for s, off in zip(self._shards, self._offsets):
+            if off != expect:
+                return False
+            expect += int(s.shape[0])
+        return True

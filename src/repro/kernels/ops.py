@@ -18,7 +18,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.adc_scan import adc_scan_pallas, DEFAULT_BLOCK_N
+from repro.kernels.adc_scan import (adc_scan_pallas, adc_scan_batch_pallas,
+                                    DEFAULT_BLOCK_N, DEFAULT_BLOCK_Q)
 from repro.kernels.unq_encode import unq_encode_pallas, DEFAULT_BLOCK_B
 
 
@@ -50,6 +51,34 @@ def adc_scan(codes: jax.Array, lut: jax.Array, *, impl: str = "pallas",
         out = adc_scan_pallas(padded, lut.astype(jnp.float32),
                               block_n=block_n, interpret=not _on_tpu())
         return out[:n]
+    raise ValueError(f"unknown impl: {impl!r}")
+
+
+def adc_scan_batch(codes: jax.Array, luts: jax.Array, *, impl: str = "pallas",
+                   block_n: int = DEFAULT_BLOCK_N,
+                   block_q: int = DEFAULT_BLOCK_Q) -> jax.Array:
+    """Multi-query scan: scores[q, n] = sum_m luts[q, m, codes[n, m]].
+
+    codes (N, M), luts (Q, M, K) -> (Q, N). The pallas impl streams each
+    code block once for all Q queries (Q-fold HBM amortization vs the
+    per-query ``adc_scan``); xla/onehot are the oracles.
+    """
+    if impl == "xla":
+        return ref.adc_scan_batch_ref(codes, luts)
+    if impl == "onehot":
+        onehot = jax.nn.one_hot(codes.astype(jnp.int32), luts.shape[-1],
+                                dtype=luts.dtype)      # (N, M, K)
+        return jnp.einsum("nmk,qmk->qn", onehot, luts)
+    if impl == "pallas":
+        q = luts.shape[0]
+        # shrink the query block for small batches (8 = f32 sublane tile)
+        bq = min(block_q, max(8, -(-q // 8) * 8))
+        padded_codes, n = _pad_to(codes, block_n, axis=0)
+        padded_luts, _ = _pad_to(luts.astype(jnp.float32), bq, axis=0)
+        out = adc_scan_batch_pallas(padded_codes, padded_luts,
+                                    block_n=block_n, block_q=bq,
+                                    interpret=not _on_tpu())
+        return out[:q, :n]
     raise ValueError(f"unknown impl: {impl!r}")
 
 

@@ -16,9 +16,28 @@ def adc_scan_ref(codes: jax.Array, lut: jax.Array) -> jax.Array:
     codes: (N, M) integer codes (uint8/int32), lut: (M, K) float table with
     ``lut[m, k] = -<net(q)_m, c_mk>`` (or any per-codebook score table).
     Returns scores (N,): ``scores[n] = sum_m lut[m, codes[n, m]]``.
+
+    The M accumulation is an explicit left-to-right chain (M is 8/16, so
+    this unrolls to M-1 adds) — the same association the Pallas kernels
+    use, which makes kernel-vs-oracle comparisons bit-exact instead of
+    association-dependent.
     """
     m_idx = jnp.arange(lut.shape[0])[None, :]            # (1, M)
-    return jnp.sum(lut[m_idx, codes.astype(jnp.int32)], axis=1)
+    gathered = lut[m_idx, codes.astype(jnp.int32)]       # (N, M)
+    acc = gathered[:, 0]
+    for m in range(1, lut.shape[0]):
+        acc = acc + gathered[:, m]
+    return acc
+
+
+def adc_scan_batch_ref(codes: jax.Array, luts: jax.Array) -> jax.Array:
+    """Multi-query ADC scan: codes (N, M), luts (Q, M, K) -> scores (Q, N).
+
+    Defined as the vmap of the single-query oracle over the LUT axis, so
+    per-query rows are bit-identical to ``adc_scan_ref`` — the batched
+    kernel is validated against exactly this.
+    """
+    return jax.vmap(adc_scan_ref, in_axes=(None, 0))(codes, luts)
 
 
 def unq_encode_ref(heads: jax.Array, codebooks: jax.Array) -> jax.Array:

@@ -1,0 +1,28 @@
+"""Version-compat accessors for JAX APIs that moved between releases.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to ``jax.shard_map``
+(and its replication-check kwarg was renamed ``check_rep`` -> ``check_vma``
+along the way). Call sites use this wrapper with the NEW spelling and it
+degrades to whatever the installed jax provides.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None,
+              **kw):
+    """``jax.shard_map`` if available, else the experimental one.
+
+    ``check_vma`` (the new name) maps onto ``check_rep`` on older jax;
+    leave it None to take the installed default.
+    """
+    new = getattr(jax, "shard_map", None)
+    if new is not None:
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        return new(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as legacy
+    if check_vma is not None:
+        kw["check_rep"] = check_vma
+    return legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

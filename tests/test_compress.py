@@ -62,6 +62,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.optim.compress import compressed_psum
+from repro.utils.compat import shard_map
 
 mesh = jax.make_mesh((4,), ("d",))
 x = jnp.arange(32, dtype=jnp.float32).reshape(4, 8) / 7.0
@@ -69,8 +70,8 @@ x = jnp.arange(32, dtype=jnp.float32).reshape(4, 8) / 7.0
 def f(xs):
     return compressed_psum(xs[0], "d")
 
-y = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("d", None),
-                          out_specs=P()))(x)
+y = jax.jit(shard_map(f, mesh=mesh, in_specs=P("d", None),
+                      out_specs=P()))(x)
 want = np.asarray(x).mean(0)
 np.testing.assert_allclose(np.asarray(y), want, rtol=0.02, atol=0.02)
 print("OK")

@@ -3,7 +3,7 @@ must match sequential references (hypothesis-driven shapes/seeds)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.models import griffin
 from repro.models.config import ModelConfig
