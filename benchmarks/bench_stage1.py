@@ -1,0 +1,113 @@
+"""Stage-1 engine benchmark: streaming scan+top-L vs the materialized
+full-matrix scan — throughput AND peak-memory trajectory.
+
+Writes ``BENCH_stage1.json`` (repo root by default) with, per path:
+
+  * ``us_per_call`` / ``mqps`` — query-vectors scanned per second,
+  * ``peak_score_bytes`` — the analytic stage-1 score footprint
+    (Q*N*4 for materialized, Q*(L+chunk)*4 for streaming),
+  * ``temp_bytes`` — the compiler's measured temp-buffer allocation for
+    the jitted stage-1 fn (None when the backend doesn't report it),
+  * ``materializes_qn`` — whether a (Q, N) f32 buffer exists in the HLO.
+
+The HLO facts are measured on the two XLA-compiled paths only; the
+Pallas row carries no HLO claim (the fused kernel's memory behavior is a
+Mosaic property — its VMEM heap bound is the analytic number, and the
+no-(Q, N)-buffer guarantee is enforced by tests/test_topl.py).
+
+Run via ``python -m benchmarks.run --only stage1`` (ci.sh records the
+json on every PR so the trajectory of the hot path is tracked).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.kernels import ops, ref
+from repro.kernels.topl_scan import adc_scan_topl_stream_xla
+
+_SIZES = {"quick": (60_000, 32, 100), "default": (200_000, 64, 300),
+          "full": (1_000_000, 64, 500)}
+_CHUNK = 4096
+
+
+def _hlo_probe(n: int, q: int, topl: int) -> dict:
+    """Compile both stage-1 paths and read buffer facts off the HLO."""
+    codes = jax.ShapeDtypeStruct((n, 8), jnp.uint8)
+    luts = jax.ShapeDtypeStruct((q, 8, 256), jnp.float32)
+    bias = jax.ShapeDtypeStruct((n,), jnp.float32)
+
+    def streaming(c, l, b):
+        return adc_scan_topl_stream_xla(c, l, b, topl=topl, n_valid=n,
+                                        chunk_n=_CHUNK)
+
+    def materialized(c, l, b):
+        s = ref.adc_scan_batch_ref(c, l) + b[None, :]
+        neg, idx = jax.lax.top_k(-s, topl)
+        return -neg, idx
+
+    qn = re.compile(rf"f32\[{q},{n}\]")
+    out = {}
+    for name, fn in (("streaming/xla", streaming),
+                     ("materialized/xla", materialized)):
+        compiled = jax.jit(fn).lower(codes, luts, bias).compile()
+        try:
+            temp = int(compiled.memory_analysis().temp_size_in_bytes)
+        except Exception:
+            temp = None
+        out[name] = {"materializes_qn": bool(qn.search(compiled.as_text())),
+                     "temp_bytes": temp}
+    return out
+
+
+def run(scale: str = "quick", out_path: str | None = None) -> dict:
+    n, q, topl = _SIZES.get(scale, _SIZES["quick"])
+    rng = np.random.default_rng(0)
+    codes = jnp.asarray(rng.integers(0, 256, (n, 8)), jnp.uint8)
+    luts = jnp.asarray(rng.normal(size=(q, 8, 256)), jnp.float32)
+
+    results = {"n": n, "q": q, "topl": topl, "chunk_n": _CHUNK,
+               "backend": jax.default_backend(), "paths": {}}
+    probe = _hlo_probe(n, q, topl)
+
+    paths = {
+        "materialized/xla": (
+            lambda: jax.lax.top_k(
+                -ref.adc_scan_batch_ref(codes, luts), topl),
+            q * n * 4),
+        "streaming/xla": (
+            lambda: ops.adc_scan_topl(codes, luts, topl=topl, impl="xla",
+                                      chunk_n=_CHUNK),
+            q * (topl + _CHUNK) * 4),
+        # interpret mode off-TPU: correctness path, not a perf claim
+        "streaming/pallas": (
+            lambda: ops.adc_scan_topl(codes, luts, topl=topl, impl="pallas"),
+            q * (topl + ops.DEFAULT_TOPL_BLOCK_N) * 4),
+    }
+    for name, (fn, score_bytes) in paths.items():
+        _, us = common.timed(fn, repeats=1)
+        mqps = q * n / (us / 1e6) / 1e6
+        hlo = probe.get(name, {})
+        results["paths"][name] = {
+            "us_per_call": round(us, 1), "mqps": round(mqps, 2),
+            "peak_score_bytes": score_bytes, **hlo}
+        common.emit(f"stage1/{name}", us,
+                    f"{mqps:.1f} Mquery-vec/s "
+                    f"score-mem={score_bytes / 1e6:.1f}MB")
+
+    if out_path is None:
+        out_path = pathlib.Path(__file__).resolve().parent.parent \
+            / "BENCH_stage1.json"
+    pathlib.Path(out_path).write_text(json.dumps(results, indent=2) + "\n")
+    print(f"# stage1: wrote {out_path}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -15,7 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from repro.core import search, unq
+from repro.core import unq
+from repro.index import UNQIndex
 from repro.kernels import ops
 
 
@@ -25,11 +26,15 @@ def run(scale: str = "default"):
     key = jax.random.PRNGKey(0)
     params, state = unq.init(key, cfg)
     base = jnp.asarray(ds.base)
+    rerank = common.SCALES[scale]["rerank"]
+    index = UNQIndex.from_trained(params, state, cfg, rerank=rerank,
+                                  backend="xla")
 
     # --- encode throughput (one feed-forward pass; the paper's headline
     # advantage over iterative additive encoders) ---
     t0 = time.time()
-    codes = search.encode_database(params, state, cfg, base)
+    index.add(base)
+    codes = index.codes
     jax.block_until_ready(codes)
     dt = time.time() - t0
     common.emit("timings/encode", dt * 1e6,
@@ -56,18 +61,15 @@ def run(scale: str = "default"):
         common.emit(f"timings/adc_scan_batch/{impl}", us,
                     f"{qn * n / (us / 1e6) / 1e6:.1f} Mquery-vec/s")
 
-    # --- top-L + rerank stage cost (paper: rerank is ~negligible) ---
+    # --- top-L + rerank stage cost (paper: rerank is ~negligible), through
+    # the streaming stage-1 engine via Index.search ---
     queries = jnp.asarray(ds.queries[:64])
-    scfg = search.SearchConfig(rerank=common.SCALES[scale]["rerank"],
-                               topk=100)
     t0 = time.time()
-    r1 = search.search(params, state, cfg, scfg, queries, codes,
-                       use_rerank=False)
+    _, r1 = index.search(queries, 100, use_rerank=False)
     jax.block_until_ready(r1)
     scan_us = (time.time() - t0) / 64 * 1e6
     t0 = time.time()
-    r2 = search.search(params, state, cfg, scfg, queries, codes,
-                       use_rerank=True)
+    _, r2 = index.search(queries, 100, use_rerank=True)
     jax.block_until_ready(r2)
     full_us = (time.time() - t0) / 64 * 1e6
     common.emit("timings/search/no-rerank", scan_us, "per-query d2 scan")

@@ -8,7 +8,11 @@ Prints ``name,us_per_call,derived`` CSV rows. ``--smoke`` is the CI path:
 it exercises ``Index.search`` on ALL registered scan backends (xla /
 onehot / pallas-interpret) over a tiny factory-built index and fails
 loudly if any backend disagrees with the xla oracle — perf regressions
-and backend drift in the new surface both surface here.
+and backend drift in the new surface both surface here. Under the
+candidate-generator resolution this covers both stage-1 engines: xla and
+pallas route through the streaming scan+top-L (bit-exact pair), onehot
+through the materialized full-matrix scan. ``--only stage1`` writes
+``BENCH_stage1.json`` (throughput + peak-memory trajectory).
 """
 from __future__ import annotations
 
@@ -80,7 +84,7 @@ def main() -> None:
         return
 
     from benchmarks import (bench_ablation, bench_recall, bench_roofline,
-                            bench_scale, bench_timings)
+                            bench_scale, bench_stage1, bench_timings)
 
     benches = {
         "timings": lambda: bench_timings.run(args.scale),
@@ -88,6 +92,7 @@ def main() -> None:
         "scale": lambda: bench_scale.run(args.scale),
         "ablation": lambda: bench_ablation.run(args.scale),
         "roofline": lambda: bench_roofline.run(),
+        "stage1": lambda: bench_stage1.run(args.scale),
     }
     selected = (args.only.split(",") if args.only else list(benches))
 

@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 tests + backend-parity smoke + stage-1 trajectory.
+#
+# REPRO_PALLAS_INTERPRET=1 pins the Pallas kernels to interpret mode so the
+# fused scan+top-L (and every other kernel body) is exercised on every PR
+# even on CPU-only runners; on a real TPU runner export
+# REPRO_PALLAS_INTERPRET=0 (or leave it unset) to compile them.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+if [ "$(python -c 'import jax; print(jax.default_backend())')" != "tpu" ]; then
+  export REPRO_PALLAS_INTERPRET="${REPRO_PALLAS_INTERPRET:-1}"
+fi
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== backend-parity smoke (all scan backends vs xla oracle) =="
+python -m benchmarks.run --smoke
+
+echo "== stage-1 engine trajectory (writes BENCH_stage1.json) =="
+python -m benchmarks.run --only stage1 --scale quick
+
+echo "CI OK"

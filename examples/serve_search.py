@@ -1,13 +1,20 @@
 """End-to-end serving driver (the paper's deployment shape): build a
 compressed ANN index, then serve batched similarity queries with latency
-stats. The index is wrapped in ``ShardedIndex`` — stage 1 scans one code
-shard per (logical) device and merges, exactly as it would across a pod.
+stats. The index is wrapped in ``ShardedIndex``: with more than one device
+visible the code shards live DEVICE-RESIDENT under shard_map — per-device
+streaming scan+top-L, all-gather merge, one rerank — exactly the pod
+layout; on a single host it falls back to logical shards.
 
     PYTHONPATH=src python examples/serve_search.py [--shards 8]
+        [--placement auto|host|device]
+
+(Run under XLA_FLAGS=--xla_force_host_platform_device_count=8 to exercise
+the device-resident path on a CPU-only host.)
 """
 import argparse
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -22,14 +29,18 @@ def main():
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--factory", default="UNQ8x256,Rerank200")
+    ap.add_argument("--placement", default="auto",
+                    choices=["auto", "host", "device"])
     args = ap.parse_args()
 
-    print(f"== build index: {args.factory} x{args.shards} shards ==")
+    print(f"== build index: {args.factory} x{args.shards} shards "
+          f"({len(jax.devices())} devices) ==")
     ds = make_synthetic_dataset("deep", n_train=5000, n_base=40000,
                                 n_query=args.batch * args.requests)
     index = ShardedIndex(index_factory(args.factory, dim=ds.dim),
-                         num_shards=args.shards)
+                         num_shards=args.shards, placement=args.placement)
     index.train(ds.train, epochs=15, lr=5e-3, log_every=1000)
+    print(f"stage-1 placement: {index.resolved_placement}")
 
     t0 = time.time()
     index.add(ds.base)

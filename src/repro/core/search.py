@@ -1,113 +1,42 @@
-"""Two-stage compressed-domain nearest-neighbor search (paper §3.3).
+"""Search configuration + retrieval metrics for the two-stage
+compressed-domain search (paper §3.3).
 
-.. deprecated::
-    This module is now a thin compatibility shim. The canonical
-    implementation lives behind the FAISS-style ``repro.index`` API::
+The search implementation itself lives behind the FAISS-style
+``repro.index`` API (the PR-1 migration is complete and the old
+``search`` / ``search_sharded`` / ``encode_database`` deprecation shims
+are gone)::
 
-        from repro.index import index_factory
-        index = index_factory("UNQ8x256,Rerank500", dim=96)
-        index.train(xs); index.add(base)
-        distances, indices = index.search(queries, k)
-
-    ``search`` / ``search_sharded`` / ``encode_database`` below delegate to
-    ``repro.index.UNQIndex`` / ``ShardedIndex`` and return the same values
-    they always did, so existing callers keep working. New code should use
-    the index objects directly — they own the batched multi-query ADC scan
-    (``ops.adc_scan_batch``) and per-device scan-backend resolution.
+    from repro.index import index_factory
+    index = index_factory("UNQ8x256,Rerank500", dim=96)
+    index.train(xs); index.add(base)
+    distances, indices = index.search(queries, k)
 
 Stage 1 — candidate generation with d2 (Eq. 8): build a (M, K) lookup table
     ``lut[m, k] = -<net(q)_m, c_mk>`` with one encoder pass + M*K dot
-    products, then scan the compressed database (M adds per point) and take
-    the top-L candidates.
+    products, then stream the compressed database through the fused
+    scan+top-L engine (``repro.index.candidates``).
 Stage 2 — reranking with d1 (Eq. 7): reconstruct only the L candidates with
     the decoder and re-score with exact distances ``||q - g(i)||^2``.
+
+This module keeps the two pieces that are configuration/evaluation rather
+than retrieval: ``SearchConfig`` (the paper's search hyperparameters,
+referenced by ``repro.configs``) and ``recall_at_k`` (the §4 metric).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 
-import jax
 import jax.numpy as jnp
-
-from repro.kernels import ops
 
 
 @dataclasses.dataclass(frozen=True)
 class SearchConfig:
     rerank: int = 500         # L: candidates reranked with d1 (paper: 500 @ 1M)
     topk: int = 100           # neighbors returned (recall@k evaluated up to this)
-    scan_impl: str = "xla"    # scan backend: "xla" | "onehot" | "pallas" | "auto"
+    scan_impl: str = "auto"   # scan backend: "xla" | "onehot" | "pallas" | "auto"
 
 
-def build_lut(params, state, cfg, queries) -> jax.Array:
-    """(Q, D) queries -> (Q, M, K) tables of -<net(q)_m, c_mk>."""
-    from repro.index.unq_index import build_luts
-    return build_luts(params, state, cfg, queries)
-
-
-def encode_database(params, state, cfg, base, *, batch_size: int = 8192,
-                    impl: str = "xla") -> jax.Array:
-    """Compress the base set: (N, D) -> uint8 codes (N, M).
-
-    One feed-forward pass per batch (the paper's headline encoding speed:
-    no iterative optimization, unlike AQ/LSQ).
-    """
-    from repro.index.unq_index import encode_database as _encode
-    return _encode(params, state, cfg, base, batch_size=batch_size, impl=impl)
-
-
-@functools.partial(jax.jit, static_argnames=("topl", "scan_impl"))
-def candidates_for_query(lut: jax.Array, codes: jax.Array, *, topl: int,
-                         scan_impl: str = "xla"):
-    """Stage 1 for one query: lut (M, K), codes (N, M) -> (scores, idx) top-L.
-
-    Scores are d2 up to const(q): lower = closer. Kept for single-query
-    callers; batched search goes through ``ops.adc_scan_batch``.
-    """
-    scores = ops.adc_scan(codes, lut, impl=scan_impl)   # (N,)
-    neg, idx = jax.lax.top_k(-scores, topl)
-    return -neg, idx
-
-
-def _index_for(params, state, cfg, search_cfg: SearchConfig, codes=None):
-    from repro.index import UNQIndex
-    return UNQIndex.from_trained(params, state, cfg, codes=codes,
-                                 rerank=search_cfg.rerank,
-                                 backend=search_cfg.scan_impl)
-
-
-def search(params, state, cfg, search_cfg: SearchConfig, queries, codes,
-           *, use_rerank: bool = True, use_d2: bool = True):
-    """Full two-stage search. queries (Q, D), codes (N, M) -> indices (Q, k).
-
-    ``use_rerank=False`` reproduces the "No reranking" ablation;
-    ``use_d2=False`` (exhaustive d1) reproduces "Exhaustive reranking".
-
-    Deprecated shim over ``UNQIndex.search`` (see module docstring).
-    """
-    index = _index_for(params, state, cfg, search_cfg, codes)
-    _, indices = index.search(jnp.asarray(queries), search_cfg.topk,
-                              use_rerank=use_rerank, use_d2=use_d2)
-    return indices
-
-
-def search_sharded(params, state, cfg, search_cfg: SearchConfig, queries,
-                   codes_shards: list[jax.Array], shard_offsets: list[int]):
-    """Distributed stage 1: per-shard top-L merged across shards; the
-    caller reranks the merged pool. Returns (Q, L) global candidates.
-
-    Deprecated shim over ``ShardedIndex.stage1_candidates``.
-    """
-    from repro.index import ShardedIndex
-    index = _index_for(params, state, cfg, search_cfg)
-    sharded = ShardedIndex.from_shards(index, codes_shards, shard_offsets)
-    _, cand = sharded.stage1_candidates(jnp.asarray(queries),
-                                        topl=search_cfg.rerank)
-    return cand
-
-
-def recall_at_k(retrieved: jax.Array, gt_nn: jax.Array, ks=(1, 10, 100)) -> dict:
+def recall_at_k(retrieved, gt_nn, ks=(1, 10, 100)) -> dict:
     """Recall@k (paper §4): P[true NN among the k closest retrieved].
 
     retrieved: (Q, >=max(ks)) indices; gt_nn: (Q,) true nearest neighbor.

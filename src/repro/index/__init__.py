@@ -11,13 +11,19 @@ surface over UNQ (the paper's method) and the shallow MCQ baselines.
     index.save("ckpt/index"); index = Index.load("ckpt/index")
 
 Scan backends (xla | onehot | pallas) resolve per device via
-``repro.index.backend``; wrap any index in ``ShardedIndex`` for
-pod-style per-shard scanning with a merged rerank.
+``repro.index.backend``; stage-1 candidate generation resolves through
+backend capabilities to the streaming scan+top-L engine
+(``repro.index.candidates``); wrap any index in ``ShardedIndex`` for
+pod-style per-device scanning with an all-gathered merged rerank.
 """
 from repro.index.backend import (available_scan_backends,
+                                 backend_capabilities,
+                                 backend_supports,
                                  register_scan_backend,
                                  resolve_scan_backend)
 from repro.index.base import Index
+from repro.index.candidates import (CandidateGenerator, MaterializedTopL,
+                                    StreamingTopL, candidate_generator_for)
 from repro.index.factory import index_factory
 from repro.index.pq_index import OPQIndex, PQIndex, RVQIndex
 from repro.index.sharded import ShardedIndex
@@ -32,9 +38,15 @@ __all__ = [
     "OPQIndex",
     "RVQIndex",
     "ShardedIndex",
+    "CandidateGenerator",
+    "MaterializedTopL",
+    "StreamingTopL",
+    "candidate_generator_for",
     "index_factory",
     "load_index",
     "available_scan_backends",
+    "backend_capabilities",
+    "backend_supports",
     "register_scan_backend",
     "resolve_scan_backend",
 ]

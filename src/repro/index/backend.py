@@ -14,11 +14,21 @@ Backends are the kernel dispatch targets of ``repro.kernels.ops``:
 ``auto_select`` predicate holds on the current device (pallas on TPU, xla
 elsewhere). Explicitly naming a registered backend always works — e.g.
 benchmarks A/B all three on one host.
+
+Backends also declare **capabilities** — feature flags the index layer
+resolves against instead of branching on backend names:
+
+  * ``streaming_topl`` — the backend has a stage-1 path that produces
+    per-query top-L candidates WITHOUT materializing the (Q, N) score
+    matrix (``ops.adc_scan_topl``). Backends without it fall back to the
+    materialized full-matrix scan + ``lax.top_k``.
+  * ``fused_topl``     — the streaming path is a single fused kernel
+    (scan + running top-L heap in VMEM), not a chunked composition.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Iterable
 
 import jax
 
@@ -29,6 +39,7 @@ class ScanBackend:
     priority: int                       # higher wins for "auto"
     auto_select: Callable[[], bool]     # eligible for auto-resolution?
     description: str = ""
+    capabilities: frozenset = frozenset()
 
 
 _REGISTRY: dict[str, ScanBackend] = {}
@@ -36,9 +47,25 @@ _REGISTRY: dict[str, ScanBackend] = {}
 
 def register_scan_backend(name: str, *, priority: int,
                           auto_select: Callable[[], bool] = lambda: True,
-                          description: str = "") -> None:
+                          description: str = "",
+                          capabilities: Iterable[str] = ()) -> None:
     """Register (or override) a scan backend for auto-resolution."""
-    _REGISTRY[name] = ScanBackend(name, priority, auto_select, description)
+    _REGISTRY[name] = ScanBackend(name, priority, auto_select, description,
+                                  frozenset(capabilities))
+
+
+def backend_capabilities(name: str) -> frozenset:
+    """Declared capability flags of a registered backend."""
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown scan backend {name!r}; registered: "
+            f"{available_scan_backends()}")
+    return _REGISTRY[name].capabilities
+
+
+def backend_supports(name: str, capability: str) -> bool:
+    """True iff ``name`` is registered and declares ``capability``."""
+    return name in _REGISTRY and capability in _REGISTRY[name].capabilities
 
 
 def available_scan_backends() -> list[str]:
@@ -78,10 +105,12 @@ def _on_tpu() -> bool:
 
 register_scan_backend(
     "xla", priority=0,
-    description="pure-jnp gather oracle (always available)")
+    description="pure-jnp gather oracle (always available)",
+    capabilities=("streaming_topl",))
 register_scan_backend(
     "onehot", priority=10, auto_select=lambda: False,
     description="one-hot matmul formulation in plain XLA (A/B target)")
 register_scan_backend(
     "pallas", priority=100, auto_select=_on_tpu,
-    description="fused Pallas TPU kernel (interpret mode off-TPU)")
+    description="fused Pallas TPU kernel (interpret mode off-TPU)",
+    capabilities=("streaming_topl", "fused_topl"))

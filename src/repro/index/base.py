@@ -15,16 +15,16 @@ ADC scan (d2, Eq. 8), top-L candidates, decoder rerank (d1, Eq. 7) — is
 implemented ONCE here and shared by UNQ and every shallow baseline, which
 is what makes paper-style method comparisons a single loop.
 
-Stage 1 runs on ``ops.adc_scan_batch``: one kernel launch scans the whole
-code matrix against all Q query LUTs (the code stream is read once per
-block for all queries), replacing the per-query ``vmap`` scan. Backends
-resolve per device through ``repro.index.backend`` instead of threading
-``impl=`` strings through every call.
+Stage 1 is delegated to a ``CandidateGenerator`` resolved through the
+scan-backend registry (``repro.index.candidates``): backends declaring the
+``streaming_topl`` capability run the streaming scan+top-L engine — the
+(Q, N) score matrix is never materialized — and the rest fall back to the
+classic full-matrix scan. Every Index subclass gets the right path with no
+per-class branching, and per-point score biases flow through either.
 """
 from __future__ import annotations
 
 import abc
-import functools
 import json
 import pathlib
 from typing import Any
@@ -33,26 +33,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint.manager import load_pytree, save_pytree
-from repro.index.backend import resolve_scan_backend
-from repro.kernels import ops
+from repro.index.candidates import candidate_generator_for
 
 # kind -> Index subclass, populated by __init_subclass__
 _KINDS: dict[str, type["Index"]] = {}
-
-
-@functools.partial(jax.jit, static_argnames=("topl", "impl"))
-def _stage1_topl(codes, luts, bias, *, topl: int, impl: str):
-    """Batched stage 1: d2 scores for all queries + per-query top-L.
-
-    codes (N, M), luts (Q, M, K), bias None | (N,) -> ((Q, L), (Q, L)).
-    Lower score = closer; ``bias`` carries per-point terms that do not fit
-    the LUT decomposition (RVQ's stored ||decode(code)||^2).
-    """
-    scores = ops.adc_scan_batch(codes, luts, impl=impl)    # (Q, N)
-    if bias is not None:
-        scores = scores + bias[None, :]
-    neg, idx = jax.lax.top_k(-scores, topl)
-    return -neg, idx
 
 
 class Index(abc.ABC):
@@ -83,6 +67,15 @@ class Index(abc.ABC):
     def codes(self) -> jax.Array | None:
         """The compressed database, (ntotal, M) uint8."""
         return self._codes
+
+    @property
+    def bias(self) -> jax.Array | None:
+        """Per-point additive d2 score term, (ntotal,) f32, or None.
+
+        Additive quantizers (RVQ) store ||decode(code)||^2 here — the
+        standard extra-4-bytes trick. Public so wrappers (``ShardedIndex``,
+        custom shard stores) never reach into private attributes."""
+        return self._bias
 
     @property
     @abc.abstractmethod
@@ -168,13 +161,11 @@ class Index(abc.ABC):
             raise ValueError(
                 f"{type(self).__name__} has no rerank budget (rerank=0); "
                 "set index.rerank or pass use_rerank=False")
-        impl = resolve_scan_backend(self.backend)
-
         if use_d2:
             topl = min(self.rerank if use_rerank else k, self.ntotal)
             luts = self._build_luts(queries)
-            d2, cand = _stage1_topl(self._codes, luts, self._bias,
-                                    topl=topl, impl=impl)
+            gen = candidate_generator_for(self.backend)
+            d2, cand = gen.topl(self._codes, luts, self._bias, topl=topl)
             if not use_rerank:
                 return d2[:, :k], cand[:, :k]
         else:

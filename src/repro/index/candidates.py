@@ -1,0 +1,95 @@
+"""Pluggable stage-1 candidate generation (the streaming engine's index
+face).
+
+``Index.search`` and ``ShardedIndex`` delegate stage 1 — d2 scores over
+the compressed database plus per-query top-L — to a ``CandidateGenerator``
+resolved through the scan-backend registry, instead of hardcoding one
+"full (Q, N) matrix + lax.top_k" implementation:
+
+  * ``StreamingTopL``     backends with the ``streaming_topl`` capability
+                          (pallas: fused scan+top-L kernel; xla: chunked
+                          scan + incremental merge). Peak memory O(Q*L);
+                          the (Q, N) score matrix is never materialized.
+  * ``MaterializedTopL``  the classic full-matrix scan for backends
+                          without a streaming path (onehot), kept as the
+                          A/B reference.
+
+Both produce bit-identical (score, index) results — the streaming paths
+reproduce ``lax.top_k`` tie semantics exactly — so generator selection is
+purely a memory/performance decision, never a quality one. Per-point score
+biases (RVQ's ||decode(code)||^2) flow through either path.
+"""
+from __future__ import annotations
+
+import abc
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.index.backend import backend_supports, resolve_scan_backend
+from repro.kernels import ops
+
+
+class CandidateGenerator(abc.ABC):
+    """Stage 1 strategy: codes + per-query LUTs -> top-L candidates."""
+
+    #: whether this generator allocates the full (Q, N) score matrix
+    materializes_scores: bool
+
+    def __init__(self, impl: str):
+        self.impl = impl                # concrete kernels.ops impl string
+
+    @abc.abstractmethod
+    def topl(self, codes, luts, bias, *, topl: int):
+        """codes (N, M), luts (Q, M, K), bias None | (N,) ->
+        (scores, indices), each (Q, min(topl, N)), sorted closest-first
+        with ties broken toward the smaller database index."""
+
+    def __repr__(self):
+        return f"{type(self).__name__}(impl={self.impl!r})"
+
+
+@functools.partial(jax.jit, static_argnames=("topl", "impl"))
+def _materialized_topl(codes, luts, bias, *, topl: int, impl: str):
+    scores = ops.adc_scan_batch(codes, luts, impl=impl)    # (Q, N)
+    if bias is not None:
+        scores = scores + bias[None, :]
+    neg, idx = jax.lax.top_k(-scores, topl)
+    return -neg, idx
+
+
+class MaterializedTopL(CandidateGenerator):
+    """Full (Q, N) score matrix + ``lax.top_k`` (the pre-streaming stage 1;
+    reference semantics, O(Q*N) peak memory)."""
+
+    materializes_scores = True
+
+    def topl(self, codes, luts, bias, *, topl: int):
+        return _materialized_topl(codes, luts, bias,
+                                  topl=min(topl, codes.shape[0]),
+                                  impl=self.impl)
+
+
+class StreamingTopL(CandidateGenerator):
+    """Streaming scan+top-L (``ops.adc_scan_topl``): O(Q*L) peak memory,
+    bit-identical to ``MaterializedTopL`` including tie resolution."""
+
+    materializes_scores = False
+
+    def topl(self, codes, luts, bias, *, topl: int):
+        return ops.adc_scan_topl(codes, luts, topl=topl, bias=bias,
+                                 impl=self.impl)
+
+
+def candidate_generator_for(backend: str | None = "auto") -> CandidateGenerator:
+    """Resolve an index's backend request to a stage-1 generator.
+
+    The backend name resolves through the scan registry; backends that
+    declare the ``streaming_topl`` capability get the streaming engine,
+    everything else the materialized fallback.
+    """
+    impl = resolve_scan_backend(backend)
+    if backend_supports(impl, "streaming_topl"):
+        return StreamingTopL(impl)
+    return MaterializedTopL(impl)

@@ -1,12 +1,26 @@
-"""ShardedIndex: distributed stage 1 over logical code shards.
+"""ShardedIndex: distributed stage 1 over code shards.
 
 Subsumes the old ``core.search.search_sharded`` free function and the
 host-side shard driver in ``examples/serve_search.py``: each shard scans
-its own code block with the (replicated) LUTs, the per-shard top-L merge
-to a global candidate pool, and stage 2 reranks the merged pool once —
-the same pattern that scales the paper's billion-vector experiments
-across a pod (one shard per device, merge = all-gather of (L, 2) tuples;
-on a single host the shards are logical views).
+its own code block with the (replicated) LUTs through the streaming
+scan+top-L engine, the per-shard pools merge into a global candidate pool,
+and stage 2 reranks the merged pool once — the pattern that scales the
+paper's billion-vector experiments across a pod.
+
+Placement modes:
+
+  * ``device`` — the real thing: code (and bias) shards live RESIDENT on
+    devices under ``shard_map`` (``repro.parallel.search``), one shard per
+    device, per-device fused scan+top-L, all-gather of the (L, 2)
+    candidate tuples, one rerank on the merged pool. Selected by
+    ``placement="auto"`` whenever more than one device is visible.
+  * ``host`` — logical shards (host-side views over one code matrix),
+    scanned sequentially. The single-device fallback, and what
+    ``from_shards`` uses for externally-supplied shard stores.
+
+Both modes are bit-identical to the flat ``Index.search`` stage 1 — the
+per-shard top-L keeps everything the global top-L can contain, and merges
+preserve ``lax.top_k``'s smaller-index tie-break.
 """
 from __future__ import annotations
 
@@ -14,18 +28,24 @@ import jax
 import jax.numpy as jnp
 
 from repro.index import base
-from repro.index.backend import resolve_scan_backend
+from repro.index.backend import backend_supports, resolve_scan_backend
+from repro.index.candidates import candidate_generator_for
 
 
 class ShardedIndex:
     """Wraps a trained Index, presenting the same train/add/search surface
     with stage 1 executed per-shard and merged."""
 
-    def __init__(self, inner: base.Index, num_shards: int = 8):
+    def __init__(self, inner: base.Index, num_shards: int = 8, *,
+                 placement: str = "auto"):
         if num_shards < 1:
             raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        if placement not in ("auto", "host", "device"):
+            raise ValueError(
+                f"placement must be auto|host|device, got {placement!r}")
         self.inner = inner
         self.num_shards = num_shards
+        self.placement = placement
         # explicit shard mode (from_shards): pre-split code blocks
         self._shards = None
         self._offsets = None
@@ -43,10 +63,10 @@ class ShardedIndex:
         inner index carries a bias — dropping it silently would corrupt
         the stage-1 ranking.
         """
-        index = cls(inner, num_shards=len(shards))
+        index = cls(inner, num_shards=len(shards), placement="host")
         index._shards = [jnp.asarray(s) for s in shards]
         index._offsets = list(offsets)
-        if biases is None and inner._bias is not None:
+        if biases is None and inner.bias is not None:
             raise ValueError(
                 f"{type(inner).__name__} scores carry a per-point bias; "
                 "pass the matching per-shard `biases` to from_shards")
@@ -84,13 +104,28 @@ class ShardedIndex:
         self.inner.add(xs)
         return self
 
+    @property
+    def resolved_placement(self) -> str:
+        """The stage-1 placement searches will actually use. Device-resident
+        iff requested, or auto with a real mesh AND a streaming-capable
+        backend (explicit from_shards stores are host-side by
+        construction; the materialized onehot path stays host-logical)."""
+        if self._shards is not None:
+            return "host"
+        if self.placement == "auto":
+            streaming = backend_supports(
+                resolve_scan_backend(self.inner.backend), "streaming_topl")
+            return "device" if streaming and len(jax.devices()) > 1 \
+                else "host"
+        return self.placement
+
     def _shard_views(self):
         """[(codes, offset, bias)] — explicit shards, or a contiguous
         equal split of the inner code matrix (tail rides the last shard)."""
         if self._shards is not None:
             biases = self._biases or [None] * len(self._shards)
             return list(zip(self._shards, self._offsets, biases))
-        codes, bias = self.inner.codes, self.inner._bias
+        codes, bias = self.inner.codes, self.inner.bias
         n = codes.shape[0]
         per = max(n // self.num_shards, 1)
         views = []
@@ -108,17 +143,28 @@ class ShardedIndex:
     def stage1_candidates(self, queries, topl: int | None = None):
         """Distributed stage 1: per-shard top-L merged into the global
         candidate pool. Returns (d2 scores, global indices), each
-        (Q, min(topl, sum of per-shard L)), closest-first."""
+        (Q, min(topl, pool width)), closest-first."""
         if topl is None:
             topl = self.inner.rerank
         queries = jnp.asarray(queries)
         luts = self.inner._build_luts(queries)
         impl = resolve_scan_backend(self.inner.backend)
+
+        if self.resolved_placement == "device":
+            if not backend_supports(impl, "streaming_topl"):
+                raise ValueError(
+                    f"placement='device' needs a streaming_topl-capable "
+                    f"scan backend, and {impl!r} does not declare it; use "
+                    "placement='host' or a streaming backend (xla/pallas)")
+            from repro.parallel.search import device_stage1_topl
+            return device_stage1_topl(self.inner.codes, luts,
+                                      self.inner.bias, topl=topl, impl=impl)
+
+        gen = candidate_generator_for(self.inner.backend)
         all_scores, all_idx = [], []
         for shard, off, bias in self._shard_views():
-            s, i = base._stage1_topl(shard, luts, bias,
-                                     topl=min(topl, shard.shape[0]),
-                                     impl=impl)
+            s, i = gen.topl(shard, luts, bias,
+                            topl=min(topl, shard.shape[0]))
             all_scores.append(s)
             all_idx.append(i + off)
         scores = jnp.concatenate(all_scores, axis=1)     # (Q, n_shards*L)
@@ -155,3 +201,7 @@ class ShardedIndex:
                 return False
             expect += int(s.shape[0])
         return True
+
+    def __repr__(self):
+        return (f"ShardedIndex({self.inner!r}, num_shards={self.num_shards}, "
+                f"placement={self.resolved_placement!r})")

@@ -9,10 +9,15 @@ Each op dispatches between:
                    without Pallas, useful to A/B the adaptation itself).
 
 All wrappers handle padding to kernel block multiples.
+
+Off-TPU the Pallas kernels run in interpret mode automatically; CI can pin
+the decision with ``REPRO_PALLAS_INTERPRET=1`` (force interpret, e.g. when
+the accelerator probe is unreliable) or ``=0`` (force compiled).
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -20,11 +25,23 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.adc_scan import (adc_scan_pallas, adc_scan_batch_pallas,
                                     DEFAULT_BLOCK_N, DEFAULT_BLOCK_Q)
+from repro.kernels.topl_scan import (adc_scan_topl_pallas,
+                                     adc_scan_topl_stream_xla,
+                                     DEFAULT_CHUNK_N, DEFAULT_TOPL_BLOCK_N,
+                                     DEFAULT_TOPL_BLOCK_Q)
 from repro.kernels.unq_encode import unq_encode_pallas, DEFAULT_BLOCK_B
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    """Pallas interpret-mode decision, overridable for CI via env."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "")
+    if env != "":
+        return env not in ("0", "false", "False")
+    return not _on_tpu()
 
 
 def _pad_to(x: jax.Array, multiple: int, axis: int = 0):
@@ -49,7 +66,7 @@ def adc_scan(codes: jax.Array, lut: jax.Array, *, impl: str = "pallas",
     if impl == "pallas":
         padded, n = _pad_to(codes, block_n, axis=0)
         out = adc_scan_pallas(padded, lut.astype(jnp.float32),
-                              block_n=block_n, interpret=not _on_tpu())
+                              block_n=block_n, interpret=_interpret())
         return out[:n]
     raise ValueError(f"unknown impl: {impl!r}")
 
@@ -77,9 +94,55 @@ def adc_scan_batch(codes: jax.Array, luts: jax.Array, *, impl: str = "pallas",
         padded_luts, _ = _pad_to(luts.astype(jnp.float32), bq, axis=0)
         out = adc_scan_batch_pallas(padded_codes, padded_luts,
                                     block_n=block_n, block_q=bq,
-                                    interpret=not _on_tpu())
+                                    interpret=_interpret())
         return out[:q, :n]
     raise ValueError(f"unknown impl: {impl!r}")
+
+
+def adc_scan_topl(codes: jax.Array, luts: jax.Array, *, topl: int,
+                  bias: jax.Array | None = None, impl: str = "pallas",
+                  block_n: int = DEFAULT_TOPL_BLOCK_N,
+                  block_q: int = DEFAULT_TOPL_BLOCK_Q,
+                  chunk_n: int = DEFAULT_CHUNK_N):
+    """Streaming stage 1: per-query top-L over the compressed database
+    WITHOUT materializing the (Q, N) score matrix.
+
+    codes (N, M), luts (Q, M, K), optional bias (N,) ->
+    ((Q, L), (Q, L) int32) with L = min(topl, N), sorted by
+    (score asc, index asc) — bit-identical to ``lax.top_k`` over the full
+    matrix (``ref.adc_scan_topl_ref``), tie resolution included.
+
+      impl="pallas"  the fused scan+top-L kernel: a running (block_q, L)
+                     heap in VMEM while code blocks stream from HBM.
+      impl="xla"     chunked ``lax.scan`` + incremental top-L merge; the
+                     always-available fallback with the same O(Q*L) peak.
+
+    Both paths mask the internal N-padding rows to +inf so a pad entry can
+    never surface as a candidate. ``bias`` carries per-point terms that do
+    not fit the LUT decomposition (RVQ's stored ||decode(code)||^2).
+    """
+    n = codes.shape[0]
+    q = luts.shape[0]
+    topl = min(topl, n)
+    if bias is None:
+        bias = jnp.zeros((n,), jnp.float32)
+    if impl == "xla":
+        return adc_scan_topl_stream_xla(
+            codes, luts, bias, topl=topl, n_valid=n,
+            chunk_n=min(chunk_n, max(topl, -(-n // 8))))
+    if impl == "pallas":
+        bq = min(block_q, max(8, -(-q // 8) * 8))
+        padded_codes, _ = _pad_to(codes, block_n, axis=0)
+        padded_luts, _ = _pad_to(luts.astype(jnp.float32), bq, axis=0)
+        padded_bias, _ = _pad_to(bias.astype(jnp.float32), block_n, axis=0)
+        scores, idx = adc_scan_topl_pallas(
+            padded_codes, padded_luts, padded_bias, topl=topl, n_valid=n,
+            block_n=block_n, block_q=bq, interpret=_interpret())
+        return scores[:q], idx[:q]
+    raise ValueError(
+        f"unknown impl for adc_scan_topl: {impl!r} (streaming top-L has "
+        "'pallas' and 'xla' paths; 'onehot' materializes the score matrix "
+        "and is routed through the MaterializedTopL generator instead)")
 
 
 def unq_encode(heads: jax.Array, codebooks: jax.Array, *, impl: str = "pallas",
@@ -93,7 +156,7 @@ def unq_encode(heads: jax.Array, codebooks: jax.Array, *, impl: str = "pallas",
     if impl == "pallas":
         padded, b = _pad_to(heads, block_b, axis=0)
         out = unq_encode_pallas(padded, codebooks, block_b=block_b,
-                                interpret=not _on_tpu())
+                                interpret=_interpret())
         return out[:b]
     raise ValueError(f"unknown impl: {impl!r}")
 

@@ -40,6 +40,24 @@ def adc_scan_batch_ref(codes: jax.Array, luts: jax.Array) -> jax.Array:
     return jax.vmap(adc_scan_ref, in_axes=(None, 0))(codes, luts)
 
 
+def adc_scan_topl_ref(codes: jax.Array, luts: jax.Array,
+                      bias: jax.Array | None, topl: int):
+    """Materialized oracle for the streaming scan+top-L: the full (Q, N)
+    score matrix followed by ``lax.top_k``. Ground truth for the fused
+    Pallas kernel and the chunked xla fallback — both must match this
+    bit-for-bit in (score, index), including tie resolution (top_k breaks
+    ties toward the smaller database index).
+
+    codes (N, M), luts (Q, M, K), bias None | (N,) -> ((Q, L), (Q, L))
+    with L = min(topl, N), sorted by (score asc, index asc).
+    """
+    scores = adc_scan_batch_ref(codes, luts)            # (Q, N)
+    if bias is not None:
+        scores = scores + bias[None, :]
+    neg, idx = jax.lax.top_k(-scores, min(topl, codes.shape[0]))
+    return -neg, idx
+
+
 def unq_encode_ref(heads: jax.Array, codebooks: jax.Array) -> jax.Array:
     """Codeword assignment (paper Eq. 4).
 

@@ -1,0 +1,185 @@
+"""Fused streaming scan + top-L Pallas TPU kernel (the stage-1 engine).
+
+The classic stage 1 materializes the full (Q, N) score matrix and runs
+``jax.lax.top_k`` over it. At the billion-vector scale the paper targets
+that matrix must never exist: this kernel keeps a running (block_q, L)
+top-L heap resident in VMEM while uint8 code blocks stream HBM->VMEM, so
+peak memory for stage 1 drops from O(Q*N) to O(Q*L).
+
+Memory model per grid step (grid = (Q/block_q, N/block_n), n innermost):
+
+  * the (block_q, L) score/index heap lives in the OUTPUT blocks, whose
+    index map ignores the n axis — Pallas keeps them in VMEM across the
+    whole n sweep and writes them back to HBM once per query block;
+  * the (block_n, M) uint8 code block and (block_n,) bias block stream in
+    (double-buffered by the grid), are scored with the same one-hot MXU
+    contraction as ``adc_scan_batch``, and are merged into the heap;
+  * rows past ``n_valid`` (the pad the wrapper added to reach a block_n
+    multiple) are masked to +inf score so they can never surface.
+
+Tie semantics are EXACTLY those of ``lax.top_k`` over the full matrix:
+candidates are ordered by (score asc, global index asc). The merge selects
+lexicographic minima directly — min score, then min global index among the
+tied — so the streaming result is bit-identical to the materialized oracle
+(``ref.adc_scan_topl_ref``), not merely set-equal. The same argument makes
+the chunked ``lax.scan`` fallback below exact: within the concatenated
+[heap | chunk] array, positions are always in ascending-global-index order
+among equal scores, and ``lax.top_k`` breaks ties by position.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref
+
+DEFAULT_TOPL_BLOCK_N = 1024
+DEFAULT_TOPL_BLOCK_Q = 8
+DEFAULT_CHUNK_N = 4096
+
+_IMAX = jnp.iinfo(jnp.int32).max
+
+
+def _adc_scan_topl_kernel(codes_ref, luts_ref, bias_ref, scores_ref, idx_ref,
+                          *, topl: int, block_n: int, block_q: int,
+                          num_books: int, book_size: int, n_valid: int):
+    ni = pl.program_id(1)
+
+    @pl.when(ni == 0)
+    def _init():                      # fresh heap at the start of each n sweep
+        scores_ref[...] = jnp.full((block_q, topl), jnp.inf, jnp.float32)
+        idx_ref[...] = jnp.full((block_q, topl), _IMAX, jnp.int32)
+
+    # --- score the streamed block: same one-hot MXU contraction as
+    # adc_scan_batch (bit-identical scores, so ties resolve identically) ---
+    codes = codes_ref[...].astype(jnp.int32)           # (Bn, M)
+    luts = luts_ref[...]                               # (Bq, M, K)
+    acc = jnp.zeros((block_q, block_n), jnp.float32)
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (1, book_size), 1)
+    for m in range(num_books):                         # M is static (8 or 16)
+        onehot = (codes[:, m:m + 1] == iota_k).astype(jnp.float32)
+        acc = acc + jax.lax.dot_general(
+            luts[:, m, :].astype(jnp.float32), onehot,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    acc = acc + bias_ref[...][None, :]
+
+    # global ids of this block; pad rows (>= n_valid) masked to +inf score
+    gids = ni * block_n + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_n), 1)                    # (1, Bn)
+    acc = jnp.where(gids < n_valid, acc, jnp.inf)
+    gids = jnp.broadcast_to(gids, (block_q, block_n))
+
+    # --- merge block into the running heap: L lexicographic minima of
+    # [heap | block] by (score, global id). Only min/where/compare ops, so
+    # the merge maps onto the VPU without gathers or sorts. ---
+    cand_s = jnp.concatenate([scores_ref[...], acc], axis=1)
+    cand_g = jnp.concatenate([idx_ref[...], gids], axis=1)
+
+    def select(l, carry):
+        cs, cg, out_s, out_g = carry
+        best = jnp.min(cs, axis=1)                     # (Bq,)
+        at_best = cs == best[:, None]
+        sel = jnp.min(jnp.where(at_best, cg, _IMAX), axis=1)
+        out_s = jax.lax.dynamic_update_slice(out_s, best[:, None], (0, l))
+        out_g = jax.lax.dynamic_update_slice(out_g, sel[:, None], (0, l))
+        knocked = at_best & (cg == sel[:, None])
+        return (jnp.where(knocked, jnp.inf, cs),
+                jnp.where(knocked, _IMAX, cg), out_s, out_g)
+
+    init = (cand_s, cand_g,
+            jnp.full((block_q, topl), jnp.inf, jnp.float32),
+            jnp.full((block_q, topl), _IMAX, jnp.int32))
+    _, _, out_s, out_g = jax.lax.fori_loop(0, topl, select, init)
+    scores_ref[...] = out_s
+    idx_ref[...] = out_g
+
+
+@functools.partial(jax.jit, static_argnames=("topl", "n_valid", "block_n",
+                                             "block_q", "interpret"))
+def adc_scan_topl_pallas(codes: jax.Array, luts: jax.Array, bias: jax.Array,
+                         *, topl: int, n_valid: int,
+                         block_n: int = DEFAULT_TOPL_BLOCK_N,
+                         block_q: int = DEFAULT_TOPL_BLOCK_Q,
+                         interpret: bool = False):
+    """Streaming stage 1: per-query top-L without a (Q, N) score matrix.
+
+    codes: (N, M) uint8/int32, N % block_n == 0 (ops.py pads; rows at or
+           past ``n_valid`` are the pad and are masked out).
+    luts:  (Q, M, K) float32, Q % block_q == 0 (ops.py pads).
+    bias:  (N,) float32 per-point additive score term (zeros when unused).
+    Returns (scores, indices): ((Q, topl) f32, (Q, topl) i32), sorted by
+    (score asc, index asc) — bit-identical to ``lax.top_k`` over the full
+    score matrix.
+    """
+    n, num_books = codes.shape
+    q, _, book_size = luts.shape
+    assert n % block_n == 0, f"N={n} must be padded to a multiple of {block_n}"
+    assert q % block_q == 0, f"Q={q} must be padded to a multiple of {block_q}"
+    assert 0 < topl <= n_valid <= n, (topl, n_valid, n)
+    grid = (q // block_q, n // block_n)
+    kernel = functools.partial(
+        _adc_scan_topl_kernel, topl=topl, block_n=block_n, block_q=block_q,
+        num_books=num_books, book_size=book_size, n_valid=n_valid)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, num_books), lambda qi, ni: (ni, 0)),
+            pl.BlockSpec((block_q, num_books, book_size),
+                         lambda qi, ni: (qi, 0, 0)),
+            pl.BlockSpec((block_n,), lambda qi, ni: (ni,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, topl), lambda qi, ni: (qi, 0)),
+            pl.BlockSpec((block_q, topl), lambda qi, ni: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, topl), jnp.float32),
+            jax.ShapeDtypeStruct((q, topl), jnp.int32),
+        ],
+        interpret=interpret,
+    )(codes, luts, bias)
+
+
+@functools.partial(jax.jit, static_argnames=("topl", "n_valid", "chunk_n"))
+def adc_scan_topl_stream_xla(codes: jax.Array, luts: jax.Array,
+                             bias: jax.Array, *, topl: int, n_valid: int,
+                             chunk_n: int = DEFAULT_CHUNK_N):
+    """XLA fallback with the SAME streaming semantics as the Pallas kernel:
+    a ``lax.scan`` over (Q, chunk_n) code chunks carrying the (Q, L) heap,
+    merged with an incremental ``lax.top_k``. Peak live memory is
+    O(Q * (L + chunk_n)) — the (Q, N) matrix is never built (asserted by
+    the HLO peak-memory test).
+
+    Exactness: the carry is sorted by (score, index) and every chunk entry
+    has a larger global index than every carried entry, so ``lax.top_k``'s
+    positional tie-break IS the ascending-global-index tie-break — the
+    result is bit-identical to the materialized oracle.
+    """
+    n, m = codes.shape
+    q = luts.shape[0]
+    pad = (-n) % chunk_n
+    codes_c = jnp.pad(codes, ((0, pad), (0, 0))).reshape(-1, chunk_n, m)
+    bias_c = jnp.pad(bias, (0, pad)).reshape(-1, chunk_n)
+    starts = (jnp.arange(codes_c.shape[0]) * chunk_n).astype(jnp.int32)
+
+    def step(carry, inp):
+        vals, idx = carry                       # (Q, L), (Q, L)
+        chunk, bias_i, start = inp
+        s = ref.adc_scan_batch_ref(chunk, luts) + bias_i[None, :]
+        gids = start + jnp.arange(chunk_n, dtype=jnp.int32)
+        s = jnp.where(gids[None, :] < n_valid, s, jnp.inf)
+        cand_s = jnp.concatenate([vals, s], axis=1)
+        cand_g = jnp.concatenate(
+            [idx, jnp.broadcast_to(gids[None, :], (q, chunk_n))], axis=1)
+        neg, pos = jax.lax.top_k(-cand_s, topl)
+        return (-neg, jnp.take_along_axis(cand_g, pos, axis=1)), None
+
+    init = (jnp.full((q, topl), jnp.inf, jnp.float32),
+            jnp.full((q, topl), _IMAX, jnp.int32))
+    (vals, idx), _ = jax.lax.scan(step, init, (codes_c, bias_c, starts))
+    return vals, idx

@@ -1,0 +1,86 @@
+"""Device-resident distributed stage 1: per-device streaming scan+top-L
+under ``shard_map``, merged with an all-gather of (L, 2) candidate tuples.
+
+This is the pod-scale shape of the paper's billion-vector experiments: the
+uint8 code matrix (and RVQ-style bias) lives SHARDED across devices — no
+device ever holds the full database — each device runs the streaming
+scan+top-L engine over its own shard with replicated query LUTs, and the
+per-device (Q, L) score/index tuples are all-gathered so the host-side
+caller reranks ONE merged pool.
+
+Merge exactness: device d's global ids are ``local + d * shard_rows`` and
+the gathered pools are concatenated device-major, so among equal scores
+positions are in ascending-global-index order — the final ``lax.top_k``
+therefore reproduces flat-search tie resolution bit-for-bit. Rows added to
+pad the database to a device multiple get a +inf bias, so they can never
+surface (the same -inf-in-the-negated-domain masking the kernel applies to
+its own block padding).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.utils import compat
+
+
+@functools.lru_cache(maxsize=16)
+def _device_topl_fn(mesh, topl_local: int, shard_rows: int, impl: str):
+    """Compiled per-device scan+top-L + all-gather for one mesh/shape."""
+    from jax.sharding import PartitionSpec as P
+
+    def per_device(codes, bias, luts):
+        scores, idx = ops.adc_scan_topl(codes, luts, topl=topl_local,
+                                        bias=bias, impl=impl)
+        offset = jax.lax.axis_index("shard").astype(jnp.int32) * shard_rows
+        idx = idx + offset
+        # all-gather of the per-device (L, 2) candidate tuples -> every
+        # device (and the host) sees the full (D, Q, L) pool
+        return (jax.lax.all_gather(scores, "shard"),
+                jax.lax.all_gather(idx, "shard"))
+
+    f = compat.shard_map(
+        per_device, mesh=mesh,
+        in_specs=(P("shard"), P("shard"), P()),
+        out_specs=(P(), P()),
+        check_vma=False)
+    return jax.jit(f)
+
+
+def device_stage1_topl(codes, luts, bias, *, topl: int, impl: str,
+                       devices=None):
+    """Sharded stage 1 over ``devices`` (default: all local devices).
+
+    codes (N, M) uint8, luts (Q, M, K) f32, bias None | (N,) ->
+    (scores, indices), each (Q, min(topl, N)), bit-identical to the flat
+    single-device search.
+    """
+    devices = list(devices if devices is not None else jax.devices())
+    d = len(devices)
+    n, _ = codes.shape
+    q = luts.shape[0]
+    topl = min(topl, n)
+
+    shard_rows = -(-n // d)
+    pad = shard_rows * d - n
+    codes_p = jnp.pad(codes, ((0, pad), (0, 0)))
+    bias_full = bias if bias is not None else jnp.zeros((n,), jnp.float32)
+    # pad rows masked via +inf bias (uniform across devices, so one SPMD
+    # program handles the ragged tail shard)
+    bias_p = jnp.pad(bias_full.astype(jnp.float32), (0, pad),
+                     constant_values=jnp.inf)
+
+    mesh = jax.sharding.Mesh(np.asarray(devices), ("shard",))
+    topl_local = min(topl, shard_rows)
+    fn = _device_topl_fn(mesh, topl_local, shard_rows, impl)
+    s_all, i_all = fn(codes_p, bias_p, luts.astype(jnp.float32))
+
+    # (D, Q, L) -> (Q, D*L) device-major, then one top-L over the pool
+    pool_s = jnp.swapaxes(s_all, 0, 1).reshape(q, d * topl_local)
+    pool_i = jnp.swapaxes(i_all, 0, 1).reshape(q, d * topl_local)
+    neg, order = jax.lax.top_k(-pool_s, topl)
+    return -neg, jnp.take_along_axis(pool_i, order, axis=1)

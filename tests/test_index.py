@@ -1,13 +1,15 @@
 """Unified ``repro.index`` API: factory parsing, protocol interchange,
-save/load, batched-scan parity, sharded merge, legacy-shim equivalence."""
+save/load, batched-scan parity, sharded merge, stage-1 oracle
+equivalence."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import search as legacy
+from repro.core.search import recall_at_k
 from repro.index import (Index, OPQIndex, PQIndex, RVQIndex, ShardedIndex,
                          UNQIndex, index_factory, resolve_scan_backend)
+from repro.index.unq_index import build_luts, encode_database
 from repro.kernels import ops, ref
 
 
@@ -114,7 +116,7 @@ def test_protocol_interchangeability(tiny_dataset):
         # distances sorted ascending (closest first)
         d = np.asarray(distances)
         assert (np.diff(d, axis=1) >= -1e-5).all()
-        rec = legacy.recall_at_k(idx, gt, ks=(10,))
+        rec = recall_at_k(idx, gt, ks=(10,))
         assert rec["recall@10"] > 10 * (10 / n), (type(index).__name__, rec)
 
 
@@ -172,14 +174,17 @@ def test_load_rejects_non_index_checkpoint(tmp_path):
 
 
 # ---------------------------------------------------------------------------
-# acceptance: factory index == legacy core.search path on same params/codes
+# acceptance: factory index == hand-rolled two-stage pipeline on same
+# params/codes (the oracle the deleted core.search shims used to provide)
 # ---------------------------------------------------------------------------
 
-def test_unq_index_matches_legacy_search_exactly(tiny_unq, tiny_dataset):
+def test_unq_index_matches_manual_two_stage_pipeline(tiny_unq, tiny_dataset):
+    from repro.core import unq
+
     cfg, params, state, _ = tiny_unq
     base = jnp.asarray(tiny_dataset.base)
     queries = jnp.asarray(tiny_dataset.queries[:40])
-    codes = legacy.encode_database(params, state, cfg, base)
+    codes = encode_database(params, state, cfg, base)
 
     index = index_factory(
         f"UNQ{cfg.num_codebooks}x{cfg.codebook_size},Rerank100",
@@ -189,17 +194,25 @@ def test_unq_index_matches_legacy_search_exactly(tiny_unq, tiny_dataset):
     index.add(base)
     np.testing.assert_array_equal(np.asarray(index.codes), np.asarray(codes))
 
-    scfg = legacy.SearchConfig(rerank=100, topk=30)
-    want = legacy.search(params, state, cfg, scfg, queries, codes)
+    # stage 1 oracle: materialized d2 matrix + top_k; stage 2: exact d1
+    luts = build_luts(params, state, cfg, queries)
+    scores = ref.adc_scan_batch_ref(codes, luts)
+    neg, cand = jax.lax.top_k(-scores, 100)
+
+    def rerank(cand_row, q_row):
+        recon = unq.decode_codes(params, state, cfg, codes[cand_row])
+        d1 = jnp.sum(jnp.square(recon - q_row[None, :]), axis=-1)
+        neg1, order = jax.lax.top_k(-d1, 30)
+        return cand_row[order]
+
+    want = jnp.stack([rerank(cand[i], queries[i])
+                      for i in range(queries.shape[0])])
     _, got = index.search(queries, 30)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
-    # ablation flags route identically
-    for kw in (dict(use_rerank=False), dict(use_d2=False)):
-        want = legacy.search(params, state, cfg, scfg, queries, codes, **kw)
-        _, got = index.search(queries, 30, **kw)
-        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
-                                      err_msg=str(kw))
+    # no-rerank ablation returns the raw d2 ranking
+    _, got_nr = index.search(queries, 30, use_rerank=False)
+    np.testing.assert_array_equal(np.asarray(got_nr), np.asarray(cand[:, :30]))
 
 
 # ---------------------------------------------------------------------------
@@ -225,24 +238,26 @@ def test_sharded_index_merge_matches_flat_search(tiny_unq, tiny_dataset):
             assert len(a & b) / len(a) > 0.95, (num_shards, i)
 
 
-def test_sharded_stage1_matches_legacy_search_sharded(tiny_unq, tiny_dataset):
+def test_sharded_stage1_matches_flat_oracle(tiny_unq, tiny_dataset):
+    """from_shards candidate merge == lax.top_k over the full d2 matrix,
+    bit-exact (score AND index, ties included)."""
     cfg, params, state, _ = tiny_unq
     base = jnp.asarray(tiny_dataset.base)
-    codes = legacy.encode_database(params, state, cfg, base)
+    codes = encode_database(params, state, cfg, base)
     queries = jnp.asarray(tiny_dataset.queries[:20])
     n = codes.shape[0]
     shards = [codes[: n // 3], codes[n // 3: 2 * n // 3],
               codes[2 * n // 3:]]
     offsets = [0, n // 3, 2 * n // 3]
 
-    scfg = legacy.SearchConfig(rerank=50, topk=50)
-    want = legacy.search_sharded(params, state, cfg, scfg, queries,
-                                 shards, offsets)
+    luts = build_luts(params, state, cfg, queries)
+    want_s, want_i = ref.adc_scan_topl_ref(codes, luts, None, 50)
 
     inner = UNQIndex.from_trained(params, state, cfg, rerank=50)
     sharded = ShardedIndex.from_shards(inner, shards, offsets)
-    _, got = sharded.stage1_candidates(queries, topl=50)
-    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    got_s, got_i = sharded.stage1_candidates(queries, topl=50)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_array_equal(np.asarray(got_s), np.asarray(want_s))
 
 
 def test_sharded_rvq_carries_score_bias(tiny_dataset):
@@ -267,7 +282,7 @@ def test_sharded_rvq_carries_score_bias(tiny_dataset):
         ShardedIndex.from_shards(index, shards, [0, n // 2])
     biased = ShardedIndex.from_shards(
         index, shards, [0, n // 2],
-        biases=[index._bias[: n // 2], index._bias[n // 2:]])
+        biases=[index.bias[: n // 2], index.bias[n // 2:]])
     _, got2 = biased.stage1_candidates(queries, topl=60)
     _, want2 = ShardedIndex(index, num_shards=2).stage1_candidates(
         queries, topl=60)

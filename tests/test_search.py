@@ -1,21 +1,22 @@
-"""Two-stage search behaviour (paper §3.3) + distributed shard merge."""
-import jax
+"""Two-stage search behaviour (paper §3.3) + distributed shard merge,
+through the canonical ``repro.index`` surface (the ``core.search``
+deprecation shims are gone)."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.core import search, unq
-from repro.data.descriptors import exact_knn
+from repro.core.search import recall_at_k
+from repro.index import ShardedIndex, UNQIndex
+
+
+def _index(tiny_unq, *, rerank):
+    cfg, params, state, _ = tiny_unq
+    return UNQIndex.from_trained(params, state, cfg, rerank=rerank)
 
 
 def test_recall_pipeline_beats_random(tiny_unq, tiny_dataset):
-    cfg, params, state, _ = tiny_unq
-    base = jnp.asarray(tiny_dataset.base)
-    queries = jnp.asarray(tiny_dataset.queries)
-    codes = search.encode_database(params, state, cfg, base)
-    scfg = search.SearchConfig(rerank=100, topk=100)
-    got = search.search(params, state, cfg, scfg, queries, codes)
-    rec = search.recall_at_k(got, jnp.asarray(tiny_dataset.gt_nn))
+    index = _index(tiny_unq, rerank=100).add(tiny_dataset.base)
+    _, got = index.search(jnp.asarray(tiny_dataset.queries), 100)
+    rec = recall_at_k(got, jnp.asarray(tiny_dataset.gt_nn))
     n = tiny_dataset.base.shape[0]
     random_r100 = 100 / n
     assert rec["recall@100"] > 10 * random_r100, rec
@@ -24,50 +25,40 @@ def test_recall_pipeline_beats_random(tiny_unq, tiny_dataset):
 
 
 def test_rerank_improves_or_matches_recall_at_1(tiny_unq, tiny_dataset):
-    cfg, params, state, _ = tiny_unq
-    base = jnp.asarray(tiny_dataset.base)
     queries = jnp.asarray(tiny_dataset.queries)[:100]
     gt = jnp.asarray(tiny_dataset.gt_nn)[:100]
-    codes = search.encode_database(params, state, cfg, base)
-    scfg = search.SearchConfig(rerank=100, topk=10)
-    with_rr = search.search(params, state, cfg, scfg, queries, codes,
-                            use_rerank=True)
-    without = search.search(params, state, cfg, scfg, queries, codes,
-                            use_rerank=False)
-    r_with = search.recall_at_k(with_rr, gt, ks=(1,))["recall@1"]
-    r_without = search.recall_at_k(without, gt, ks=(1,))["recall@1"]
+    index = _index(tiny_unq, rerank=100).add(tiny_dataset.base)
+    _, with_rr = index.search(queries, 10, use_rerank=True)
+    _, without = index.search(queries, 10, use_rerank=False)
+    r_with = recall_at_k(with_rr, gt, ks=(1,))["recall@1"]
+    r_without = recall_at_k(without, gt, ks=(1,))["recall@1"]
     # paper Table 5: reranking helps R@1 (25.0 -> 34.6); allow slack on a
     # tiny undertrained model but it must not collapse
     assert r_with >= r_without - 0.02, (r_with, r_without)
 
 
 def test_sharded_search_matches_single_shard(tiny_unq, tiny_dataset):
-    cfg, params, state, _ = tiny_unq
-    base = jnp.asarray(tiny_dataset.base)
+    """Candidate streams merged across from_shards splits == one shard —
+    bit-exact, the streaming merge preserves top_k tie resolution."""
     queries = jnp.asarray(tiny_dataset.queries)[:20]
-    codes = search.encode_database(params, state, cfg, base)
-    scfg = search.SearchConfig(rerank=50, topk=50)
-
-    single = search.search_sharded(params, state, cfg, scfg, queries,
-                                   [codes], [0])
+    index = _index(tiny_unq, rerank=50).add(tiny_dataset.base)
+    codes = index.codes
     n = codes.shape[0]
+
+    single = ShardedIndex.from_shards(index, [codes], [0])
+    _, want = single.stage1_candidates(queries, topl=50)
     quarters = [codes[: n // 4], codes[n // 4: n // 2],
                 codes[n // 2: 3 * n // 4], codes[3 * n // 4:]]
     offsets = [0, n // 4, n // 2, 3 * n // 4]
-    sharded = search.search_sharded(params, state, cfg, scfg, queries,
-                                    quarters, offsets)
-    # same candidate SET for every query (order may differ on ties)
-    for i in range(queries.shape[0]):
-        a = set(np.asarray(single[i]).tolist())
-        b = set(np.asarray(sharded[i]).tolist())
-        overlap = len(a & b) / len(a)
-        assert overlap > 0.95, (i, overlap)
+    sharded = ShardedIndex.from_shards(index, quarters, offsets)
+    _, got = sharded.stage1_candidates(queries, topl=50)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 def test_recall_at_k_exact_semantics():
     retrieved = jnp.asarray([[3, 1, 2], [9, 9, 9], [5, 0, 7]])
     gt = jnp.asarray([1, 9, 7])
-    rec = search.recall_at_k(retrieved, gt, ks=(1, 3))
+    rec = recall_at_k(retrieved, gt, ks=(1, 3))
     np.testing.assert_allclose(rec["recall@1"], 1 / 3)
     np.testing.assert_allclose(rec["recall@3"], 1.0)
 
@@ -78,14 +69,11 @@ def test_full_pool_rerank_equals_exhaustive_d1(tiny_unq, tiny_dataset):
     must return exactly the exhaustive-d1 ranking (the paper's quality
     ordering between the modes additionally needs paper-scale training —
     see EXPERIMENTS.md §Repro)."""
-    cfg, params, state, _ = tiny_unq
     base = jnp.asarray(tiny_dataset.base)[:800]
     queries = jnp.asarray(tiny_dataset.queries)[:20]
-    codes = search.encode_database(params, state, cfg, base)
-    scfg = search.SearchConfig(rerank=codes.shape[0], topk=30)
-    two_stage = search.search(params, state, cfg, scfg, queries, codes)
-    exhaustive = search.search(params, state, cfg, scfg, queries, codes,
-                               use_d2=False)
+    index = _index(tiny_unq, rerank=800).add(base)
+    _, two_stage = index.search(queries, 30)
+    _, exhaustive = index.search(queries, 30, use_d2=False)
     for i in range(queries.shape[0]):
         a = set(np.asarray(two_stage[i]).tolist())
         b = set(np.asarray(exhaustive[i]).tolist())

@@ -3,7 +3,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import search, unq
+from repro.core import unq
+from repro.index.unq_index import encode_database
 
 
 def test_loss_decreases(tiny_unq):
@@ -17,7 +18,7 @@ def test_codebook_usage_not_collapsed(tiny_unq, tiny_dataset):
     """The CV^2 regularizer must keep a healthy fraction of codes in use
     (paper: 'a common problem ... codes are (almost) never used')."""
     cfg, params, state, _ = tiny_unq
-    codes = search.encode_database(params, state, cfg,
+    codes = encode_database(params, state, cfg,
                                    jnp.asarray(tiny_dataset.base))
     arr = np.asarray(codes)
     for m in range(cfg.num_codebooks):
@@ -47,6 +48,6 @@ def test_usage_entropy_increases_with_regularizer(tiny_dataset):
 def test_encode_database_deterministic(tiny_unq, tiny_dataset):
     cfg, params, state, _ = tiny_unq
     base = jnp.asarray(tiny_dataset.base[:512])
-    a = search.encode_database(params, state, cfg, base, batch_size=128)
-    b = search.encode_database(params, state, cfg, base, batch_size=512)
+    a = encode_database(params, state, cfg, base, batch_size=128)
+    b = encode_database(params, state, cfg, base, batch_size=512)
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -75,13 +75,13 @@ def test_gumbel_st_passes_gradients():
 
 def test_d2_matches_lut_scan():
     """d2 computed via codeword gather == LUT + ADC scan (Eq. 8)."""
-    from repro.core import search
+    from repro.index.unq_index import build_luts
     from repro.kernels import ops
     key, params, state, x = _setup()
     q = x[:3]
     db = x[3:]
     codes = unq.encode(params, state, CFG, db)
-    luts = search.build_lut(params, state, CFG, q)         # (3, M, K)
+    luts = build_luts(params, state, CFG, q)         # (3, M, K)
     heads, _ = unq.encode_heads(params, state, CFG, q, train=False)
     for i in range(3):
         via_lut = ops.adc_scan(codes, luts[i], impl="xla")
