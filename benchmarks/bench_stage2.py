@@ -1,0 +1,171 @@
+"""Stage-2 engine benchmark: streaming rerank (fused table kernel /
+chunked xla / cross-query dedup) vs the materialized vmap baseline —
+throughput AND peak-memory trajectory at the acceptance shape
+Q=32, L=500.
+
+Writes ``BENCH_stage2.json`` (repo root by default) with, per path:
+
+  * ``us_per_call`` — one full d1 rerank of the (Q, L) candidate pool,
+  * ``interpret`` — True when the Pallas kernel ran in interpret mode
+    (off-TPU): a correctness datapoint excluded from the ``headline``,
+  * ``peak_recon_bytes`` — the analytic reconstruction footprint
+    (Q*L*D*4 for the vmap baseline, chunk-bounded for streaming paths),
+  * ``temp_bytes`` — the compiler's measured temp allocation for the
+    jitted rerank fn (None when unavailable or multi-jit),
+  * section ``dedup`` additionally records ``unique_ratio`` — how many
+    decoder calls cross-query dedup saved on the overlapping pool.
+
+Two sections mirror the two engine families:
+
+  * ``table``   — PQ-shaped additive decode table (M=8, K=256, D=96):
+                  vmap vs chunked xla vs fused Pallas.
+  * ``decoder`` — UNQ's MLP decoder on a hot-set candidate pool
+                  (pools overlap across queries as they do after a real
+                  stage 1): vmap vs cross-query dedup.
+
+Run via ``python -m benchmarks.run --only stage2`` (ci.sh records the
+json on every PR alongside the stage-1 trajectory).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.kernels import ops, ref
+from repro.kernels.rerank_dist import rerank_gather_dist_chunked_xla
+
+_SIZES = {"quick": (60_000, 32, 500), "default": (200_000, 32, 500),
+          "full": (1_000_000, 32, 500)}
+_CHUNK_L = ops.DEFAULT_RERANK_CHUNK_L
+_M, _K, _D = 8, 256, 96
+_HOT_FRACTION = 8          # decoder pool drawn from a hot set of Q*L/8 ids
+
+
+def _temp_bytes(fn, *avals):
+    try:
+        compiled = jax.jit(fn).lower(*avals).compile()
+        return int(compiled.memory_analysis().temp_size_in_bytes)
+    except Exception:
+        return None
+
+
+def _bench_table(results, codes, queries, cand):
+    q, topl = cand.shape
+    rng = np.random.default_rng(1)
+    table = jnp.asarray(rng.normal(size=(_M, _K, _D)), jnp.float32)
+    cand_codes = jnp.take(codes, cand, axis=0)
+
+    vmap_fn = jax.jit(jax.vmap(
+        lambda qr, ci: jnp.sum(jnp.square(
+            ref.decode_with_table(codes[ci], table) - qr[None, :]), axis=-1),
+        in_axes=(0, 0)))
+    interp = ops._interpret()
+    paths = {
+        "vmap/xla": (lambda: vmap_fn(queries, cand),
+                     q * topl * _D * 4, False),
+        "chunked/xla": (
+            lambda: ops.rerank_gather_dist(cand_codes, queries, table,
+                                           impl="xla", chunk_l=_CHUNK_L),
+            q * _CHUNK_L * _D * 4, False),
+        # interpret mode off-TPU: correctness path, not a perf claim
+        "fused/pallas": (
+            lambda: ops.rerank_gather_dist(cand_codes, queries, table,
+                                           impl="pallas"),
+            ops.DEFAULT_RERANK_BLOCK_Q * ops.DEFAULT_RERANK_BLOCK_L * _D * 4,
+            interp),
+    }
+    temp = {
+        "vmap/xla": _temp_bytes(
+            vmap_fn,
+            jax.ShapeDtypeStruct(queries.shape, jnp.float32),
+            jax.ShapeDtypeStruct(cand.shape, jnp.int32)),
+        "chunked/xla": _temp_bytes(
+            lambda c, qs, t: rerank_gather_dist_chunked_xla(
+                c, qs, t, chunk_l=_CHUNK_L),
+            jax.ShapeDtypeStruct(cand_codes.shape, jnp.uint8),
+            jax.ShapeDtypeStruct(queries.shape, jnp.float32),
+            jax.ShapeDtypeStruct(table.shape, jnp.float32)),
+    }
+    for name, (fn, recon_bytes, interpret) in paths.items():
+        _, us = common.timed(fn, repeats=3)
+        results["table"][name] = {
+            "us_per_call": round(us, 1), "interpret": bool(interpret),
+            "peak_recon_bytes": recon_bytes,
+            "temp_bytes": temp.get(name)}
+        common.emit(f"stage2/table/{name}", us,
+                    f"recon-mem={recon_bytes / 1e6:.2f}MB"
+                    + (" [interpret]" if interpret else ""))
+
+
+def _bench_decoder(results, n, queries, cand):
+    from repro.core import unq
+    from repro.index import DedupRerank, UNQIndex, VmapRerank
+
+    q, topl = cand.shape
+    rng = np.random.default_rng(2)
+    cfg = unq.UNQConfig(dim=_D, num_codebooks=_M, codebook_size=_K)
+    params, state = unq.init(jax.random.PRNGKey(0), cfg)
+    index = UNQIndex.from_trained(params, state, cfg, rerank=topl)
+    index._codes = jnp.asarray(rng.integers(0, _K, (n, _M)), jnp.uint8)
+
+    n_unique = int(np.unique(np.asarray(cand)).size)
+    vm, dd = VmapRerank(), DedupRerank()
+    u_pad = -(-n_unique // dd.decode_chunk) * dd.decode_chunk
+    paths = {
+        "vmap/decoder": (lambda: vm.distances(index, queries, cand),
+                         q * topl * _D * 4),
+        # held deduped (U, D) reconstruction + gathered distance tiles
+        "dedup/decoder": (
+            lambda: dd.distances(index, queries, cand),
+            (u_pad + q * dd.dist_chunk) * _D * 4),
+    }
+    for name, (fn, recon_bytes) in paths.items():
+        _, us = common.timed(fn, repeats=3)
+        results["decoder"][name] = {
+            "us_per_call": round(us, 1), "interpret": False,
+            "peak_recon_bytes": recon_bytes, "temp_bytes": None}
+        common.emit(f"stage2/decoder/{name}", us,
+                    f"recon-mem={recon_bytes / 1e6:.2f}MB")
+    results["decoder"]["dedup/decoder"]["unique_ratio"] = round(
+        q * topl / max(n_unique, 1), 2)
+
+
+def run(scale: str = "quick", out_path: str | None = None) -> dict:
+    n, q, topl = _SIZES.get(scale, _SIZES["quick"])
+    rng = np.random.default_rng(0)
+    codes = jnp.asarray(rng.integers(0, _K, (n, _M)), jnp.uint8)
+    queries = jnp.asarray(rng.normal(size=(q, _D)), jnp.float32)
+    # hot-set pool: stage-1 candidates overlap heavily across queries
+    hot = rng.integers(0, n, max(q * topl // _HOT_FRACTION, 1))
+    cand = jnp.asarray(hot[rng.integers(0, hot.size, (q, topl))], jnp.int32)
+
+    results = {"n": n, "q": q, "topl": topl, "dim": _D, "chunk_l": _CHUNK_L,
+               "backend": jax.default_backend(), "table": {}, "decoder": {}}
+    _bench_table(results, codes, queries, cand)
+    _bench_decoder(results, n, queries, cand)
+
+    headline = {f"{sec}/{name}": p["us_per_call"]
+                for sec in ("table", "decoder")
+                for name, p in results[sec].items() if not p["interpret"]}
+    results["headline"] = {
+        "us_per_call": headline,
+        "best_table": min((k for k in headline if k.startswith("table/")),
+                          key=headline.get),
+        "best_decoder": min((k for k in headline if k.startswith("decoder/")),
+                            key=headline.get)}
+
+    if out_path is None:
+        out_path = pathlib.Path(__file__).resolve().parent.parent \
+            / "BENCH_stage2.json"
+    pathlib.Path(out_path).write_text(json.dumps(results, indent=2) + "\n")
+    print(f"# stage2: wrote {out_path}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

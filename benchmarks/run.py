@@ -11,8 +11,12 @@ loudly if any backend disagrees with the xla oracle — perf regressions
 and backend drift in the new surface both surface here. Under the
 candidate-generator resolution this covers both stage-1 engines: xla and
 pallas route through the streaming scan+top-L (bit-exact pair), onehot
-through the materialized full-matrix scan. ``--only stage1`` writes
-``BENCH_stage1.json`` (throughput + peak-memory trajectory).
+through the materialized full-matrix scan — and all three stage-2
+rerankers: xla/pallas resolve the streaming rerank engine (chunked/fused
+table decode for PQ, cross-query dedup for UNQ), onehot the materialized
+vmap reranker. ``--only stage1`` / ``--only stage2`` write
+``BENCH_stage1.json`` / ``BENCH_stage2.json`` (throughput + peak-memory
+trajectories).
 """
 from __future__ import annotations
 
@@ -84,7 +88,8 @@ def main() -> None:
         return
 
     from benchmarks import (bench_ablation, bench_recall, bench_roofline,
-                            bench_scale, bench_stage1, bench_timings)
+                            bench_scale, bench_stage1, bench_stage2,
+                            bench_timings)
 
     benches = {
         "timings": lambda: bench_timings.run(args.scale),
@@ -93,6 +98,7 @@ def main() -> None:
         "ablation": lambda: bench_ablation.run(args.scale),
         "roofline": lambda: bench_roofline.run(),
         "stage1": lambda: bench_stage1.run(args.scale),
+        "stage2": lambda: bench_stage2.run(args.scale),
     }
     selected = (args.only.split(",") if args.only else list(benches))
 

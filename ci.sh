@@ -22,4 +22,7 @@ python -m benchmarks.run --smoke
 echo "== stage-1 engine trajectory (writes BENCH_stage1.json) =="
 python -m benchmarks.run --only stage1 --scale quick
 
+echo "== stage-2 engine trajectory (writes BENCH_stage2.json) =="
+python -m benchmarks.run --only stage2 --scale quick
+
 echo "CI OK"

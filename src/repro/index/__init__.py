@@ -13,8 +13,11 @@ surface over UNQ (the paper's method) and the shallow MCQ baselines.
 Scan backends (xla | onehot | pallas) resolve per device via
 ``repro.index.backend``; stage-1 candidate generation resolves through
 backend capabilities to the streaming scan+top-L engine
-(``repro.index.candidates``); wrap any index in ``ShardedIndex`` for
-pod-style per-device scanning with an all-gathered merged rerank.
+(``repro.index.candidates``); stage-2 reranking resolves the same way to
+the streaming rerank engine (``repro.index.rerank``: fused
+gather-decode-distance kernel, chunked table decode, or cross-query
+dedup); wrap any index in ``ShardedIndex`` for pod-style per-device
+scanning with an all-gathered merged rerank.
 """
 from repro.index.backend import (available_scan_backends,
                                  backend_capabilities,
@@ -26,6 +29,8 @@ from repro.index.candidates import (CandidateGenerator, MaterializedTopL,
                                     StreamingTopL, candidate_generator_for)
 from repro.index.factory import index_factory
 from repro.index.pq_index import OPQIndex, PQIndex, RVQIndex
+from repro.index.rerank import (DedupRerank, Reranker, TableRerank,
+                                VmapRerank, reranker_for)
 from repro.index.sharded import ShardedIndex
 from repro.index.unq_index import UNQIndex
 
@@ -42,6 +47,11 @@ __all__ = [
     "MaterializedTopL",
     "StreamingTopL",
     "candidate_generator_for",
+    "Reranker",
+    "TableRerank",
+    "DedupRerank",
+    "VmapRerank",
+    "reranker_for",
     "index_factory",
     "load_index",
     "available_scan_backends",

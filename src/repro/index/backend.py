@@ -21,9 +21,19 @@ resolves against instead of branching on backend names:
   * ``streaming_topl`` — the backend has a stage-1 path that produces
     per-query top-L candidates WITHOUT materializing the (Q, N) score
     matrix (``ops.adc_scan_topl``). Backends without it fall back to the
-    materialized full-matrix scan + ``lax.top_k``.
-  * ``fused_topl``     — the streaming path is a single fused kernel
-    (scan + running top-L heap in VMEM), not a chunked composition.
+    materialized full-matrix scan + ``lax.top_k``. Stage 2 keys off the
+    same flag: streaming backends get the streaming rerank engine
+    (chunked table decode / cross-query dedup), the rest the
+    materialized vmap reranker.
+  * ``fused_topl``     — the streaming stage-1 path is a single fused
+    kernel (scan + running top-L heap in VMEM), not a chunked
+    composition.
+  * ``fused_rerank``   — the backend runs stage 2 for table-decodable
+    quantizers as the single fused gather-decode-distance kernel
+    (``ops.rerank_gather_dist``): candidate-code tiles stream HBM->VMEM
+    and ||q - recon||^2 reduces in place, so the (Q, L, D)
+    reconstruction never exists. Streaming backends without it use the
+    chunked ``lax.scan`` rerank with the same guarantee.
 """
 from __future__ import annotations
 
@@ -113,4 +123,4 @@ register_scan_backend(
 register_scan_backend(
     "pallas", priority=100, auto_select=_on_tpu,
     description="fused Pallas TPU kernel (interpret mode off-TPU)",
-    capabilities=("streaming_topl", "fused_topl"))
+    capabilities=("streaming_topl", "fused_topl", "fused_rerank"))

@@ -21,10 +21,20 @@ scan-backend registry (``repro.index.candidates``): backends declaring the
 (Q, N) score matrix is never materialized — and the rest fall back to the
 classic full-matrix scan. Every Index subclass gets the right path with no
 per-class branching, and per-point score biases flow through either.
+
+Stage 2 is delegated the same way to a ``Reranker``
+(``repro.index.rerank``): table-decodable quantizers stream through the
+fused gather-decode-distance kernel (``fused_rerank`` capability) or its
+chunked fallback, decoder quantizers (UNQ) go through cross-query
+candidate dedup, and the ``use_d2=False`` exhaustive-rerank ablation
+chunks over the database — the (Q, L, D) / (Q, N, D) reconstruction
+tensors of the classic paths never exist, and every path is bit-identical
+to the materialized vmap oracle kept as the A/B reference.
 """
 from __future__ import annotations
 
 import abc
+import functools
 import json
 import pathlib
 from typing import Any
@@ -49,13 +59,21 @@ class Index(abc.ABC):
         if cls.kind != "abstract":
             _KINDS[cls.kind] = cls
 
+    #: encode-batch ladder: ``add`` pads inputs up to the next bucket so
+    #: differently-sized chunks reuse one encoder compilation (the ladder
+    #: then continues in 8192-row multiples)
+    ENCODE_BUCKETS = (256, 1024, 4096, 8192)
+
     def __init__(self, dim: int, *, rerank: int = 0, backend: str = "auto"):
         self.dim = dim
         self.rerank = rerank          # L: stage-2 candidates (0 = ADC only)
         self.backend = backend        # scan backend name or "auto"
         self._codes: jax.Array | None = None     # (N, M) uint8
         self._bias: jax.Array | None = None      # (N,) f32 or None
-        self._rerank_fn = None                   # cached jitted stage 2
+        self._rerank_fn = None                   # cached jitted vmap stage 2
+        self._decode_fn = None                   # cached jitted chunk decode
+        self._exhaustive_fn = None               # cached jitted use_d2=False
+        self._table_cache = None                 # cached decode table
 
     # -- database state ----------------------------------------------------
 
@@ -126,13 +144,53 @@ class Index(abc.ABC):
         """Per-point additive score term for new codes (None for most)."""
         return None
 
+    def _build_decode_table(self) -> jax.Array | None:
+        """(M, K, D) f32 additive decode table with ``recon = sum_m
+        table[m, code_m]`` (``ref.decode_with_table`` semantics), or None
+        when reconstruction needs a learned decoder (UNQ) — the stage-2
+        engine then uses cross-query dedup instead of the fused kernel."""
+        return None
+
+    def _decode_table(self) -> jax.Array | None:
+        """Cached ``_build_decode_table`` (dropped by _invalidate_caches).
+
+        Built under ``ensure_compile_time_eval`` so a first call from
+        inside a jit trace (``_reconstruct`` is traced by the vmap oracle
+        and the chunked decoders) still caches a concrete table instead
+        of leaking a tracer."""
+        if self._table_cache is None:
+            with jax.ensure_compile_time_eval():
+                self._table_cache = self._build_decode_table()
+        return self._table_cache
+
     # -- add / search ------------------------------------------------------
 
+    @classmethod
+    def _encode_bucket(cls, n: int) -> int:
+        """Smallest encode-batch bucket >= n (see ENCODE_BUCKETS)."""
+        for b in cls.ENCODE_BUCKETS:
+            if n <= b:
+                return b
+        step = cls.ENCODE_BUCKETS[-1]
+        return -(-n // step) * step
+
     def add(self, xs) -> "Index":
-        """Compress (n, dim) vectors and append them to the database."""
+        """Compress (n, dim) vectors and append them to the database.
+
+        Inputs are zero-padded up to the next ``ENCODE_BUCKETS`` size
+        before encoding (pad rows sliced off after), so adding
+        differently-sized chunks hits one compiled encoder instead of
+        re-jitting per (n, dim) shape. Encoders are row-stable, so the
+        codes are identical to encoding unpadded.
+        """
         if not self.is_trained:
             raise RuntimeError(f"{type(self).__name__}.add before train()")
-        codes = self._encode(jnp.asarray(xs))
+        xs = jnp.asarray(xs)
+        n = xs.shape[0]
+        bucket = self._encode_bucket(n)
+        if bucket != n:
+            xs = jnp.pad(xs, ((0, bucket - n), (0, 0)))
+        codes = self._encode(xs)[:n]
         bias = self._encode_bias(codes)
         if self._codes is None:
             self._codes, self._bias = codes, bias
@@ -150,7 +208,8 @@ class Index(abc.ABC):
         ``use_rerank=None`` reranks iff the index has a rerank budget;
         ``use_rerank=False`` returns raw d2 ranking ("No reranking"
         ablation); ``use_d2=False`` reranks the ENTIRE database with exact
-        reconstruction distances ("Exhaustive reranking" ablation).
+        reconstruction distances ("Exhaustive reranking" ablation),
+        chunked over N — the (Q, N, D) reconstruction never exists.
         """
         if self.ntotal == 0:
             raise RuntimeError("search on an empty index (call add first)")
@@ -161,17 +220,14 @@ class Index(abc.ABC):
             raise ValueError(
                 f"{type(self).__name__} has no rerank budget (rerank=0); "
                 "set index.rerank or pass use_rerank=False")
-        if use_d2:
-            topl = min(self.rerank if use_rerank else k, self.ntotal)
-            luts = self._build_luts(queries)
-            gen = candidate_generator_for(self.backend)
-            d2, cand = gen.topl(self._codes, luts, self._bias, topl=topl)
-            if not use_rerank:
-                return d2[:, :k], cand[:, :k]
-        else:
-            cand = jnp.broadcast_to(jnp.arange(self.ntotal),
-                                    (queries.shape[0], self.ntotal))
-
+        if not use_d2:
+            return self._exhaustive_rerank_topk(queries, k)
+        topl = min(self.rerank if use_rerank else k, self.ntotal)
+        luts = self._build_luts(queries)
+        gen = candidate_generator_for(self.backend)
+        d2, cand = gen.topl(self._codes, luts, self._bias, topl=topl)
+        if not use_rerank:
+            return d2[:, :k], cand[:, :k]
         return self._rerank_topk(queries, cand, k)
 
     def _rerank_topk(self, queries, cand, k: int):
@@ -186,6 +242,20 @@ class Index(abc.ABC):
         """Stage 2: exact reconstruction distances d1 = ||q - recon||^2
         over each query's candidate list. queries (Q, D), cand (Q, L).
 
+        Delegates to the ``Reranker`` resolved through the scan-backend
+        registry (``repro.index.rerank``): fused/chunked table decode,
+        cross-query dedup, or the materialized vmap oracle — all
+        bit-identical, chosen purely on memory/perf grounds.
+        """
+        from repro.index.rerank import reranker_for
+        return reranker_for(self).distances(self, queries, cand)
+
+    def _rerank_distances_vmap(self, queries, cand) -> jax.Array:
+        """The materialized stage-2 oracle: per-query gather + decode +
+        reduce under vmap, building the (Q, L, D) reconstruction. Ground
+        truth for every streaming reranker, and the path backends without
+        streaming capabilities use.
+
         The jitted kernel is cached on the instance (codes passed as an
         argument, so ``add``/``with_codes`` don't invalidate it); anything
         that swaps quantizer parameters must call ``_invalidate_caches``.
@@ -198,9 +268,32 @@ class Index(abc.ABC):
             self._rerank_fn = jax.jit(jax.vmap(_one, in_axes=(None, 0, 0)))
         return self._rerank_fn(self._codes, queries, cand)
 
+    def _chunk_decode_fn(self):
+        """Jitted fixed-shape ``codes -> reconstructions`` used by the
+        dedup reranker's batched unique-row decode (cached; dropped by
+        ``_invalidate_caches``)."""
+        if self._decode_fn is None:
+            self._decode_fn = jax.jit(self._reconstruct)
+        return self._decode_fn
+
+    def _exhaustive_rerank_topk(self, queries, k: int):
+        """``use_d2=False``: exact-d1 top-k over ALL codes, chunked over N
+        (``rerank.exhaustive_topk``) — each chunk decoded once for every
+        query, merged into a running (Q, k) heap with ``lax.top_k`` tie
+        semantics."""
+        from repro.index.rerank import exhaustive_topk
+        if self._exhaustive_fn is None:
+            self._exhaustive_fn = jax.jit(
+                functools.partial(exhaustive_topk, self._reconstruct),
+                static_argnames=("k",))
+        return self._exhaustive_fn(self._codes, queries, k=min(k, self.ntotal))
+
     def _invalidate_caches(self) -> None:
         """Drop compiled closures over quantizer params (after train/load)."""
         self._rerank_fn = None
+        self._decode_fn = None
+        self._exhaustive_fn = None
+        self._table_cache = None
 
     # -- persistence (checkpoint/manager: atomic, self-describing) ---------
 

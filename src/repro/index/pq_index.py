@@ -10,6 +10,7 @@ import jax.numpy as jnp
 
 from repro.core import baselines as bl
 from repro.index import base
+from repro.kernels import ref
 
 
 class PQIndex(base.Index):
@@ -45,8 +46,23 @@ class PQIndex(base.Index):
         # compressed-domain distance (no per-query constant needed)
         return jax.vmap(self.model.lut)(queries)
 
+    def _build_decode_table(self) -> jax.Array:
+        # each sub-codebook embedded into its D-slice (zero elsewhere);
+        # OPQ folds the inverse rotation into the table, so the additive
+        # sum IS decode() in the original space
+        m, k, d_sub = self.model.codebooks.shape
+        table = jnp.zeros((m, k, self.dim), jnp.float32)
+        for i in range(m):
+            table = table.at[i, :, i * d_sub:(i + 1) * d_sub].set(
+                self.model.codebooks[i])
+        if self.model.rotation is not None:
+            table = table @ self.model.rotation.T
+        return table
+
     def _reconstruct(self, codes) -> jax.Array:
-        return self.model.decode(codes)
+        # table decode (not model.decode): the one association every
+        # stage-2 path shares, making fused/chunked/vmap bit-identical
+        return ref.decode_with_table(codes, self._decode_table())
 
     # -- persistence -------------------------------------------------------
 
@@ -138,8 +154,14 @@ class RVQIndex(base.Index):
         # ``norms - 2 * adc_scan(codes, lut_ip)`` (x2 is exact in fp)
         return -2.0 * jax.vmap(self.model.lut_ip)(queries)
 
+    def _build_decode_table(self) -> jax.Array:
+        # additive codebooks are already full-dimensional
+        return self.model.codebooks.astype(jnp.float32)
+
     def _reconstruct(self, codes) -> jax.Array:
-        return self.model.decode(codes)
+        # table decode (chained adds) rather than model.decode's axis
+        # reduction: the association every stage-2 path shares
+        return ref.decode_with_table(codes, self._decode_table())
 
     # -- persistence -------------------------------------------------------
 

@@ -1,0 +1,238 @@
+"""Pluggable stage-2 reranking (the streaming engine's index face).
+
+``Index._rerank_distances`` — exact reconstruction distances d1 (paper
+Eq. 7) over each query's stage-1 candidate list — delegates to a
+``Reranker`` resolved through the scan-backend registry, mirroring how
+stage 1 resolves a ``CandidateGenerator``:
+
+  * ``TableRerank``  table-decodable quantizers (PQ / OPQ / RVQ:
+                     ``recon = sum_m table[m, code_m]``) on streaming
+                     backends. Backends declaring ``fused_rerank`` run
+                     the fused gather-decode-distance Pallas kernel;
+                     the rest the chunked ``lax.scan`` fallback. Peak
+                     reconstruction memory O(Q * block * D) — the
+                     (Q, L, D) tensor is never materialized.
+  * ``DedupRerank``  decoder quantizers (UNQ's neural decoder) on
+                     streaming backends: cross-query candidate dedup.
+                     Candidate pools overlap heavily across queries, so
+                     the (Q*L) pool is flattened, each UNIQUE code row is
+                     decoded once in fixed-size batches, and distances
+                     are gathered back per (query, candidate) in chunks —
+                     decoder FLOPs and activation memory are bounded by
+                     the decode chunk, and the held reconstruction shrinks
+                     from (Q*L, D) to (U, D), U = #unique <= min(Q*L, N).
+  * ``VmapRerank``   the classic per-query gather + decode + reduce vmap,
+                     materializing (Q, L, D). Kept as the A/B oracle and
+                     used by backends without streaming capabilities
+                     (onehot).
+
+All three produce bit-identical d1 (and therefore identical final
+(distance, index) rankings) — verified by tests/test_rerank.py — so
+reranker selection is purely a memory/performance decision, never a
+quality one.
+
+``exhaustive_rerank_topk`` is the ``use_d2=False`` ablation re-shaped the
+same way: a ``lax.scan`` over database chunks, each decoded ONCE for all
+queries (the decode is query-independent), merged into a running (Q, k)
+heap with the same lexicographic tie semantics as the stage-1 streaming
+engine — the (Q, N, D) reconstruction of the old path never exists.
+"""
+from __future__ import annotations
+
+import abc
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.index.backend import backend_supports, resolve_scan_backend
+from repro.kernels import ops
+
+_IMAX = jnp.iinfo(jnp.int32).max
+
+#: decode-batch ladder for DedupRerank (fixed shapes -> one compile per
+#: bucket, smallest bucket >= the unique count serves small pools)
+DEDUP_DECODE_CHUNK = 2048
+#: L-chunk for the gathered-distance scan (shared with the table path)
+DEDUP_DIST_CHUNK = ops.DEFAULT_RERANK_CHUNK_L
+
+
+class Reranker(abc.ABC):
+    """Stage-2 strategy: queries + candidate ids -> exact d1 distances."""
+
+    #: whether this reranker materializes the (Q, L, D) reconstruction
+    materializes_recon: bool
+
+    @abc.abstractmethod
+    def distances(self, index, queries, cand) -> jax.Array:
+        """queries (Q, D), cand (Q, L) int32 rows of ``index.codes`` ->
+        d1 (Q, L) f32 with d1[q, l] = ||queries[q] - recon(cand[q, l])||^2."""
+
+    def __repr__(self):
+        return f"{type(self).__name__}()"
+
+
+class VmapRerank(Reranker):
+    """Per-query ``codes[c_idx]`` gather + decode + reduce under ``vmap``
+    (the pre-streaming stage 2; reference semantics, O(Q*L*D) peak)."""
+
+    materializes_recon = True
+
+    def distances(self, index, queries, cand):
+        return index._rerank_distances_vmap(queries, cand)
+
+
+class TableRerank(Reranker):
+    """Streaming stage 2 for table-decodable quantizers
+    (``ops.rerank_gather_dist``): candidate codes are gathered as uint8
+    (L*M bytes per query, ~100x smaller than the float reconstruction)
+    and the decode+distance runs tile-by-tile — fused Pallas kernel or
+    chunked xla, bit-identical to ``VmapRerank``."""
+
+    materializes_recon = False
+
+    def __init__(self, impl: str):
+        self.impl = impl                # concrete kernels.ops impl string
+
+    def distances(self, index, queries, cand):
+        cand_codes = jnp.take(index.codes, cand, axis=0)     # (Q, L, M) u8
+        return ops.rerank_gather_dist(
+            cand_codes, jnp.asarray(queries, jnp.float32),
+            index._decode_table(), impl=self.impl)
+
+    def __repr__(self):
+        return f"TableRerank(impl={self.impl!r})"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_l",))
+def _gathered_dist_chunked(recon_u, queries, inv, *, chunk_l: int):
+    """d[q, l] = ||queries[q] - recon_u[inv[q, l]]||^2 via a ``lax.scan``
+    over (Q, chunk_l) column chunks — peak gathered-reconstruction memory
+    O(Q * chunk_l * D) instead of O(Q * L * D)."""
+    q, l = inv.shape
+    pad = (-l) % chunk_l
+    inv_c = jnp.moveaxis(
+        jnp.pad(inv, ((0, 0), (0, pad))).reshape(q, -1, chunk_l), 1, 0)
+
+    def step(_, idx):
+        recon = recon_u[idx]                                 # (Q, c, D)
+        return None, jnp.sum(jnp.square(recon - queries[:, None, :]),
+                             axis=-1)
+
+    _, ds = jax.lax.scan(step, None, inv_c)                  # (nc, Q, c)
+    return jnp.moveaxis(ds, 0, 1).reshape(q, -1)[:, :l]
+
+
+class DedupRerank(Reranker):
+    """Cross-query candidate dedup for decoder quantizers (UNQ).
+
+    Stage-1 pools overlap heavily across queries (popular database points
+    appear in many top-L lists), so decoding ``codes[cand]`` per query
+    repeats the expensive neural decode for every duplicate. This path
+    runs host-side dedup on the concrete candidate matrix (search is
+    eager), decodes each unique code row ONCE in fixed-size batches, and
+    gathers the decoded rows back per (query, candidate) in chunks.
+
+    Memory: decoder activations are bounded by ``decode_chunk`` and the
+    gathered distance tiles by ``dist_chunk``; the held reconstruction is
+    the deduped (U, D) matrix, U = #unique <= min(Q*L, ntotal) — the
+    savings over the vmap path's (Q, L, D) scale exactly with the pool
+    overlap (worst case, fully disjoint pools, they are the same size).
+
+    Exactness: the decoder is row-stable (per-row results are independent
+    of batch composition for batch > 1), so gathered unique rows are
+    bit-identical to the per-query decode — d1 matches ``VmapRerank``
+    bit-for-bit.
+    """
+
+    materializes_recon = False
+
+    def __init__(self, decode_chunk: int = DEDUP_DECODE_CHUNK,
+                 dist_chunk: int = DEDUP_DIST_CHUNK):
+        self.decode_chunk = decode_chunk
+        self.dist_chunk = dist_chunk
+
+    def distances(self, index, queries, cand):
+        cand = jnp.asarray(cand)
+        q, l = cand.shape
+        uniq, inv = np.unique(np.asarray(cand), return_inverse=True)
+        # smallest ladder bucket >= n_unique (>= 8 keeps the decoder's
+        # matmuls off degenerate single-row shapes)
+        chunk = self.decode_chunk
+        while chunk // 2 >= max(uniq.size, 8) and chunk > 8:
+            chunk //= 2
+        pad = (-uniq.size) % chunk
+        codes_u = jnp.take(index.codes, jnp.asarray(
+            np.pad(uniq, (0, pad)), jnp.int32), axis=0)      # (U_pad, M)
+        decode = index._chunk_decode_fn()
+        recon_u = jnp.concatenate(
+            [decode(codes_u[s:s + chunk])
+             for s in range(0, codes_u.shape[0], chunk)], axis=0)
+        return _gathered_dist_chunked(
+            recon_u, jnp.asarray(queries, jnp.float32),
+            jnp.asarray(inv.reshape(q, l), jnp.int32),
+            chunk_l=self.dist_chunk)
+
+
+def reranker_for(index) -> Reranker:
+    """Resolve an index's backend request to a stage-2 reranker.
+
+    Streaming-capable backends (``streaming_topl``) get the streaming
+    engine — the fused kernel where the backend declares ``fused_rerank``
+    and the index is table-decodable, the chunked xla path otherwise for
+    tables, cross-query dedup for decoder quantizers. Backends without a
+    streaming path (onehot) keep the materialized vmap reference.
+    """
+    impl = resolve_scan_backend(index.backend)
+    if not backend_supports(impl, "streaming_topl"):
+        return VmapRerank()
+    if index._decode_table() is not None:
+        return TableRerank(
+            "pallas" if backend_supports(impl, "fused_rerank") else "xla")
+    return DedupRerank()
+
+
+# ---------------------------------------------------------------------------
+# use_d2=False: chunked exhaustive rerank over the whole database
+# ---------------------------------------------------------------------------
+
+def exhaustive_topk(reconstruct_fn, codes, queries, *, k: int,
+                    chunk_n: int = 2048):
+    """Exact-d1 top-k over ALL codes without a (Q, N, D) reconstruction:
+    a ``lax.scan`` over (chunk_n, M) code chunks, each decoded ONCE for
+    every query, carrying a (Q, k) heap merged with ``lax.top_k``.
+
+    Tie semantics are exactly ``lax.top_k`` over the full (Q, N) d1
+    matrix: the carry is sorted by (distance, index) and every chunk
+    entry has a larger global index than every carried entry, so top_k's
+    positional tie-break IS the ascending-index tie-break.
+
+    Trace-time function: callers jit it (with ``reconstruct_fn`` closed
+    over) so the decode+distance fuse per chunk.
+    """
+    n, m = codes.shape
+    q = queries.shape[0]
+    k = min(k, n)
+    pad = (-n) % chunk_n
+    codes_c = jnp.pad(codes, ((0, pad), (0, 0))).reshape(-1, chunk_n, m)
+    starts = (jnp.arange(codes_c.shape[0]) * chunk_n).astype(jnp.int32)
+
+    def step(carry, inp):
+        vals, idx = carry                                    # (Q, k) x2
+        chunk, start = inp
+        recon = reconstruct_fn(chunk)                        # (c, D), once
+        d = jnp.sum(jnp.square(recon[None, :, :] - queries[:, None, :]),
+                    axis=-1)                                 # (Q, c)
+        gids = start + jnp.arange(chunk_n, dtype=jnp.int32)
+        d = jnp.where(gids[None, :] < n, d, jnp.inf)
+        cand_s = jnp.concatenate([vals, d], axis=1)
+        cand_g = jnp.concatenate(
+            [idx, jnp.broadcast_to(gids[None, :], (q, chunk_n))], axis=1)
+        neg, pos = jax.lax.top_k(-cand_s, k)
+        return (-neg, jnp.take_along_axis(cand_g, pos, axis=1)), None
+
+    init = (jnp.full((q, k), jnp.inf, jnp.float32),
+            jnp.full((q, k), _IMAX, jnp.int32))
+    (vals, idx), _ = jax.lax.scan(step, init, (codes_c, starts))
+    return vals, idx

@@ -174,8 +174,11 @@ class ShardedIndex:
 
     def search(self, queries, k: int, *, use_rerank: bool | None = None):
         """Full two-stage sharded search: merged stage-1 candidates, then
-        ONE stage-2 rerank over the merged pool. Same (distances, indices)
-        contract as ``Index.search``."""
+        ONE stage-2 rerank over the merged pool through the streaming
+        rerank engine (``Index._rerank_topk`` resolves a ``Reranker`` per
+        backend — fused table kernel or cross-query dedup; the merged
+        pool's cross-query overlap is exactly what dedup exploits). Same
+        (distances, indices) contract as ``Index.search``."""
         queries = jnp.asarray(queries)
         if use_rerank is None:
             use_rerank = self.inner.rerank > 0
@@ -188,6 +191,9 @@ class ShardedIndex:
                 "stage-2 rerank in from_shards mode needs the shards to be "
                 "a contiguous split of the inner index's code matrix "
                 "(global candidate ids must index inner.codes)")
+        # rerank AFTER the merge (host-side): bit-parity with flat search
+        # requires reranking exactly the global top-L pool — a per-shard
+        # local rerank would rank a superset and can disagree on top-k
         return self.inner._rerank_topk(queries, cand, k)
 
     def _is_contiguous_view(self) -> bool:

@@ -100,6 +100,12 @@ class UNQIndex(base.Index):
     def _build_luts(self, queries) -> jax.Array:
         return build_luts(self.params, self.state, self.cfg, queries)
 
+    def _build_decode_table(self) -> None:
+        # the MLP decoder is not an additive code table, so the stage-2
+        # engine resolves to the cross-query dedup reranker (each unique
+        # candidate decoded once) instead of the fused table kernel
+        return None
+
     def _reconstruct(self, codes) -> jax.Array:
         return unq.decode_codes(self.params, self.state, self.cfg, codes)
 

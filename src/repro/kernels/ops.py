@@ -25,6 +25,11 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.adc_scan import (adc_scan_pallas, adc_scan_batch_pallas,
                                     DEFAULT_BLOCK_N, DEFAULT_BLOCK_Q)
+from repro.kernels.rerank_dist import (rerank_gather_dist_pallas,
+                                       rerank_gather_dist_chunked_xla,
+                                       DEFAULT_RERANK_BLOCK_L,
+                                       DEFAULT_RERANK_BLOCK_Q,
+                                       DEFAULT_RERANK_CHUNK_L)
 from repro.kernels.topl_scan import (adc_scan_topl_pallas,
                                      adc_scan_topl_stream_xla,
                                      DEFAULT_CHUNK_N, DEFAULT_TOPL_BLOCK_N,
@@ -143,6 +148,48 @@ def adc_scan_topl(codes: jax.Array, luts: jax.Array, *, topl: int,
         f"unknown impl for adc_scan_topl: {impl!r} (streaming top-L has "
         "'pallas' and 'xla' paths; 'onehot' materializes the score matrix "
         "and is routed through the MaterializedTopL generator instead)")
+
+
+def rerank_gather_dist(cand_codes: jax.Array, queries: jax.Array,
+                       table: jax.Array, *, impl: str = "pallas",
+                       block_l: int = DEFAULT_RERANK_BLOCK_L,
+                       block_q: int = DEFAULT_RERANK_BLOCK_Q,
+                       chunk_l: int = DEFAULT_RERANK_CHUNK_L) -> jax.Array:
+    """Streaming stage 2 for table-decodable quantizers: exact d1
+    reconstruction distances over per-query candidate lists WITHOUT
+    materializing the (Q, L, D) reconstruction tensor.
+
+    cand_codes (Q, L, M) integer candidate codes, queries (Q, D) f32,
+    table (M, K, D) f32 with ``recon = sum_m table[m, code_m]``
+    (``ref.decode_with_table``) -> d1 (Q, L) f32, bit-identical to the
+    materialized oracle ``ref.rerank_gather_dist_ref``.
+
+      impl="pallas"  the fused gather-decode-distance kernel: code tiles
+                     stream HBM->VMEM, sub-codewords gathered from the
+                     VMEM-resident table, ||q - recon||^2 reduced per
+                     (query, candidate) tile.
+      impl="xla"     chunked ``lax.scan`` over L; the always-available
+                     fallback with O(Q * chunk_l * D) peak.
+    """
+    if impl == "xla":
+        return rerank_gather_dist_chunked_xla(
+            cand_codes, queries.astype(jnp.float32),
+            table.astype(jnp.float32), chunk_l=chunk_l)
+    if impl == "pallas":
+        q, l, _ = cand_codes.shape
+        bq = min(block_q, max(8, -(-q // 8) * 8))
+        bl = min(block_l, max(8, -(-l // 8) * 8))
+        padded_codes, _ = _pad_to(cand_codes, bq, axis=0)
+        padded_codes, _ = _pad_to(padded_codes, bl, axis=1)
+        padded_queries, _ = _pad_to(queries.astype(jnp.float32), bq, axis=0)
+        out = rerank_gather_dist_pallas(
+            padded_codes, padded_queries, table.astype(jnp.float32),
+            block_l=bl, block_q=bq, interpret=_interpret())
+        return out[:q, :l]
+    raise ValueError(
+        f"unknown impl for rerank_gather_dist: {impl!r} (the streaming "
+        "stage 2 has 'pallas' and 'xla' paths; backends without the "
+        "streaming capabilities use the materialized vmap reranker)")
 
 
 def unq_encode(heads: jax.Array, codebooks: jax.Array, *, impl: str = "pallas",

@@ -58,6 +58,42 @@ def adc_scan_topl_ref(codes: jax.Array, luts: jax.Array,
     return -neg, idx
 
 
+def decode_with_table(codes: jax.Array, table: jax.Array) -> jax.Array:
+    """Additive table decode: ``recon = sum_m table[m, codes[..., m]]``.
+
+    codes (..., M) integer, table (M, K, D) float32 -> (..., D).
+
+    This is THE reconstruction the stage-2 rerank engine is defined over:
+    PQ embeds each sub-codebook into its D-slice (zero elsewhere), OPQ
+    additionally rotates each embedded sub-codeword, RVQ's codebooks are
+    already full-dimensional. The M accumulation is an explicit
+    left-to-right chain (like ``adc_scan_ref``) so the fused kernel, the
+    chunked fallback, and the vmap oracle are bit-identical instead of
+    association-dependent.
+    """
+    c = codes.astype(jnp.int32)
+    acc = table[0][c[..., 0]]
+    for m in range(1, table.shape[0]):
+        acc = acc + table[m][c[..., m]]
+    return acc
+
+
+def rerank_gather_dist_ref(cand_codes: jax.Array, queries: jax.Array,
+                           table: jax.Array) -> jax.Array:
+    """Materialized oracle for the fused gather-decode-distance kernel
+    (stage 2, paper Eq. 7 over a table-decodable quantizer).
+
+    cand_codes (Q, L, M) integer candidate codes (already gathered from
+    the database by candidate id), queries (Q, D), table (M, K, D) ->
+    d1 distances (Q, L): ``||q - sum_m table[m, code_m]||^2``.
+
+    Deliberately materializes the (Q, L, D) reconstruction — it is the
+    ground truth the streaming paths are validated against bit-for-bit.
+    """
+    recon = decode_with_table(cand_codes, table)         # (Q, L, D)
+    return jnp.sum(jnp.square(recon - queries[:, None, :]), axis=-1)
+
+
 def unq_encode_ref(heads: jax.Array, codebooks: jax.Array) -> jax.Array:
     """Codeword assignment (paper Eq. 4).
 

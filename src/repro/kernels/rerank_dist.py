@@ -1,0 +1,141 @@
+"""Fused gather-decode-distance Pallas TPU kernel (the stage-2 engine).
+
+The classic stage 2 gathers each query's candidate codes, decodes them to
+full-dimensional reconstructions and reduces — materializing a (Q, L, D)
+float tensor (~200 MB at Q=1024, L=500, D=96) that exists only to be
+summed over D immediately. For table-decodable quantizers (PQ / OPQ /
+RVQ: ``recon = sum_m table[m, code_m]``) this kernel streams (block_q,
+block_l, M) uint8 candidate-code tiles HBM->VMEM, gathers sub-codewords
+from the VMEM-resident (M, K, D) decode table via the same one-hot MXU
+contraction the stage-1 scan uses, and reduces ``||q - recon||^2``
+per (query, candidate) in place — the only reconstruction that ever
+exists is the (block_q, block_l, D) VMEM tile.
+
+Memory model per grid step (grid = (Q/block_q, L/block_l)):
+
+  * the (M, K, D) decode table is replicated to every step and stays
+    VMEM-resident (e.g. 8x256x96 f32 = 786 KB);
+  * the (block_q, block_l, M) uint8 code tile and the (block_q, D) query
+    block stream in (double-buffered by the grid);
+  * output is the dense (block_q, block_l) distance tile — no top-k in
+    the kernel, so no masking is needed: the wrapper slices padding off.
+
+Exactness: the one-hot contraction sums exactly one non-zero term per
+(candidate, m), so each partial equals the gathered table row bit-for-bit,
+and the per-m accumulation is the same left-to-right chain as
+``ref.decode_with_table`` — the kernel, the chunked ``lax.scan`` fallback
+below, and the materialized oracle (``ref.rerank_gather_dist_ref``) are
+bit-identical, not merely allclose.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref
+
+DEFAULT_RERANK_BLOCK_L = 128
+DEFAULT_RERANK_BLOCK_Q = 8
+# 64 beat 128/256/512 on CPU at Q=32, L=500, D=96 (BENCH_stage2.json);
+# re-tune on real TPU hardware alongside the stage-1 blocks
+DEFAULT_RERANK_CHUNK_L = 64
+
+
+def _rerank_gather_dist_kernel(codes_ref, queries_ref, table_ref, out_ref,
+                               *, block_l: int, block_q: int,
+                               num_books: int, book_size: int):
+    codes = codes_ref[...].astype(jnp.int32)           # (Bq, Bl, M)
+    table = table_ref[...]                             # (M, K, D)
+    dim = table.shape[-1]
+
+    # --- decode: per-m one-hot MXU contraction against the resident
+    # table. Exactly one non-zero per (q, l, k) row, so each partial is
+    # bit-identical to the gather table[m][code] and the chained adds
+    # reproduce ref.decode_with_table exactly. ---
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (1, 1, book_size), 2)
+    acc = jnp.zeros((block_q, block_l, dim), jnp.float32)
+    for m in range(num_books):                         # M is static (8 or 16)
+        onehot = (codes[:, :, m:m + 1] == iota_k).astype(jnp.float32)
+        acc = acc + jax.lax.dot_general(
+            onehot, table[m].astype(jnp.float32),
+            dimension_numbers=(((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)        # (Bq, Bl, D)
+
+    # --- distance: reduce over D in VMEM; the (Bq, Bl, D) recon tile is
+    # the only reconstruction that ever exists. ---
+    diff = acc - queries_ref[...][:, None, :]
+    out_ref[...] = jnp.sum(jnp.square(diff), axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_l", "block_q",
+                                             "interpret"))
+def rerank_gather_dist_pallas(cand_codes: jax.Array, queries: jax.Array,
+                              table: jax.Array, *,
+                              block_l: int = DEFAULT_RERANK_BLOCK_L,
+                              block_q: int = DEFAULT_RERANK_BLOCK_Q,
+                              interpret: bool = False) -> jax.Array:
+    """Fused stage 2: d1 distances without a (Q, L, D) reconstruction.
+
+    cand_codes: (Q, L, M) uint8/int32, Q % block_q == 0 and
+                L % block_l == 0 (ops.py pads; pad rows/cols produce
+                garbage distances the wrapper slices off).
+    queries:    (Q, D) float32.
+    table:      (M, K, D) float32 additive decode table
+                (``ref.decode_with_table`` semantics).
+    Returns d1 (Q, L) float32, bit-identical to
+    ``ref.rerank_gather_dist_ref``.
+    """
+    q, l, num_books = cand_codes.shape
+    _, book_size, dim = table.shape
+    assert q % block_q == 0, f"Q={q} must be padded to a multiple of {block_q}"
+    assert l % block_l == 0, f"L={l} must be padded to a multiple of {block_l}"
+    grid = (q // block_q, l // block_l)
+    kernel = functools.partial(
+        _rerank_gather_dist_kernel, block_l=block_l, block_q=block_q,
+        num_books=num_books, book_size=book_size)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, block_l, num_books),
+                         lambda qi, li: (qi, li, 0)),
+            pl.BlockSpec((block_q, dim), lambda qi, li: (qi, 0)),
+            pl.BlockSpec((num_books, book_size, dim),
+                         lambda qi, li: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_l), lambda qi, li: (qi, li)),
+        out_shape=jax.ShapeDtypeStruct((q, l), jnp.float32),
+        interpret=interpret,
+    )(cand_codes, queries, table)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_l",))
+def rerank_gather_dist_chunked_xla(cand_codes: jax.Array, queries: jax.Array,
+                                   table: jax.Array, *,
+                                   chunk_l: int = DEFAULT_RERANK_CHUNK_L
+                                   ) -> jax.Array:
+    """XLA fallback with the SAME streaming semantics as the Pallas
+    kernel: a ``lax.scan`` over (Q, chunk_l) candidate-code chunks, each
+    decoded and reduced before the next chunk's reconstruction exists.
+    Peak live reconstruction is O(Q * chunk_l * D) — the (Q, L, D) tensor
+    is never built (asserted by the HLO test in tests/test_rerank.py).
+
+    Exactness: distances are independent per (query, candidate) — the
+    chunk split changes no reduction order inside any element — so the
+    result is bit-identical to the materialized oracle.
+    """
+    q, l, m = cand_codes.shape
+    pad = (-l) % chunk_l
+    cc = jnp.pad(cand_codes, ((0, 0), (0, pad), (0, 0)))
+    cc = jnp.moveaxis(cc.reshape(q, -1, chunk_l, m), 1, 0)  # (nc, Q, c, M)
+
+    def step(_, chunk):
+        recon = ref.decode_with_table(chunk, table)         # (Q, c, D)
+        d = jnp.sum(jnp.square(recon - queries[:, None, :]), axis=-1)
+        return None, d
+
+    _, ds = jax.lax.scan(step, None, cc)                    # (nc, Q, c)
+    return jnp.moveaxis(ds, 0, 1).reshape(q, -1)[:, :l]

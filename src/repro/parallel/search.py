@@ -6,7 +6,14 @@ uint8 code matrix (and RVQ-style bias) lives SHARDED across devices — no
 device ever holds the full database — each device runs the streaming
 scan+top-L engine over its own shard with replicated query LUTs, and the
 per-device (Q, L) score/index tuples are all-gathered so the host-side
-caller reranks ONE merged pool.
+caller reranks ONE merged pool through the streaming stage-2 engine
+(``Index._rerank_topk`` -> ``repro.index.rerank``). Stage 2 deliberately
+runs after the merge rather than per shard: bit-parity with the flat
+search requires reranking exactly the global top-L pool (a per-shard
+local rerank would rank a superset and can disagree on the final top-k),
+and the uint8 candidate-code gather is ~100x smaller than shipping
+reconstructions between devices. A device-side merged rerank is a
+ROADMAP open item.
 
 Merge exactness: device d's global ids are ``local + d * shard_rows`` and
 the gathered pools are concatenated device-major, so among equal scores

@@ -1,0 +1,301 @@
+"""Streaming stage-2 engine: fused gather-decode-distance kernel vs
+chunked xla fallback vs the materialized vmap oracle — exact d1 parity
+including tie semantics and cross-query duplicate candidates — plus the
+HLO no-(Q, L, D)/(Q, N, D)-buffer guarantees, reranker resolution through
+the capability matrix, the ``use_d2=False`` chunked exhaustive rerank,
+and the bucket-padded ``add`` satellite."""
+import functools
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_shim import given, settings, st
+
+from repro.index import (DedupRerank, TableRerank, VmapRerank,
+                         backend_supports, candidate_generator_for,
+                         index_factory, reranker_for)
+from repro.index.rerank import exhaustive_topk
+from repro.kernels import ops, ref
+from repro.kernels.rerank_dist import rerank_gather_dist_chunked_xla
+
+
+def _case(rng, q, l, m, k, d, tie_heavy):
+    cand = jnp.asarray(rng.integers(0, k, (q, l, m)), jnp.uint8)
+    queries = jnp.asarray(rng.normal(size=(q, d)), jnp.float32)
+    if tie_heavy:
+        # integer-valued tables and queries make d1 collisions ubiquitous:
+        # downstream top-k parity then tests tie RESOLUTION, not just math
+        table = jnp.asarray(rng.integers(-2, 3, (m, k, d)), jnp.float32)
+        queries = jnp.round(queries)
+    else:
+        table = jnp.asarray(rng.normal(size=(m, k, d)), jnp.float32)
+    return cand, queries, table
+
+
+# ---------------------------------------------------------------------------
+# kernel-level parity: fused vs chunked vs materialized oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tie_heavy", [False, True])
+@pytest.mark.parametrize("q,l,d", [(5, 77, 24),      # L % block/chunk != 0
+                                   (8, 500, 96),     # paper-ish shape
+                                   (1, 1, 8),        # degenerate
+                                   (3, 130, 96)])
+def test_rerank_gather_dist_all_impls_bit_exact(q, l, d, tie_heavy):
+    rng = np.random.default_rng(q * l + d)
+    cand, queries, table = _case(rng, q, l, m=4, k=32, d=d,
+                                 tie_heavy=tie_heavy)
+    want = jax.jit(ref.rerank_gather_dist_ref)(cand, queries, table)
+    assert want.shape == (q, l)
+    for impl in ("xla", "pallas"):
+        got = ops.rerank_gather_dist(cand, queries, table, impl=impl,
+                                     block_l=16, chunk_l=13)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=impl)
+
+
+def test_duplicate_candidates_across_queries():
+    """Stage-1 pools overlap across queries (and L > N duplicates within
+    a pool): every path must score each duplicate occurrence identically."""
+    rng = np.random.default_rng(0)
+    n, m, k, d, q, l = 40, 4, 16, 24, 6, 120      # L > N: forced duplicates
+    codes = jnp.asarray(rng.integers(0, k, (n, m)), jnp.uint8)
+    table = jnp.asarray(rng.integers(-2, 3, (m, k, d)), jnp.float32)
+    queries = jnp.asarray(np.round(rng.normal(size=(q, d))), jnp.float32)
+    cand_rows = jnp.asarray(rng.integers(0, n, (q, l)), jnp.int32)
+    cand = jnp.take(codes, cand_rows, axis=0)
+    want = jax.jit(ref.rerank_gather_dist_ref)(cand, queries, table)
+    for impl in ("xla", "pallas"):
+        got = ops.rerank_gather_dist(cand, queries, table, impl=impl,
+                                     block_l=32, chunk_l=48)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=impl)
+    # duplicated candidate columns carry identical distances
+    flat = np.asarray(want)
+    rows = np.asarray(cand_rows)
+    for i in range(q):
+        _, first = np.unique(rows[i], return_index=True)
+        lut = {rows[i][j]: flat[i][j] for j in first}
+        assert all(flat[i][j] == lut[rows[i][j]] for j in range(l))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    l=st.integers(1, 200),
+    block_l=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rerank_property_parity(l, block_l, seed):
+    """Property: random shapes/blockings/chunkings — fused kernel
+    (interpret mode), chunked xla and the materialized oracle agree
+    bit-for-bit on d1."""
+    rng = np.random.default_rng(seed)
+    q = int(rng.integers(1, 7))
+    cand, queries, table = _case(rng, q, l, m=4, k=16, d=16,
+                                 tie_heavy=bool(rng.integers(0, 2)))
+    want = jax.jit(ref.rerank_gather_dist_ref)(cand, queries, table)
+    for impl in ("xla", "pallas"):
+        got = ops.rerank_gather_dist(cand, queries, table, impl=impl,
+                                     block_l=block_l,
+                                     chunk_l=max(1, block_l // 2))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=impl)
+
+
+# ---------------------------------------------------------------------------
+# index-level parity: every reranker bit-identical on real indexes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", ["PQ4x32,Rerank50", "OPQ4x32,Rerank50",
+                                  "RVQ2x32,Rerank50"])
+def test_table_rerankers_bit_identical_on_index(tiny_dataset, spec):
+    index = index_factory(spec, dim=tiny_dataset.dim)
+    index.train(tiny_dataset.train, iters=4).add(tiny_dataset.base)
+    queries = jnp.asarray(tiny_dataset.queries[:20])
+    luts = index._build_luts(queries)
+    _, cand = candidate_generator_for("xla").topl(index.codes, luts,
+                                                  index.bias, topl=50)
+    want = VmapRerank().distances(index, queries, cand)
+    for backend in ("xla", "pallas"):
+        index.backend = backend
+        rr = reranker_for(index)
+        assert isinstance(rr, TableRerank) and not rr.materializes_recon
+        got = rr.distances(index, queries, cand)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=backend)
+    # full search agrees across every backend, (distance, index) bit-exact
+    index.backend = "xla"
+    want_d, want_i = index.search(queries, 20)
+    for backend in ("pallas", "onehot"):
+        index.backend = backend
+        got_d, got_i = index.search(queries, 20)
+        np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i),
+                                      err_msg=backend)
+        np.testing.assert_array_equal(np.asarray(got_d), np.asarray(want_d),
+                                      err_msg=backend)
+
+
+def test_dedup_rerank_matches_vmap_oracle(tiny_dataset):
+    """UNQ's neural decoder goes through cross-query dedup: unique rows
+    decoded once, distances gathered back — bit-identical to the per-query
+    vmap decode, duplicate-heavy pools included."""
+    from repro.core import unq
+    from repro.index import UNQIndex
+
+    cfg = unq.UNQConfig(dim=96, num_codebooks=8, codebook_size=64,
+                        code_dim=32, hidden_dim=96)
+    params, state = unq.init(jax.random.PRNGKey(0), cfg)
+    index = UNQIndex.from_trained(params, state, cfg, rerank=60)
+    index.add(tiny_dataset.base)
+    queries = jnp.asarray(tiny_dataset.queries[:25])
+    luts = index._build_luts(queries)
+    _, cand = candidate_generator_for("xla").topl(index.codes, luts, None,
+                                                  topl=60)
+    rr = reranker_for(index)
+    assert isinstance(rr, DedupRerank)
+    want = VmapRerank().distances(index, queries, cand)
+    got = rr.distances(index, queries, cand)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    # pathological overlap: every query shares one tiny hot set
+    hot = jnp.asarray(np.random.default_rng(1).integers(0, 30, (25, 60)),
+                      jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(rr.distances(index, queries, hot)),
+        np.asarray(VmapRerank().distances(index, queries, hot)))
+
+
+def test_exhaustive_rerank_chunked_equals_materialized(tiny_dataset):
+    """``use_d2=False`` chunks over N with a running (Q, k) heap — the
+    result (distance AND index, ties included) is bit-identical to
+    ``lax.top_k`` over the materialized (Q, N) d1 matrix."""
+    for spec in ("PQ4x32,Rerank50", "RVQ2x32,Rerank50"):
+        index = index_factory(spec, dim=tiny_dataset.dim)
+        index.train(tiny_dataset.train, iters=4).add(tiny_dataset.base)
+        queries = jnp.asarray(tiny_dataset.queries[:15])
+        got_d, got_i = index.search(queries, 25, use_d2=False)
+        full = jnp.broadcast_to(jnp.arange(index.ntotal),
+                                (queries.shape[0], index.ntotal))
+        d1 = index._rerank_distances_vmap(queries, full)
+        neg, order = jax.lax.top_k(-d1, 25)
+        np.testing.assert_array_equal(np.asarray(got_d), np.asarray(-neg),
+                                      err_msg=spec)
+        np.testing.assert_array_equal(
+            np.asarray(got_i),
+            np.asarray(jnp.take_along_axis(full, order, axis=1)),
+            err_msg=spec)
+
+
+# ---------------------------------------------------------------------------
+# HLO guarantees: no (Q, L, D) / (Q, N, D) reconstruction buffer
+# ---------------------------------------------------------------------------
+
+def test_streaming_rerank_never_materializes_qld():
+    """The acceptance guarantee: the compiled chunked rerank contains NO
+    (Q, L, D) reconstruction, while the materialized oracle (the control)
+    does — plus the compiler's own temp estimate stays under it."""
+    q, l, m, k, d, chunk = 8, 512, 8, 64, 96, 64
+    cand = jax.ShapeDtypeStruct((q, l, m), jnp.uint8)
+    queries = jax.ShapeDtypeStruct((q, d), jnp.float32)
+    table = jax.ShapeDtypeStruct((m, k, d), jnp.float32)
+
+    def streaming(c, qs, t):
+        return rerank_gather_dist_chunked_xla(c, qs, t, chunk_l=chunk)
+
+    qld = re.compile(rf"f32\[{q},{l},{d}\]")
+    compiled = jax.jit(streaming).lower(cand, queries, table).compile()
+    assert not qld.search(compiled.as_text())
+    control = jax.jit(ref.rerank_gather_dist_ref).lower(
+        cand, queries, table).compile()
+    assert qld.search(control.as_text())
+
+    try:
+        temp = compiled.memory_analysis().temp_size_in_bytes
+    except Exception:
+        temp = None
+    if temp is not None:
+        assert temp < q * l * d * 4, temp
+
+
+def test_exhaustive_rerank_never_materializes_qnd():
+    """use_d2=False streams over N: no (Q, N, D) — and no (Q, N) — buffer
+    in the compiled HLO (control: the classic broadcast-arange path has
+    both)."""
+    q, n, m, k, d, chunk = 8, 4096, 4, 32, 96, 256
+    rng = np.random.default_rng(0)
+    table = jnp.asarray(rng.normal(size=(m, k, d)), jnp.float32)
+    codes = jax.ShapeDtypeStruct((n, m), jnp.uint8)
+    queries = jax.ShapeDtypeStruct((q, d), jnp.float32)
+    recon = functools.partial(ref.decode_with_table, table=table)
+
+    def streaming(c, qs):
+        return exhaustive_topk(recon, c, qs, k=30, chunk_n=chunk)
+
+    def materialized(c, qs):
+        full = jnp.broadcast_to(jnp.arange(n), (q, n))
+        r = jax.vmap(lambda ci: ref.decode_with_table(c[ci], table))(full)
+        d1 = jnp.sum(jnp.square(r - qs[:, None, :]), axis=-1)
+        neg, order = jax.lax.top_k(-d1, 30)
+        return -neg, jnp.take_along_axis(full, order, axis=1)
+
+    qnd = re.compile(rf"f32\[{q},{n},{d}\]")
+    qn = re.compile(rf"f32\[{q},{n}\]")
+    compiled = jax.jit(streaming).lower(codes, queries).compile()
+    assert not qnd.search(compiled.as_text())
+    assert not qn.search(compiled.as_text())
+    control = jax.jit(materialized).lower(codes, queries).compile()
+    assert qnd.search(control.as_text()) or qn.search(control.as_text())
+
+
+# ---------------------------------------------------------------------------
+# capability matrix + reranker resolution
+# ---------------------------------------------------------------------------
+
+def test_fused_rerank_capability_and_resolution(tiny_dataset):
+    assert backend_supports("pallas", "fused_rerank")
+    assert not backend_supports("xla", "fused_rerank")
+    assert not backend_supports("onehot", "fused_rerank")
+
+    pq = index_factory("PQ4x32,Rerank40", dim=tiny_dataset.dim)
+    pq.train(tiny_dataset.train, iters=3)
+    pq.backend = "pallas"
+    rr = reranker_for(pq)
+    assert isinstance(rr, TableRerank) and rr.impl == "pallas"
+    pq.backend = "xla"
+    rr = reranker_for(pq)
+    assert isinstance(rr, TableRerank) and rr.impl == "xla"
+    pq.backend = "onehot"
+    assert isinstance(reranker_for(pq), VmapRerank)
+
+
+# ---------------------------------------------------------------------------
+# satellite: bucket-padded add
+# ---------------------------------------------------------------------------
+
+def test_add_bucket_pads_to_fixed_shapes(tiny_dataset):
+    """Differently-sized adds reuse one encoder compilation: every
+    ``_encode`` call sees a shape from the bucket ladder, and the codes
+    are bit-identical to unpadded encoding (encoders are row-stable)."""
+    index = index_factory("PQ4x32", dim=tiny_dataset.dim)
+    index.train(tiny_dataset.train, iters=3)
+    single = index.with_codes(None)
+    single.add(tiny_dataset.base)
+
+    seen = []
+    chunked = index.with_codes(None)
+    real_encode = chunked._encode
+    chunked._encode = lambda xs: (seen.append(int(xs.shape[0])),
+                                  real_encode(xs))[1]
+    for lo, hi in ((0, 100), (100, 350), (350, 351), (351, 4000)):
+        chunked.add(tiny_dataset.base[lo:hi])
+    assert seen == [256, 256, 256, 4096], seen
+    np.testing.assert_array_equal(np.asarray(chunked.codes),
+                                  np.asarray(single.codes))
+    assert chunked.ntotal == single.ntotal == tiny_dataset.base.shape[0]
+
+    # the ladder continues in 8192 multiples past its last rung
+    from repro.index.base import Index
+    assert Index._encode_bucket(8193) == 16384
+    assert Index._encode_bucket(20000) == 24576
