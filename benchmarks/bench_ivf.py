@@ -1,0 +1,119 @@
+"""IVF trajectory benchmark: coarse partitioning vs the flat streaming
+scan — throughput AND recall across the nprobe dial.
+
+Writes ``BENCH_ivf.json`` (repo root by default):
+
+  * ``flat``            — the linear streaming scan baseline over the
+                          same quantizer: us/query, qps, recall@1/@10;
+  * ``ivf/nprobe=P``    for P in {1, 8, 32} — probed search: us/query,
+                          qps, recall@1/@10, plus ``probed_frac`` (the
+                          average fraction of the database the probe
+                          plan actually scans — the work saved) and
+                          ``plan_width`` (the padded ragged width W);
+  * ``headline``        — qps speedup of the best IVF point that holds
+                          recall@10 within 0.02 of flat.
+
+The recall@k here is against the dataset's true nearest neighbor
+(recall@k = fraction of queries whose true NN appears in the top k), the
+paper's Table 2-4 metric. At nprobe == nlist the IVF results are
+bit-identical to flat search (enforced by tests/test_ivf.py); this
+benchmark tracks what the nprobe dial trades away BELOW that point.
+
+Run via ``python -m benchmarks.run --only ivf`` (ci.sh records the json
+on every PR alongside the stage-1/stage-2 trajectories).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core.search import recall_at_k
+from repro.index import index_factory
+
+_NLIST = {"quick": 64, "default": 256, "full": 1024}
+_NPROBES = (1, 8, 32)
+
+
+def _timed_search(index, queries, k, **kw):
+    _, got = index.search(queries, k, **kw)          # warmup/compile
+    t0 = time.time()
+    _, got = index.search(queries, k, **kw)
+    jax.block_until_ready(got)
+    us = (time.time() - t0) * 1e6 / queries.shape[0]
+    return got, us
+
+
+def run(scale: str = "quick", out_path: str | None = None) -> dict:
+    s = common.SCALES[scale]
+    nlist = _NLIST.get(scale, _NLIST["quick"])
+    ds = common.dataset("deep", scale)
+    queries = jnp.asarray(ds.queries)
+    gt = jnp.asarray(ds.gt_nn)
+    k = 100
+
+    flat = index_factory("PQ8x64,Rerank100", dim=ds.dim)
+    flat.train(ds.train, iters=s["kmeans_iters"])
+    flat.add(ds.base)
+    ivf = index_factory(f"IVF{nlist},PQ8x64,Rerank100", dim=ds.dim)
+    ivf.train(ds.train, iters=s["kmeans_iters"])
+    ivf.add(ds.base)
+
+    results = {"n": int(flat.ntotal), "q": int(queries.shape[0]),
+               "nlist": nlist, "backend": jax.default_backend(),
+               "paths": {}}
+
+    got, us = _timed_search(flat, queries, k)
+    rec = recall_at_k(got, gt, ks=(1, 10))
+    results["paths"]["flat"] = {
+        "us_per_query": round(us, 1), "qps": round(1e6 / us, 1),
+        "recall@1": round(rec["recall@1"], 4),
+        "recall@10": round(rec["recall@10"], 4)}
+    common.emit("ivf/flat", us,
+                f"R@1={rec['recall@1']:.3f} R@10={rec['recall@10']:.3f}")
+
+    lens = np.diff(ivf._offsets)
+    for nprobe in _NPROBES:
+        nprobe = min(nprobe, nlist)
+        got, us = _timed_search(ivf, queries, k, nprobe=nprobe)
+        rec = recall_at_k(got, gt, ks=(1, 10))
+        probe = ivf.probe_cells(queries, nprobe)
+        probed = float(np.mean(lens[probe].sum(axis=1)) / ivf.ntotal)
+        rows, _ = ivf._probe_plan(probe)
+        results["paths"][f"ivf/nprobe={nprobe}"] = {
+            "us_per_query": round(us, 1), "qps": round(1e6 / us, 1),
+            "recall@1": round(rec["recall@1"], 4),
+            "recall@10": round(rec["recall@10"], 4),
+            "probed_frac": round(probed, 4),
+            "plan_width": int(rows.shape[1])}
+        common.emit(f"ivf/nprobe={nprobe}", us,
+                    f"R@1={rec['recall@1']:.3f} "
+                    f"R@10={rec['recall@10']:.3f} "
+                    f"probed={probed * 100:.1f}%")
+
+    flat_row = results["paths"]["flat"]
+    eligible = {
+        name: p for name, p in results["paths"].items()
+        if name.startswith("ivf/")
+        and p["recall@10"] >= flat_row["recall@10"] - 0.02}
+    best = max(eligible, key=lambda n: eligible[n]["qps"], default=None)
+    results["headline"] = {
+        "best": best,
+        "qps_speedup_vs_flat": round(
+            eligible[best]["qps"] / flat_row["qps"], 2) if best else None}
+
+    if out_path is None:
+        out_path = pathlib.Path(__file__).resolve().parent.parent \
+            / "BENCH_ivf.json"
+    pathlib.Path(out_path).write_text(json.dumps(results, indent=2) + "\n")
+    print(f"# ivf: wrote {out_path}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -25,4 +25,7 @@ python -m benchmarks.run --only stage1 --scale quick
 echo "== stage-2 engine trajectory (writes BENCH_stage2.json) =="
 python -m benchmarks.run --only stage2 --scale quick
 
+echo "== IVF trajectory: flat vs nprobe dial (writes BENCH_ivf.json) =="
+python -m benchmarks.run --only ivf --scale quick
+
 echo "CI OK"

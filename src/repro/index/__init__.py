@@ -13,11 +13,16 @@ surface over UNQ (the paper's method) and the shallow MCQ baselines.
 Scan backends (xla | onehot | pallas) resolve per device via
 ``repro.index.backend``; stage-1 candidate generation resolves through
 backend capabilities to the streaming scan+top-L engine
-(``repro.index.candidates``); stage-2 reranking resolves the same way to
-the streaming rerank engine (``repro.index.rerank``: fused
-gather-decode-distance kernel, chunked table decode, or cross-query
-dedup); wrap any index in ``ShardedIndex`` for pod-style per-device
-scanning with an all-gathered merged rerank.
+(``repro.index.candidates``), whose gathered face serves IVF probing;
+stage-2 reranking resolves the same way to the streaming rerank engine
+(``repro.index.rerank``: fused gather-decode-distance kernel, chunked
+table decode, or cross-query dedup); an ``IVF{nlist}`` factory prefix
+wraps any quantizer in ``IVFIndex`` (coarse k-means cells, ``nprobe``
+probed per query, bit-exact vs flat search at full probe); every
+``search`` accepts ``filter_mask=`` (±inf bias streams through all
+stage-1 paths); wrap any index in ``ShardedIndex`` for pod-style
+per-device scanning — by coarse cell for IVF inners — with an
+all-gathered merged rerank.
 """
 from repro.index.backend import (available_scan_backends,
                                  backend_capabilities,
@@ -26,8 +31,10 @@ from repro.index.backend import (available_scan_backends,
                                  resolve_scan_backend)
 from repro.index.base import Index
 from repro.index.candidates import (CandidateGenerator, MaterializedTopL,
-                                    StreamingTopL, candidate_generator_for)
+                                    StreamingTopL, candidate_generator_for,
+                                    merge_topl)
 from repro.index.factory import index_factory
+from repro.index.ivf import IVFIndex
 from repro.index.pq_index import OPQIndex, PQIndex, RVQIndex
 from repro.index.rerank import (DedupRerank, Reranker, TableRerank,
                                 VmapRerank, reranker_for)
@@ -42,11 +49,13 @@ __all__ = [
     "PQIndex",
     "OPQIndex",
     "RVQIndex",
+    "IVFIndex",
     "ShardedIndex",
     "CandidateGenerator",
     "MaterializedTopL",
     "StreamingTopL",
     "candidate_generator_for",
+    "merge_topl",
     "Reranker",
     "TableRerank",
     "DedupRerank",

@@ -200,8 +200,34 @@ class Index(abc.ABC):
                 self._bias = jnp.concatenate([self._bias, bias], axis=0)
         return self
 
+    def _lower_filter(self, filter_mask, num_queries: int):
+        """Lower a boolean keep-mask to the two stage-1 bias streams.
+
+        filter_mask: None | (ntotal,) | (Q, ntotal) bool (True = keep).
+        Returns (bias, qbias): the per-point (N,) stream — the index's own
+        bias with filtered points forced to +inf for a shared mask — and
+        the per-(query, point) (Q, N) stream for per-query masks. Uses
+        ``where`` rather than addition so kept points' scores are
+        bit-identical to an index built over only the kept points.
+        """
+        if filter_mask is None:
+            return self._bias, None
+        mask = jnp.asarray(filter_mask, bool)
+        if mask.ndim == 1:
+            if mask.shape != (self.ntotal,):
+                raise ValueError(
+                    f"filter_mask shape {mask.shape} != ({self.ntotal},)")
+            base_bias = self._bias if self._bias is not None \
+                else jnp.zeros((self.ntotal,), jnp.float32)
+            return jnp.where(mask, base_bias, jnp.inf), None
+        if mask.shape != (num_queries, self.ntotal):
+            raise ValueError(
+                f"filter_mask shape {mask.shape} != "
+                f"({num_queries}, {self.ntotal})")
+        return self._bias, jnp.where(mask, 0.0, jnp.inf).astype(jnp.float32)
+
     def search(self, queries, k: int, *, use_rerank: bool | None = None,
-               use_d2: bool = True):
+               use_d2: bool = True, filter_mask=None):
         """Two-stage search: (Q, dim) queries -> (distances, indices), each
         (Q, k), sorted closest-first.
 
@@ -210,6 +236,14 @@ class Index(abc.ABC):
         ablation); ``use_d2=False`` reranks the ENTIRE database with exact
         reconstruction distances ("Exhaustive reranking" ablation),
         chunked over N — the (Q, N, D) reconstruction never exists.
+
+        ``filter_mask`` — (ntotal,) or (Q, ntotal) bool, True = eligible —
+        is the public filtered-search API: it lowers to a ±inf additive
+        bias stream that rides every stage-1 path (fused kernel included),
+        so a filtered point can never enter the candidate pool. Results
+        over the kept points are bit-identical to searching an index that
+        only contains them; when fewer than k points survive, the tail is
+        reported as (distance=+inf, index=-1).
         """
         if self.ntotal == 0:
             raise RuntimeError("search on an empty index (call add first)")
@@ -221,22 +255,44 @@ class Index(abc.ABC):
                 f"{type(self).__name__} has no rerank budget (rerank=0); "
                 "set index.rerank or pass use_rerank=False")
         if not use_d2:
+            if filter_mask is not None:
+                raise ValueError(
+                    "filter_mask is not supported with use_d2=False "
+                    "(the exhaustive-rerank ablation scans every point)")
             return self._exhaustive_rerank_topk(queries, k)
         topl = min(self.rerank if use_rerank else k, self.ntotal)
         luts = self._build_luts(queries)
         gen = candidate_generator_for(self.backend)
-        d2, cand = gen.topl(self._codes, luts, self._bias, topl=topl)
+        bias, qbias = self._lower_filter(filter_mask, queries.shape[0])
+        d2, cand = gen.topl(self._codes, luts, bias, topl=topl, qbias=qbias)
         if not use_rerank:
-            return d2[:, :k], cand[:, :k]
-        return self._rerank_topk(queries, cand, k)
+            d, i = d2[:, :k], cand[:, :k]
+            if filter_mask is not None:
+                i = jnp.where(jnp.isposinf(d), -1, i)
+            return d, i
+        valid = jnp.isfinite(d2) if filter_mask is not None else None
+        return self._rerank_topk(queries, cand, k, valid=valid)
 
-    def _rerank_topk(self, queries, cand, k: int):
+    def _rerank_topk(self, queries, cand, k: int, *, valid=None):
         """Shared stage-2 tail: d1 rerank of the candidate pool + final
-        top-k. Also used by ShardedIndex on the merged pool."""
+        top-k. Also used by ShardedIndex on the merged pool.
+
+        ``valid`` (Q, L) bool marks pool entries that are real candidates
+        (filtered search can underfill the pool): invalid slots are
+        clamped to row 0 for the gather, forced to d1=+inf so they can
+        never outrank a real candidate, and reported as index -1."""
+        if valid is not None:
+            cand = jnp.where(valid, cand, 0)
         d1 = self._rerank_distances(queries, cand)         # (Q, L)
+        if valid is not None:
+            d1 = jnp.where(valid, d1, jnp.inf)
         kk = min(k, d1.shape[1])
         neg, order = jax.lax.top_k(-d1, kk)
-        return -neg, jnp.take_along_axis(cand, order, axis=1)
+        d = -neg
+        i = jnp.take_along_axis(cand, order, axis=1)
+        if valid is not None:
+            i = jnp.where(jnp.isposinf(d), -1, i)
+        return d, i
 
     def _rerank_distances(self, queries, cand) -> jax.Array:
         """Stage 2: exact reconstruction distances d1 = ||q - recon||^2

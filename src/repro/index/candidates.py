@@ -16,8 +16,21 @@ resolved through the scan-backend registry, instead of hardcoding one
 
 Both produce bit-identical (score, index) results — the streaming paths
 reproduce ``lax.top_k`` tie semantics exactly — so generator selection is
-purely a memory/performance decision, never a quality one. Per-point score
-biases (RVQ's ||decode(code)||^2) flow through either path.
+purely a memory/performance decision, never a quality one.
+
+Two bias streams flow through every path:
+
+  * ``bias``  (N,)   per-point terms (RVQ's ||decode(code)||^2);
+  * ``qbias`` (Q, N) per-(query, point) terms — the lowering target of
+    the filtered-search API (``filter_mask`` becomes 0 / +inf).
+
+``gather_topl`` is the IVF face of the same engines: each query scores a
+per-query slot list (a padded ragged concatenation of inverted lists)
+instead of the whole database. Streaming backends ride
+``ops.adc_gather_topl`` (fused kernel / chunked gather-scan); the
+materialized path scores the full buffer with its own formulation and
+gathers the slots — which keeps IVF-at-full-probe bit-identical to flat
+search PER BACKEND, reassociated onehot reductions included.
 """
 from __future__ import annotations
 
@@ -30,6 +43,8 @@ import jax.numpy as jnp
 from repro.index.backend import backend_supports, resolve_scan_backend
 from repro.kernels import ops
 
+_IMAX = jnp.iinfo(jnp.int32).max
+
 
 class CandidateGenerator(abc.ABC):
     """Stage 1 strategy: codes + per-query LUTs -> top-L candidates."""
@@ -41,22 +56,49 @@ class CandidateGenerator(abc.ABC):
         self.impl = impl                # concrete kernels.ops impl string
 
     @abc.abstractmethod
-    def topl(self, codes, luts, bias, *, topl: int):
-        """codes (N, M), luts (Q, M, K), bias None | (N,) ->
-        (scores, indices), each (Q, min(topl, N)), sorted closest-first
-        with ties broken toward the smaller database index."""
+    def topl(self, codes, luts, bias, *, topl: int, qbias=None):
+        """codes (N, M), luts (Q, M, K), bias None | (N,), qbias
+        None | (Q, N) -> (scores, indices), each (Q, min(topl, N)),
+        sorted closest-first with ties broken toward the smaller
+        database index."""
+
+    @abc.abstractmethod
+    def gather_topl(self, codes, rows, gids, luts, rowbias, *, topl: int):
+        """Gathered (IVF) stage 1: codes (N, M) buffer, rows/gids (Q, W)
+        per-query slot plan (gids ascending per row, ``_IMAX`` pads),
+        rowbias None | (Q, W) -> (scores, global ids), each
+        (Q, min(topl, W)), sorted by (score asc, gid asc); +inf entries
+        carry the canonical ``_IMAX`` id."""
 
     def __repr__(self):
         return f"{type(self).__name__}(impl={self.impl!r})"
 
 
 @functools.partial(jax.jit, static_argnames=("topl", "impl"))
-def _materialized_topl(codes, luts, bias, *, topl: int, impl: str):
+def _materialized_topl(codes, luts, bias, qbias, *, topl: int, impl: str):
     scores = ops.adc_scan_batch(codes, luts, impl=impl)    # (Q, N)
     if bias is not None:
         scores = scores + bias[None, :]
+    if qbias is not None:
+        scores = scores + qbias
     neg, idx = jax.lax.top_k(-scores, topl)
     return -neg, idx
+
+
+@functools.partial(jax.jit, static_argnames=("topl", "impl"))
+def _materialized_gather_topl(codes, rows, gids, luts, rowbias, *,
+                              topl: int, impl: str):
+    """Full-buffer scan (this backend's own formulation — identical bits
+    to its flat scan) + slot gather + top-L. The (Q, N) matrix exists, as
+    it does on every materialized path."""
+    scores = ops.adc_scan_batch(codes, luts, impl=impl)    # (Q, N)
+    picked = jnp.take_along_axis(scores, rows, axis=1)     # (Q, W)
+    if rowbias is not None:
+        picked = picked + rowbias
+    picked = jnp.where(gids == _IMAX, jnp.inf, picked)
+    gids = jnp.where(jnp.isposinf(picked), _IMAX, gids)
+    neg, pos = jax.lax.top_k(-picked, topl)
+    return -neg, jnp.take_along_axis(gids, pos, axis=1)
 
 
 class MaterializedTopL(CandidateGenerator):
@@ -65,10 +107,15 @@ class MaterializedTopL(CandidateGenerator):
 
     materializes_scores = True
 
-    def topl(self, codes, luts, bias, *, topl: int):
-        return _materialized_topl(codes, luts, bias,
+    def topl(self, codes, luts, bias, *, topl: int, qbias=None):
+        return _materialized_topl(codes, luts, bias, qbias,
                                   topl=min(topl, codes.shape[0]),
                                   impl=self.impl)
+
+    def gather_topl(self, codes, rows, gids, luts, rowbias, *, topl: int):
+        return _materialized_gather_topl(
+            codes, rows, gids, luts, rowbias,
+            topl=min(topl, rows.shape[1]), impl=self.impl)
 
 
 class StreamingTopL(CandidateGenerator):
@@ -77,9 +124,13 @@ class StreamingTopL(CandidateGenerator):
 
     materializes_scores = False
 
-    def topl(self, codes, luts, bias, *, topl: int):
+    def topl(self, codes, luts, bias, *, topl: int, qbias=None):
         return ops.adc_scan_topl(codes, luts, topl=topl, bias=bias,
-                                 impl=self.impl)
+                                 qbias=qbias, impl=self.impl)
+
+    def gather_topl(self, codes, rows, gids, luts, rowbias, *, topl: int):
+        return ops.adc_gather_topl(codes, rows, gids, luts, topl=topl,
+                                   rowbias=rowbias, impl=self.impl)
 
 
 def candidate_generator_for(backend: str | None = "auto") -> CandidateGenerator:
@@ -93,3 +144,23 @@ def candidate_generator_for(backend: str | None = "auto") -> CandidateGenerator:
     if backend_supports(impl, "streaming_topl"):
         return StreamingTopL(impl)
     return MaterializedTopL(impl)
+
+
+def merge_topl(scores, ids, topl: int):
+    """Exact lexicographic (score asc, id asc) top-L over an UNSORTED
+    candidate pool (Q, P) — the cross-shard merge for IVF pools, whose
+    per-shard global-id ranges interleave (cell-grouped shards), so the
+    positional tie-break of a plain ``lax.top_k`` would be wrong.
+
+    Two stable argsorts: ascending id first, then stable-by-score — among
+    equal scores the id order survives, which is exactly the flat-search
+    tie-break. +inf entries are canonicalized to id ``_IMAX`` first.
+    """
+    ids = jnp.where(jnp.isposinf(scores), _IMAX, ids)
+    order1 = jnp.argsort(ids, axis=1, stable=True)
+    s = jnp.take_along_axis(scores, order1, axis=1)
+    g = jnp.take_along_axis(ids, order1, axis=1)
+    order2 = jnp.argsort(s, axis=1, stable=True)
+    topl = min(topl, scores.shape[1])
+    return (jnp.take_along_axis(s, order2, axis=1)[:, :topl],
+            jnp.take_along_axis(g, order2, axis=1)[:, :topl])

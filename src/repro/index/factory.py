@@ -1,29 +1,39 @@
 """FAISS-style string factory for compressed-domain indexes.
 
     index = index_factory("UNQ8x256,Rerank500", dim=96)
+    index = index_factory("IVF1024,UNQ8x256,Rerank500", dim=96)
 
 Grammar — comma-separated components, exactly one quantizer:
 
   quantizers                         modifiers
   ----------------------------       ---------------------------------
-  UNQ{M}x{K}   neural (the paper)    Rerank{L}   stage-2 budget (d1)
-  PQ{M}[x{K}]  product quant.        Scan(name)  pin a scan backend
-  OPQ{M}[x{K}] rotated PQ                        (xla|onehot|pallas|auto)
-  RVQ{M}[x{K}] residual/additive
+  UNQ{M}x{K}   neural (the paper)    IVF{nlist}  coarse k-means partition
+  PQ{M}[x{K}]  product quant.                    in front of the scan
+  OPQ{M}[x{K}] rotated PQ            NProbe{p}   cells probed per query
+  RVQ{M}[x{K}] residual/additive                 (default 8; needs IVF)
+                                     Rerank{L}   stage-2 budget (d1)
+                                     Scan(name)  pin a scan backend
+                                                 (xla|onehot|pallas|auto)
 
 M = codebooks (bytes/vector at K<=256), K = codebook size (default 256).
 Without ``Rerank``, UNQ keeps its paper default (L=500) and the shallow
-quantizers are ADC-only — the classic FAISS IndexPQ behavior.
+quantizers are ADC-only — the classic FAISS IndexPQ behavior. An ``IVF``
+prefix wraps the quantizer in an ``IVFIndex``: vectors are assigned to
+``nlist`` k-means cells on ``add`` and only ``nprobe`` cells are scanned
+per query (``nprobe=nlist`` reproduces flat search bit-for-bit).
 """
 from __future__ import annotations
 
 import re
 
 from repro.index.base import Index
+from repro.index.ivf import IVFIndex
 from repro.index.pq_index import OPQIndex, PQIndex, RVQIndex
 from repro.index.unq_index import UNQIndex
 
 _QUANT_RE = re.compile(r"^(UNQ|PQ|OPQ|RVQ)(\d+)(?:x(\d+))?$")
+_IVF_RE = re.compile(r"^IVF(\d+)$")
+_NPROBE_RE = re.compile(r"^NProbe(\d+)$")
 _RERANK_RE = re.compile(r"^Rerank(\d+)$")
 _SCAN_RE = re.compile(r"^Scan\((\w+)\)$")
 
@@ -35,6 +45,8 @@ def index_factory(spec: str, dim: int, *, backend: str = "auto") -> Index:
     """Build an untrained Index from a factory string (see module doc)."""
     quant = None          # (cls, M, K)
     rerank = None
+    nlist = None
+    nprobe = None
     scan = backend
     for comp in spec.split(","):
         comp = comp.strip()
@@ -47,6 +59,16 @@ def index_factory(spec: str, dim: int, *, backend: str = "auto") -> Index:
             quant = (_QUANTIZERS[m.group(1)], int(m.group(2)),
                      int(m.group(3) or 256))
             continue
+        m = _IVF_RE.match(comp)
+        if m:
+            if nlist is not None:
+                raise ValueError(f"multiple IVF components in {spec!r}")
+            nlist = int(m.group(1))
+            continue
+        m = _NPROBE_RE.match(comp)
+        if m:
+            nprobe = int(m.group(1))
+            continue
         m = _RERANK_RE.match(comp)
         if m:
             rerank = int(m.group(1))
@@ -57,16 +79,24 @@ def index_factory(spec: str, dim: int, *, backend: str = "auto") -> Index:
             continue
         raise ValueError(
             f"cannot parse component {comp!r} of factory string {spec!r} "
-            "(expected UNQ8x256 / PQ8 / OPQ8x256 / RVQ8 / Rerank500 / "
-            "Scan(xla))")
+            "(expected UNQ8x256 / PQ8 / OPQ8x256 / RVQ8 / IVF1024 / "
+            "NProbe8 / Rerank500 / Scan(xla))")
     if quant is None:
         raise ValueError(f"no quantizer component in factory string {spec!r}")
+    if nprobe is not None and nlist is None:
+        raise ValueError(f"NProbe without an IVF component in {spec!r}")
 
     cls, num_books, book_size = quant
     kw: dict = {"backend": scan}
     if rerank is not None:
         kw["rerank"] = rerank
     if cls is UNQIndex:
-        return cls(dim, num_codebooks=num_books, codebook_size=book_size,
-                   **kw)
-    return cls(dim, num_books=num_books, book_size=book_size, **kw)
+        inner = cls(dim, num_codebooks=num_books, codebook_size=book_size,
+                    **kw)
+    else:
+        inner = cls(dim, num_books=num_books, book_size=book_size, **kw)
+    if nlist is None:
+        return inner
+    return IVFIndex(dim, inner=inner, nlist=nlist,
+                    nprobe=nprobe if nprobe is not None else 8,
+                    rerank=inner.rerank, backend=scan)

@@ -1,0 +1,413 @@
+"""IVF coarse partitioning in front of the streaming scan (the paper's
+billion-scale regime: DEEP1B-class corpora are never scanned linearly).
+
+``IVFIndex`` wraps any trained ``Index`` quantizer behind the same
+train/add/search/save/load surface and prepends a k-means coarse
+quantizer with ``nlist`` cells:
+
+  * ``train`` fits the wrapped quantizer AND the coarse centroids;
+  * ``add`` encodes as usual, assigns each vector to its nearest
+    centroid, and keeps the codes in ONE contiguous cell-grouped buffer
+    with CSR offsets (``_offsets[c]:_offsets[c+1]`` is cell c's inverted
+    list) — no per-cell Python lists, so the probed cells of a whole
+    query batch concatenate into a single padded (Q, W) ragged plan;
+  * ``search`` ranks centroids per query, takes the top ``nprobe``
+    cells, builds the ragged plan (slot -> buffer row + global id,
+    sorted by global id, pads marked ``_IMAX``) host-side from the CSR
+    offsets, and hands it to the stage-1 engine's gathered face
+    (``CandidateGenerator.gather_topl`` -> ``ops.adc_gather_topl``):
+    fused Pallas kernel, chunked xla, or the materialized control —
+    all bit-identical.
+
+Exactness: a slot's score is computed with the same per-point math as the
+flat scan (same left-to-right codebook chain / one-hot contraction on the
+same code row), the plan lists every point exactly once at
+``nprobe == nlist`` (cells partition the database), and every path breaks
+score ties toward the smaller GLOBAL id — so full-probe IVF search is
+bit-identical to flat search, scores and indices, on every backend. The
+same plan carries the per-point bias stream (RVQ norms) and the lowered
+``filter_mask`` (+inf drops a slot), so filtered IVF search composes for
+free.
+
+Stage 2 is unchanged: candidate global ids translate to buffer rows
+through the stored permutation and ride the streaming rerank engine
+(fused table kernel / cross-query dedup) exactly like a flat index.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import kmeans
+from repro.index import base
+from repro.index.candidates import candidate_generator_for
+
+_IMAX = np.iinfo(np.int32).max
+
+
+def _plan_width(w: int) -> int:
+    """Pad the ragged plan width to a small ladder so repeated searches
+    with similar probe sizes reuse one compiled scan."""
+    if w <= 8:
+        return 8
+    if w <= 128:
+        return -(-w // 8) * 8
+    return -(-w // 128) * 128
+
+
+class IVFIndex(base.Index):
+    """Inverted-file index over any wrapped quantizer (see module doc)."""
+
+    kind = "ivf"
+
+    def __init__(self, dim: int, *, inner: base.Index, nlist: int,
+                 nprobe: int = 8, rerank: int = 0, backend: str = "auto"):
+        super().__init__(dim, rerank=rerank, backend=backend)
+        if nlist < 1:
+            raise ValueError(f"nlist must be >= 1, got {nlist}")
+        if inner.ntotal:
+            raise ValueError("wrap an EMPTY quantizer index; add vectors "
+                             "through the IVFIndex so they are partitioned")
+        self.inner = inner
+        self.nlist = nlist
+        self.nprobe = nprobe
+        self.coarse: jax.Array | None = None     # (nlist, dim) centroids
+        # cell-grouped buffer state (parallel to self._codes / self._bias)
+        self._ids_np: np.ndarray | None = None   # (N,) buffer row -> gid
+        self._cells_np: np.ndarray | None = None  # (N,) buffer row -> cell
+        self._offsets: np.ndarray | None = None  # (nlist + 1,) CSR
+        self._pos_dev: jax.Array | None = None   # (N,) gid -> buffer row
+
+    # -- delegated quantizer primitives ------------------------------------
+
+    @property
+    def is_trained(self) -> bool:
+        return self.inner.is_trained and self.coarse is not None
+
+    def train(self, xs, *, coarse_iters: int = 10, coarse_seed: int = 0,
+              **kw) -> "IVFIndex":
+        """Fit the wrapped quantizer (``**kw`` pass through) and the
+        k-means coarse partition on the same training vectors."""
+        xs = jnp.asarray(xs)
+        self.inner.train(xs, **kw)
+        self.coarse = kmeans(jax.random.PRNGKey(coarse_seed), xs,
+                             self.nlist, iters=coarse_iters)
+        self._invalidate_caches()
+        return self
+
+    def _encode(self, xs) -> jax.Array:
+        self.inner.backend = self.backend       # keep encode impl in sync
+        return self.inner._encode(xs)
+
+    def _build_luts(self, queries) -> jax.Array:
+        return self.inner._build_luts(queries)
+
+    def _reconstruct(self, codes) -> jax.Array:
+        return self.inner._reconstruct(codes)
+
+    def _build_decode_table(self):
+        return self.inner._build_decode_table()
+
+    def _encode_bias(self, codes):
+        return self.inner._encode_bias(codes)
+
+    def _invalidate_caches(self) -> None:
+        super()._invalidate_caches()
+        self.inner._invalidate_caches()
+        self._assign_fn = None
+
+    # -- cell-grouped database ---------------------------------------------
+
+    def _coarse_dists(self, xs):
+        """(n, dim) -> (n, nlist) squared distances up to a per-row
+        constant (||x||^2 dropped: rankings are all we use)."""
+        if getattr(self, "_assign_fn", None) is None:
+            self._assign_fn = jax.jit(
+                lambda x, c: jnp.sum(c * c, axis=1)[None, :]
+                - 2.0 * x @ c.T)
+        return self._assign_fn(xs, self.coarse)
+
+    def probe_cells(self, queries, nprobe: int) -> np.ndarray:
+        """Per-query top-``nprobe`` coarse cells, (Q, nprobe) int32
+        (closest centroid first)."""
+        nprobe = max(1, min(int(nprobe), self.nlist))
+        _, cells = jax.lax.top_k(-self._coarse_dists(jnp.asarray(queries)),
+                                 nprobe)
+        return np.asarray(cells)
+
+    def reset(self) -> None:
+        super().reset()
+        self._ids_np = None
+        self._cells_np = None
+        self._offsets = None
+        self._pos_dev = None
+
+    def with_codes(self, codes, bias=None):
+        raise NotImplementedError(
+            "IVFIndex code buffers are cell-grouped with id/offset side "
+            "state; use add()/reset() instead of with_codes views")
+
+    def subset(self, n: int):
+        raise NotImplementedError(
+            "nested-subset views are not defined for cell-grouped IVF "
+            "buffers; build a flat index for subset scaling studies")
+
+    def add(self, xs) -> "IVFIndex":
+        """Encode, assign to coarse cells, and regroup the contiguous
+        buffer (stable by cell) so every inverted list stays one CSR
+        slice. Global ids are assignment order, exactly like a flat
+        ``add`` — searches return them, not buffer positions."""
+        if not self.is_trained:
+            raise RuntimeError(f"{type(self).__name__}.add before train()")
+        xs = jnp.asarray(xs)
+        n = xs.shape[0]
+        bucket = self._encode_bucket(n)
+        xp = jnp.pad(xs, ((0, bucket - n), (0, 0))) if bucket != n else xs
+        codes = self._encode(xp)[:n]
+        bias = self._encode_bias(codes)
+        cells = np.asarray(jnp.argmin(self._coarse_dists(xs), axis=1),
+                           np.int32)
+        old_n = self.ntotal
+        ids = np.arange(old_n, old_n + n, dtype=np.int32)
+        if self._codes is not None:
+            codes = jnp.concatenate([self._codes, codes], axis=0)
+            if bias is not None:
+                bias = jnp.concatenate([self._bias, bias], axis=0)
+            cells = np.concatenate([self._cells_np, cells])
+            ids = np.concatenate([self._ids_np, ids])
+        order = np.argsort(cells, kind="stable")
+        order_dev = jnp.asarray(order, jnp.int32)
+        self._codes = jnp.take(codes, order_dev, axis=0)
+        self._bias = None if bias is None else jnp.take(bias, order_dev)
+        self._cells_np = cells[order]
+        self._ids_np = ids[order]
+        counts = np.bincount(self._cells_np, minlength=self.nlist)
+        self._offsets = np.concatenate(
+            [[0], np.cumsum(counts)]).astype(np.int64)
+        pos = np.empty(self.ntotal, np.int32)
+        pos[self._ids_np] = np.arange(self.ntotal, dtype=np.int32)
+        self._pos_dev = jnp.asarray(pos)
+        return self
+
+    # -- probing -------------------------------------------------------------
+
+    def _probe_plan(self, probe: np.ndarray, cell_range=None,
+                    row_offset: int = 0):
+        """Concatenate the CSR inverted lists of each query's probed cells
+        into one padded ragged plan.
+
+        probe (Q, P) int32 cell ids; ``cell_range=(lo, hi)`` restricts to
+        a shard's owned cells (rows shifted by ``row_offset`` so they
+        index the shard-local buffer slice).
+
+        Returns (rows, gids): np.int32 (Q, W) — buffer rows to score and
+        the global id behind each slot, SORTED ascending by gid per query
+        (pads last, gid = _IMAX, row = 0) — the plan contract of
+        ``ops.adc_gather_topl``.
+        """
+        off = self._offsets
+        lens = (off[1:] - off[:-1]).astype(np.int64)
+        q = probe.shape[0]
+        cell_lens = lens[probe]                       # (Q, P)
+        if cell_range is not None:
+            owned = (probe >= cell_range[0]) & (probe < cell_range[1])
+            cell_lens = np.where(owned, cell_lens, 0)
+        starts = off[probe]                           # (Q, P)
+        totals = cell_lens.sum(axis=1)                # (Q,)
+        w = _plan_width(int(max(totals.max(initial=0), 1)))
+        rows = np.zeros((q, w), np.int32)
+        gids = np.full((q, w), _IMAX, np.int32)
+        # flat ragged expansion of every (query, cell) list in one shot:
+        # slot -> buffer row via the classic repeat/cumsum trick
+        counts = cell_lens.ravel()
+        total = int(counts.sum())
+        if total:
+            grp_starts = np.repeat(starts.ravel(), counts)
+            within = np.arange(total, dtype=np.int64) - np.repeat(
+                np.cumsum(counts) - counts, counts)
+            flat_rows = (grp_starts + within).astype(np.int64)
+            qidx = np.repeat(np.arange(q), totals)
+            col = np.arange(total, dtype=np.int64) - np.repeat(
+                np.cumsum(totals) - totals, totals)
+            rows[qidx, col] = (flat_rows - row_offset).astype(np.int32)
+            gids[qidx, col] = self._ids_np[flat_rows]
+            order = np.argsort(gids, axis=1, kind="stable")
+            gids = np.take_along_axis(gids, order, axis=1)
+            rows = np.take_along_axis(rows, order, axis=1)
+        return rows, gids
+
+    def _plan_rowbias(self, rows, gids, shard_bias, filter_mask,
+                      num_queries: int):
+        """The per-slot additive stream for a plan: the gathered per-point
+        bias (RVQ norms, from the buffer/shard the rows index) with the
+        lowered filter mask (+inf = filtered out, keyed by GLOBAL id).
+        Returns (Q, W) f32 or None when there is nothing to add."""
+        if shard_bias is None and filter_mask is None:
+            return None
+        rowbias = jnp.take(shard_bias, rows) if shard_bias is not None \
+            else jnp.zeros(rows.shape, jnp.float32)
+        if filter_mask is not None:
+            mask = jnp.asarray(filter_mask, bool)
+            safe = jnp.where(gids == _IMAX, 0, gids)
+            if mask.ndim == 1:
+                if mask.shape != (self.ntotal,):
+                    raise ValueError(
+                        f"filter_mask shape {mask.shape} != "
+                        f"({self.ntotal},)")
+                keep = jnp.take(mask, safe)
+            else:
+                if mask.shape != (num_queries, self.ntotal):
+                    raise ValueError(
+                        f"filter_mask shape {mask.shape} != "
+                        f"({num_queries}, {self.ntotal})")
+                keep = jnp.take_along_axis(mask, safe, axis=1)
+            rowbias = jnp.where(keep, rowbias, jnp.inf)
+        return rowbias
+
+    # -- search --------------------------------------------------------------
+
+    def search(self, queries, k: int, *, nprobe: int | None = None,
+               use_rerank: bool | None = None, use_d2: bool = True,
+               filter_mask=None):
+        """Probed two-stage search (same contract as ``Index.search`` plus
+        ``nprobe``). Slots the probe misses simply never enter the pool;
+        when the probed pool holds fewer than k points the tail is
+        reported as (distance=+inf, index=-1)."""
+        if self.ntotal == 0:
+            raise RuntimeError("search on an empty index (call add first)")
+        queries = jnp.asarray(queries)
+        if use_rerank is None:
+            use_rerank = self.rerank > 0
+        if use_rerank and self.rerank <= 0:
+            raise ValueError(
+                f"{type(self).__name__} has no rerank budget (rerank=0); "
+                "set index.rerank or pass use_rerank=False")
+        if not use_d2:
+            if filter_mask is not None:
+                raise ValueError(
+                    "filter_mask is not supported with use_d2=False")
+            return self._exhaustive_rerank_topk(queries, k)
+        probe = self.probe_cells(queries, nprobe or self.nprobe)
+        rows_np, gids_np = self._probe_plan(probe)
+        rows = jnp.asarray(rows_np)
+        gids = jnp.asarray(gids_np)
+        rowbias = self._plan_rowbias(rows, gids, self._bias, filter_mask,
+                                     queries.shape[0])
+        luts = self._build_luts(queries)
+        topl = min(self.rerank if use_rerank else k, rows.shape[1])
+        gen = candidate_generator_for(self.backend)
+        d2, ids = gen.gather_topl(self._codes, rows, gids, luts, rowbias,
+                                  topl=topl)
+        return self._finish_pool(queries, d2, ids, k,
+                                 use_rerank=use_rerank)
+
+    def _finish_pool(self, queries, d2, ids, k: int, *, use_rerank: bool):
+        """Shared tail over a gathered candidate pool (also used by
+        ShardedIndex on the merged per-shard pools): optional stage-2
+        rerank through the streaming engine, +inf pads reported as -1,
+        and the result padded out to the flat-search width min(k, ntotal)
+        when the probed pool is narrower (the documented (+inf, -1)
+        tail)."""
+        if not use_rerank:
+            kk = min(k, d2.shape[1])
+            d = d2[:, :kk]
+            i = jnp.where(jnp.isposinf(d), -1, ids[:, :kk])
+        else:
+            valid = jnp.isfinite(d2)
+            rows_cand = jnp.take(self._pos_dev, jnp.where(valid, ids, 0))
+            d1 = self._rerank_distances(queries, rows_cand)
+            d1 = jnp.where(valid, d1, jnp.inf)
+            kk = min(k, d1.shape[1])
+            neg, order = jax.lax.top_k(-d1, kk)
+            d = -neg
+            i = jnp.take_along_axis(ids, order, axis=1)
+            i = jnp.where(jnp.isposinf(d), -1, i)
+        pad = min(k, self.ntotal) - d.shape[1]
+        if pad > 0:
+            d = jnp.pad(d, ((0, 0), (0, pad)), constant_values=jnp.inf)
+            i = jnp.pad(i, ((0, 0), (0, pad)), constant_values=-1)
+        return d, i
+
+    def _exhaustive_rerank_topk(self, queries, k: int):
+        """``use_d2=False`` over the ADD-ORDER view of the buffer, so tie
+        resolution matches a flat index over the same vectors."""
+        from repro.index.rerank import exhaustive_topk
+        if self._exhaustive_fn is None:
+            self._exhaustive_fn = jax.jit(
+                functools.partial(exhaustive_topk, self._reconstruct),
+                static_argnames=("k",))
+        codes_add = jnp.take(self._codes, self._pos_dev, axis=0)
+        return self._exhaustive_fn(codes_add, queries,
+                                   k=min(k, self.ntotal))
+
+    # -- persistence ---------------------------------------------------------
+
+    def _tree(self):
+        m = self._codes.shape[1] if self._codes is not None else \
+            self.inner._tree()["codes"].shape[1]
+        return {
+            "inner": self.inner._tree(),
+            "coarse": self.coarse,
+            "codes": self._codes if self._codes is not None
+            else jnp.zeros((0, m), jnp.uint8),
+            "ids": jnp.asarray(self._ids_np, jnp.int32)
+            if self._ids_np is not None else jnp.zeros((0,), jnp.int32),
+            "cells": jnp.asarray(self._cells_np, jnp.int32)
+            if self._cells_np is not None else jnp.zeros((0,), jnp.int32),
+            "norms": self._bias if self._bias is not None
+            else jnp.zeros((0,), jnp.float32),
+        }
+
+    def _metadata(self) -> dict:
+        return {"dim": self.dim, "nlist": self.nlist, "nprobe": self.nprobe,
+                "rerank": self.rerank, "backend": self.backend,
+                "ntotal": self.ntotal,
+                "has_bias": self._bias is not None,
+                "inner_kind": self.inner.kind,
+                "inner_meta": self.inner._metadata()}
+
+    @classmethod
+    def _empty_from_metadata(cls, meta: dict) -> "IVFIndex":
+        inner = base._KINDS[meta["inner_kind"]]._empty_from_metadata(
+            meta["inner_meta"])
+        inner._codes = None                      # codes live on the wrapper
+        index = cls(meta["dim"], inner=inner, nlist=meta["nlist"],
+                    nprobe=meta["nprobe"], rerank=meta["rerank"],
+                    backend=meta["backend"])
+        n = meta["ntotal"]
+        m = inner._tree()["codes"].shape[1]
+        index.coarse = jnp.zeros((meta["nlist"], meta["dim"]), jnp.float32)
+        index._codes = jnp.zeros((n, m), jnp.uint8)
+        index._ids_np = np.zeros(n, np.int32)
+        index._cells_np = np.zeros(n, np.int32)
+        if meta["has_bias"]:
+            index._bias = jnp.zeros((n,), jnp.float32)
+        return index
+
+    def _set_tree(self, tree) -> None:
+        self.inner._set_tree(tree["inner"])
+        self.inner._codes = None
+        self.coarse = tree["coarse"]
+        n = int(tree["codes"].shape[0])
+        self._codes = tree["codes"] if n else None
+        self._bias = tree["norms"] if tree["norms"].shape[0] else None
+        if n:
+            self._ids_np = np.asarray(tree["ids"])
+            self._cells_np = np.asarray(tree["cells"])
+            counts = np.bincount(self._cells_np, minlength=self.nlist)
+            self._offsets = np.concatenate(
+                [[0], np.cumsum(counts)]).astype(np.int64)
+            pos = np.empty(n, np.int32)
+            pos[self._ids_np] = np.arange(n, dtype=np.int32)
+            self._pos_dev = jnp.asarray(pos)
+        else:
+            self.reset()
+        self._invalidate_caches()
+
+    def __repr__(self):
+        return (f"IVFIndex({self.inner!r}, nlist={self.nlist}, "
+                f"nprobe={self.nprobe}, ntotal={self.ntotal}, "
+                f"rerank={self.rerank}, backend={self.backend!r})")

@@ -18,7 +18,21 @@ Placement modes:
     scanned sequentially. The single-device fallback, and what
     ``from_shards`` uses for externally-supplied shard stores.
 
-Both modes are bit-identical to the flat ``Index.search`` stage 1 — the
+Wrapping an ``IVFIndex`` shards BY COARSE CELL: the cell-grouped buffer is
+cut at cell boundaries (balanced by row count), so every inverted list
+lives wholly on one shard and a probed cell touches exactly one shard —
+shards none of the batch's probed cells map to are skipped outright in
+host mode, and in device mode each device's ragged probe plan covers only
+the cells it owns. Cross-shard pools merge with an explicit lexicographic
+(score, global-id) top-L (``candidates.merge_topl``) because cell-grouped
+shards interleave global ids.
+
+``filter_mask`` threads through every mode: host shards see per-shard
+slices of the lowered ±inf bias streams, device shards stream their slice
+of the (Q, N) mask tiles, and IVF shards fold the mask into the probe
+plan's slot bias.
+
+All modes are bit-identical to the equivalent flat ``Index.search`` — the
 per-shard top-L keeps everything the global top-L can contain, and merges
 preserve ``lax.top_k``'s smaller-index tie-break.
 """
@@ -26,10 +40,14 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.index import base
 from repro.index.backend import backend_supports, resolve_scan_backend
-from repro.index.candidates import candidate_generator_for
+from repro.index.candidates import candidate_generator_for, merge_topl
+from repro.index.ivf import IVFIndex
+
+_IMAX = np.iinfo(np.int32).max
 
 
 class ShardedIndex:
@@ -63,6 +81,11 @@ class ShardedIndex:
         inner index carries a bias — dropping it silently would corrupt
         the stage-1 ranking.
         """
+        if isinstance(inner, IVFIndex):
+            raise ValueError(
+                "from_shards does not support IVF indexes — their shards "
+                "are derived from the cell grouping; wrap the IVFIndex "
+                "directly in ShardedIndex instead")
         index = cls(inner, num_shards=len(shards), placement="host")
         index._shards = [jnp.asarray(s) for s in shards]
         index._offsets = list(offsets)
@@ -138,17 +161,37 @@ class ShardedIndex:
                           None if bias is None else bias[lo:hi]))
         return views
 
+    def _ivf_cell_bounds(self) -> list[int]:
+        """Cell boundaries of the by-cell sharding: ``num_shards + 1``
+        monotone cell ids cutting the cell-grouped buffer into row-balanced
+        contiguous cell ranges (a cell never straddles two shards)."""
+        off = self.inner._offsets
+        n = int(off[-1])
+        bounds = [0]
+        for s in range(1, self.num_shards):
+            target = round(s * n / self.num_shards)
+            c = int(np.searchsorted(off, target, side="left"))
+            bounds.append(min(max(c, bounds[-1]), self.inner.nlist))
+        bounds.append(self.inner.nlist)
+        return bounds
+
     # -- search ------------------------------------------------------------
 
-    def stage1_candidates(self, queries, topl: int | None = None):
+    def stage1_candidates(self, queries, topl: int | None = None, *,
+                          filter_mask=None, nprobe: int | None = None):
         """Distributed stage 1: per-shard top-L merged into the global
         candidate pool. Returns (d2 scores, global indices), each
-        (Q, min(topl, pool width)), closest-first."""
+        (Q, min(topl, pool width)), closest-first. ``nprobe`` only applies
+        to IVF inners (defaults to the index's own)."""
         if topl is None:
             topl = self.inner.rerank
         queries = jnp.asarray(queries)
+        if isinstance(self.inner, IVFIndex):
+            return self._ivf_stage1(queries, topl, filter_mask, nprobe)
         luts = self.inner._build_luts(queries)
         impl = resolve_scan_backend(self.inner.backend)
+        bias, qbias = self.inner._lower_filter(filter_mask,
+                                               queries.shape[0])
 
         if self.resolved_placement == "device":
             if not backend_supports(impl, "streaming_topl"):
@@ -157,35 +200,117 @@ class ShardedIndex:
                     f"scan backend, and {impl!r} does not declare it; use "
                     "placement='host' or a streaming backend (xla/pallas)")
             from repro.parallel.search import device_stage1_topl
-            return device_stage1_topl(self.inner.codes, luts,
-                                      self.inner.bias, topl=topl, impl=impl)
+            return device_stage1_topl(self.inner.codes, luts, bias,
+                                      qbias=qbias, topl=topl, impl=impl)
 
         gen = candidate_generator_for(self.inner.backend)
         all_scores, all_idx = [], []
-        for shard, off, bias in self._shard_views():
-            s, i = gen.topl(shard, luts, bias,
-                            topl=min(topl, shard.shape[0]))
+        for shard, off, shard_bias in self._shard_views():
+            if filter_mask is not None:
+                hi = off + shard.shape[0]
+                # bias is None for per-query masks on bias-less indexes
+                shard_bias = None if bias is None else bias[off:hi]
+                shard_qbias = None if qbias is None else qbias[:, off:hi]
+            else:
+                shard_qbias = None
+            s, i = gen.topl(shard, luts, shard_bias,
+                            topl=min(topl, shard.shape[0]),
+                            qbias=shard_qbias)
             all_scores.append(s)
-            all_idx.append(i + off)
+            # +inf slots (filtered-out pads) keep the _IMAX sentinel: adding
+            # the shard offset would wrap int32 into garbage "global" ids
+            all_idx.append(jnp.where(jnp.isposinf(s), _IMAX, i + off))
         scores = jnp.concatenate(all_scores, axis=1)     # (Q, n_shards*L)
         idx = jnp.concatenate(all_idx, axis=1)
         neg, order = jax.lax.top_k(-scores, min(topl, scores.shape[1]))
         return -neg, jnp.take_along_axis(idx, order, axis=1)
 
-    def search(self, queries, k: int, *, use_rerank: bool | None = None):
+    def _ivf_stage1(self, queries, topl: int, filter_mask,
+                    nprobe: int | None):
+        """By-cell sharded IVF stage 1: each shard owns a contiguous cell
+        range; only shards owning a probed cell are scanned (host mode
+        skips the rest outright, device mode gives them empty plans); the
+        per-shard gathered pools merge lexicographically by
+        (score, global id)."""
+        ivf = self.inner
+        q = queries.shape[0]
+        probe = ivf.probe_cells(queries, nprobe or ivf.nprobe)
+        luts = ivf._build_luts(queries)
+        bounds = self._ivf_cell_bounds()
+        off = ivf._offsets
+
+        if self.resolved_placement == "device":
+            impl = resolve_scan_backend(ivf.backend)
+            if not backend_supports(impl, "streaming_topl"):
+                raise ValueError(
+                    "placement='device' needs a streaming_topl-capable "
+                    f"scan backend, and {impl!r} does not declare it")
+            from repro.parallel.search import device_gather_topl
+            plans = []
+            for s in range(self.num_shards):
+                c_lo, c_hi = bounds[s], bounds[s + 1]
+                row_lo, row_hi = int(off[c_lo]), int(off[c_hi])
+                rows, gids = ivf._probe_plan(probe, cell_range=(c_lo, c_hi),
+                                             row_offset=row_lo)
+                plans.append((row_lo, row_hi, rows, gids))
+            rowbias_fn = lambda rows, gids, sb: ivf._plan_rowbias(  # noqa: E731
+                rows, gids, sb, filter_mask, q)
+            return device_gather_topl(ivf.codes, ivf.bias, plans, luts,
+                                      rowbias_fn, topl=topl, impl=impl)
+
+        gen = candidate_generator_for(ivf.backend)
+        pool_s, pool_i = [], []
+        for s in range(self.num_shards):
+            c_lo, c_hi = bounds[s], bounds[s + 1]
+            row_lo, row_hi = int(off[c_lo]), int(off[c_hi])
+            if row_hi == row_lo:
+                continue
+            rows_np, gids_np = ivf._probe_plan(probe,
+                                               cell_range=(c_lo, c_hi),
+                                               row_offset=row_lo)
+            if (gids_np == _IMAX).all():
+                continue                      # no query probes this shard
+            rows = jnp.asarray(rows_np)
+            gids = jnp.asarray(gids_np)
+            shard_bias = None if ivf.bias is None \
+                else ivf.bias[row_lo:row_hi]
+            rowbias = ivf._plan_rowbias(rows, gids, shard_bias,
+                                        filter_mask, q)
+            s_s, s_i = gen.gather_topl(ivf.codes[row_lo:row_hi], rows,
+                                       gids, luts, rowbias,
+                                       topl=min(topl, rows.shape[1]))
+            pool_s.append(s_s)
+            pool_i.append(s_i)
+        if not pool_s:                        # every probed cell was empty
+            return (jnp.full((q, 1), jnp.inf, jnp.float32),
+                    jnp.full((q, 1), _IMAX, jnp.int32))
+        return merge_topl(jnp.concatenate(pool_s, axis=1),
+                          jnp.concatenate(pool_i, axis=1), topl)
+
+    def search(self, queries, k: int, *, use_rerank: bool | None = None,
+               filter_mask=None, nprobe: int | None = None):
         """Full two-stage sharded search: merged stage-1 candidates, then
         ONE stage-2 rerank over the merged pool through the streaming
         rerank engine (``Index._rerank_topk`` resolves a ``Reranker`` per
         backend — fused table kernel or cross-query dedup; the merged
         pool's cross-query overlap is exactly what dedup exploits). Same
-        (distances, indices) contract as ``Index.search``."""
+        (distances, indices) contract as ``Index.search``, including the
+        ``filter_mask`` semantics."""
         queries = jnp.asarray(queries)
         if use_rerank is None:
             use_rerank = self.inner.rerank > 0
         topl = self.inner.rerank if use_rerank else k
-        d2, cand = self.stage1_candidates(queries, topl=max(topl, k))
+        d2, cand = self.stage1_candidates(queries, topl=max(topl, k),
+                                          filter_mask=filter_mask,
+                                          nprobe=nprobe)
+        if isinstance(self.inner, IVFIndex):
+            return self.inner._finish_pool(queries, d2, cand, k,
+                                           use_rerank=use_rerank)
         if not use_rerank:
-            return d2[:, :k], cand[:, :k]
+            d, i = d2[:, :k], cand[:, :k]
+            if filter_mask is not None:
+                i = jnp.where(jnp.isposinf(d), -1, i)
+            return d, i
         if self._shards is not None and not self._is_contiguous_view():
             raise RuntimeError(
                 "stage-2 rerank in from_shards mode needs the shards to be "
@@ -194,7 +319,8 @@ class ShardedIndex:
         # rerank AFTER the merge (host-side): bit-parity with flat search
         # requires reranking exactly the global top-L pool — a per-shard
         # local rerank would rank a superset and can disagree on top-k
-        return self.inner._rerank_topk(queries, cand, k)
+        valid = jnp.isfinite(d2) if filter_mask is not None else None
+        return self.inner._rerank_topk(queries, cand, k, valid=valid)
 
     def _is_contiguous_view(self) -> bool:
         """True iff the explicit shards tile inner.codes front to back, so

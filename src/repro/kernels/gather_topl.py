@@ -1,0 +1,201 @@
+"""Fused gathered scan + top-L kernels (the IVF stage-1 engine).
+
+IVF search scores a PER-QUERY slot list — the padded ragged batch built by
+concatenating the inverted lists of each query's probed cells — instead of
+the whole database. The flat streaming kernel (``topl_scan.py``) shares
+one (N, M) code block across all queries; here each query block carries
+its OWN gathered code tile, so the one-hot scoring contraction becomes a
+batched (per-query) MXU dot and everything else — the running (block_q, L)
+heap in VMEM, the lexicographic (score, global-id) merge, +inf masking of
+pad slots — is inherited unchanged.
+
+Memory model per grid step (grid = (Q/block_q, W/block_w), w innermost):
+
+  * the (block_q, L) score/id heap lives in the OUTPUT blocks, whose index
+    map ignores the w axis — VMEM-resident across the whole w sweep;
+  * the (block_q, block_w, M) uint8 gathered-code tile, the (block_q,
+    block_w) global-id tile and the (block_q, block_w) slot-bias tile
+    stream HBM->VMEM (the gather itself happens outside the kernel: the
+    gathered batch is Q*W*M BYTES — the d2 score values are what must
+    never materialize at (Q, N) scale);
+  * slots with gid == _IMAX (the ragged pad) score +inf; slots whose bias
+    carries +inf (filtered out) are canonicalized to gid _IMAX, so +inf
+    entries are identical bits across every implementation.
+
+Tie semantics are EXACTLY those of flat search: the merge selects
+lexicographic (score asc, global id asc) minima, so at nprobe == nlist
+(every point listed exactly once) the result is bit-identical to
+``ref.adc_scan_topl_ref`` over the same database — scores AND ids.
+
+The chunked ``lax.scan`` fallback additionally relies on the plan
+CONTRACT (gids ascending within each query row, pads last): every chunk
+slot then has a gid >= every carried heap entry, so ``lax.top_k``'s
+positional tie-break reproduces the ascending-gid tie-break — the same
+argument that makes ``topl_scan.adc_scan_topl_stream_xla`` exact.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_GATHER_BLOCK_W = 512
+DEFAULT_GATHER_BLOCK_Q = 8
+DEFAULT_CHUNK_W = 2048
+
+_IMAX = jnp.iinfo(jnp.int32).max
+
+
+def _adc_gather_topl_kernel(codes_ref, gids_ref, bias_ref, luts_ref,
+                            scores_ref, idx_ref, *, topl: int, block_w: int,
+                            block_q: int, num_books: int, book_size: int):
+    wi = pl.program_id(1)
+
+    @pl.when(wi == 0)
+    def _init():                      # fresh heap at the start of each w sweep
+        scores_ref[...] = jnp.full((block_q, topl), jnp.inf, jnp.float32)
+        idx_ref[...] = jnp.full((block_q, topl), _IMAX, jnp.int32)
+
+    # --- score the gathered tile: per-query one-hot contraction, one
+    # batched MXU dot per codebook — the same per-m partial values (and
+    # the same left-to-right m accumulation) as the flat kernel, so a
+    # slot's score is bit-identical to the same point's flat score ---
+    codes = codes_ref[...].astype(jnp.int32)           # (Bq, Bw, M)
+    luts = luts_ref[...]                               # (Bq, M, K)
+    acc = jnp.zeros((block_q, block_w), jnp.float32)
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (1, 1, book_size), 2)
+    for m in range(num_books):                         # M is static (8 or 16)
+        onehot = (codes[:, :, m:m + 1] == iota_k).astype(jnp.float32)
+        acc = acc + jax.lax.dot_general(
+            luts[:, m, :].astype(jnp.float32), onehot,
+            dimension_numbers=(((1,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+    acc = acc + bias_ref[...]
+
+    # pad slots (gid == _IMAX) score +inf; +inf slots (filtered) get the
+    # canonical _IMAX gid so +inf entries are identical across paths
+    gids = gids_ref[...]
+    acc = jnp.where(gids == _IMAX, jnp.inf, acc)
+    gids = jnp.where(acc == jnp.inf, _IMAX, gids)
+
+    # --- merge tile into the running heap: L lexicographic minima of
+    # [heap | tile] by (score, global id) — identical to topl_scan ---
+    cand_s = jnp.concatenate([scores_ref[...], acc], axis=1)
+    cand_g = jnp.concatenate([idx_ref[...], gids], axis=1)
+
+    def select(l, carry):
+        cs, cg, out_s, out_g = carry
+        best = jnp.min(cs, axis=1)                     # (Bq,)
+        at_best = cs == best[:, None]
+        sel = jnp.min(jnp.where(at_best, cg, _IMAX), axis=1)
+        out_s = jax.lax.dynamic_update_slice(out_s, best[:, None], (0, l))
+        out_g = jax.lax.dynamic_update_slice(out_g, sel[:, None], (0, l))
+        knocked = at_best & (cg == sel[:, None])
+        return (jnp.where(knocked, jnp.inf, cs),
+                jnp.where(knocked, _IMAX, cg), out_s, out_g)
+
+    init = (cand_s, cand_g,
+            jnp.full((block_q, topl), jnp.inf, jnp.float32),
+            jnp.full((block_q, topl), _IMAX, jnp.int32))
+    _, _, out_s, out_g = jax.lax.fori_loop(0, topl, select, init)
+    scores_ref[...] = out_s
+    idx_ref[...] = out_g
+
+
+@functools.partial(jax.jit, static_argnames=("topl", "block_w", "block_q",
+                                             "interpret"))
+def adc_gather_topl_pallas(gathered_codes: jax.Array, gids: jax.Array,
+                           rowbias: jax.Array, luts: jax.Array, *, topl: int,
+                           block_w: int = DEFAULT_GATHER_BLOCK_W,
+                           block_q: int = DEFAULT_GATHER_BLOCK_Q,
+                           interpret: bool = False):
+    """Fused gathered scan+top-L over per-query slot lists.
+
+    gathered_codes: (Q, W, M) uint8/int32, W % block_w == 0 (ops.py pads).
+    gids:           (Q, W) int32 global ids; _IMAX marks pad slots.
+    rowbias:        (Q, W) float32 additive per-slot term (+inf filters).
+    luts:           (Q, M, K) float32, Q % block_q == 0 (ops.py pads).
+    Returns (scores, ids): ((Q, topl) f32, (Q, topl) i32), sorted by
+    (score asc, global id asc).
+    """
+    q, w, num_books = gathered_codes.shape
+    book_size = luts.shape[-1]
+    assert w % block_w == 0, f"W={w} must be padded to a multiple of {block_w}"
+    assert q % block_q == 0, f"Q={q} must be padded to a multiple of {block_q}"
+    assert 0 < topl <= w, (topl, w)
+    grid = (q // block_q, w // block_w)
+    kernel = functools.partial(
+        _adc_gather_topl_kernel, topl=topl, block_w=block_w, block_q=block_q,
+        num_books=num_books, book_size=book_size)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, block_w, num_books),
+                         lambda qi, wi: (qi, wi, 0)),
+            pl.BlockSpec((block_q, block_w), lambda qi, wi: (qi, wi)),
+            pl.BlockSpec((block_q, block_w), lambda qi, wi: (qi, wi)),
+            pl.BlockSpec((block_q, num_books, book_size),
+                         lambda qi, wi: (qi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, topl), lambda qi, wi: (qi, 0)),
+            pl.BlockSpec((block_q, topl), lambda qi, wi: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, topl), jnp.float32),
+            jax.ShapeDtypeStruct((q, topl), jnp.int32),
+        ],
+        interpret=interpret,
+    )(gathered_codes, gids, rowbias, luts)
+
+
+@functools.partial(jax.jit, static_argnames=("topl", "chunk_w"))
+def adc_gather_topl_stream_xla(codes: jax.Array, rows: jax.Array,
+                               gids: jax.Array, rowbias: jax.Array,
+                               luts: jax.Array, *, topl: int,
+                               chunk_w: int = DEFAULT_CHUNK_W):
+    """XLA fallback with the same streaming semantics: a ``lax.scan`` over
+    (Q, chunk_w) slot chunks carrying the (Q, L) heap. The gather happens
+    per chunk (``codes[rows_chunk]``), so peak gathered memory is
+    O(Q * chunk_w * M) bytes and the (Q, W) score batch never exists.
+
+    Exactness relies on the plan contract (gids ascending per query row,
+    pads last): every chunk slot's gid is >= every carried entry's, so the
+    incremental ``lax.top_k`` positional tie-break IS the ascending-gid
+    tie-break — bit-identical to ``ref.adc_gather_topl_ref``.
+    """
+    q, w = rows.shape
+    num_books = codes.shape[1]
+    pad = (-w) % chunk_w
+    rows_c = jnp.moveaxis(
+        jnp.pad(rows, ((0, 0), (0, pad))).reshape(q, -1, chunk_w), 1, 0)
+    gids_c = jnp.moveaxis(
+        jnp.pad(gids, ((0, 0), (0, pad)), constant_values=_IMAX)
+        .reshape(q, -1, chunk_w), 1, 0)
+    bias_c = jnp.moveaxis(
+        jnp.pad(rowbias, ((0, 0), (0, pad))).reshape(q, -1, chunk_w), 1, 0)
+
+    def step(carry, inp):
+        vals, idx = carry                              # (Q, L) x2
+        rows_i, gids_i, bias_i = inp
+        chunk = jnp.take(codes, rows_i, axis=0).astype(jnp.int32)
+        picked = jnp.take_along_axis(
+            luts[:, None, :, :], chunk[:, :, :, None], axis=3)[..., 0]
+        s = picked[:, :, 0]
+        for m in range(1, num_books):                  # adc_scan_ref chain
+            s = s + picked[:, :, m]
+        s = s + bias_i
+        s = jnp.where(gids_i == _IMAX, jnp.inf, s)
+        g = jnp.where(jnp.isposinf(s), _IMAX, gids_i)
+        cand_s = jnp.concatenate([vals, s], axis=1)
+        cand_g = jnp.concatenate([idx, g], axis=1)
+        neg, pos = jax.lax.top_k(-cand_s, topl)
+        return (-neg, jnp.take_along_axis(cand_g, pos, axis=1)), None
+
+    init = (jnp.full((q, topl), jnp.inf, jnp.float32),
+            jnp.full((q, topl), _IMAX, jnp.int32))
+    (vals, idx), _ = jax.lax.scan(step, init, (rows_c, gids_c, bias_c))
+    return vals, idx

@@ -25,6 +25,11 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.adc_scan import (adc_scan_pallas, adc_scan_batch_pallas,
                                     DEFAULT_BLOCK_N, DEFAULT_BLOCK_Q)
+from repro.kernels.gather_topl import (adc_gather_topl_pallas,
+                                       adc_gather_topl_stream_xla,
+                                       DEFAULT_CHUNK_W,
+                                       DEFAULT_GATHER_BLOCK_Q,
+                                       DEFAULT_GATHER_BLOCK_W)
 from repro.kernels.rerank_dist import (rerank_gather_dist_pallas,
                                        rerank_gather_dist_chunked_xla,
                                        DEFAULT_RERANK_BLOCK_L,
@@ -105,7 +110,8 @@ def adc_scan_batch(codes: jax.Array, luts: jax.Array, *, impl: str = "pallas",
 
 
 def adc_scan_topl(codes: jax.Array, luts: jax.Array, *, topl: int,
-                  bias: jax.Array | None = None, impl: str = "pallas",
+                  bias: jax.Array | None = None,
+                  qbias: jax.Array | None = None, impl: str = "pallas",
                   block_n: int = DEFAULT_TOPL_BLOCK_N,
                   block_q: int = DEFAULT_TOPL_BLOCK_Q,
                   chunk_n: int = DEFAULT_CHUNK_N):
@@ -124,7 +130,10 @@ def adc_scan_topl(codes: jax.Array, luts: jax.Array, *, topl: int,
 
     Both paths mask the internal N-padding rows to +inf so a pad entry can
     never surface as a candidate. ``bias`` carries per-point terms that do
-    not fit the LUT decomposition (RVQ's stored ||decode(code)||^2).
+    not fit the LUT decomposition (RVQ's stored ||decode(code)||^2);
+    ``qbias`` is the optional (Q, N) per-(query, point) bias stream — the
+    lowering target of the filtered-search API (+inf drops one point for
+    one query) — consumed in tiles/chunks by both paths.
     """
     n = codes.shape[0]
     q = luts.shape[0]
@@ -133,21 +142,86 @@ def adc_scan_topl(codes: jax.Array, luts: jax.Array, *, topl: int,
         bias = jnp.zeros((n,), jnp.float32)
     if impl == "xla":
         return adc_scan_topl_stream_xla(
-            codes, luts, bias, topl=topl, n_valid=n,
+            codes, luts, bias, qbias, topl=topl, n_valid=n,
             chunk_n=min(chunk_n, max(topl, -(-n // 8))))
     if impl == "pallas":
         bq = min(block_q, max(8, -(-q // 8) * 8))
         padded_codes, _ = _pad_to(codes, block_n, axis=0)
         padded_luts, _ = _pad_to(luts.astype(jnp.float32), bq, axis=0)
         padded_bias, _ = _pad_to(bias.astype(jnp.float32), block_n, axis=0)
+        padded_qbias = None
+        if qbias is not None:
+            padded_qbias, _ = _pad_to(qbias.astype(jnp.float32), bq, axis=0)
+            padded_qbias, _ = _pad_to(padded_qbias, block_n, axis=1)
         scores, idx = adc_scan_topl_pallas(
-            padded_codes, padded_luts, padded_bias, topl=topl, n_valid=n,
-            block_n=block_n, block_q=bq, interpret=_interpret())
+            padded_codes, padded_luts, padded_bias, padded_qbias, topl=topl,
+            n_valid=n, block_n=block_n, block_q=bq, interpret=_interpret())
         return scores[:q], idx[:q]
     raise ValueError(
         f"unknown impl for adc_scan_topl: {impl!r} (streaming top-L has "
         "'pallas' and 'xla' paths; 'onehot' materializes the score matrix "
         "and is routed through the MaterializedTopL generator instead)")
+
+
+def adc_gather_topl(codes: jax.Array, rows: jax.Array, gids: jax.Array,
+                    luts: jax.Array, *, topl: int,
+                    rowbias: jax.Array | None = None, impl: str = "pallas",
+                    block_w: int = DEFAULT_GATHER_BLOCK_W,
+                    block_q: int = DEFAULT_GATHER_BLOCK_Q,
+                    chunk_w: int = DEFAULT_CHUNK_W):
+    """Gathered stage 1 (IVF probing): per-query top-L over per-query slot
+    lists instead of the whole database.
+
+    codes (N, M) code buffer, rows (Q, W) buffer rows to score per query,
+    gids (Q, W) the global id behind each slot (``_IMAX`` marks ragged
+    pads), luts (Q, M, K), optional rowbias (Q, W) additive per-slot
+    stream (gathered RVQ norms, lowered filter masks; +inf drops a slot)
+    -> ((Q, L), (Q, L) int32) with L = min(topl, W), sorted by
+    (score asc, global id asc).
+
+    CONTRACT: gids must be ascending within each query row (pads last) —
+    IVF plan builders sort their probe lists by global id, which is what
+    makes every path bit-identical to ``ref.adc_gather_topl_ref`` AND to
+    flat search at nprobe == nlist (see gather_topl.py).
+
+      impl="pallas"  the fused kernel: gathered uint8 code tiles stream
+                     HBM->VMEM against a VMEM-resident (block_q, L) heap.
+      impl="xla"     chunked ``lax.scan`` gathering O(Q*chunk_w) slots at
+                     a time; the always-available fallback.
+
+    (The materialized 'onehot' formulation routes through
+    ``MaterializedTopL.gather_topl`` instead, scoring the full buffer.)
+    """
+    q, w = rows.shape
+    topl = min(topl, w)
+    if rowbias is None:
+        rowbias = jnp.zeros((q, w), jnp.float32)
+    if impl == "xla":
+        return adc_gather_topl_stream_xla(
+            codes, rows, gids, rowbias.astype(jnp.float32),
+            luts.astype(jnp.float32), topl=topl,
+            chunk_w=min(chunk_w, max(topl, -(-w // 8))))
+    if impl == "pallas":
+        bq = min(block_q, max(8, -(-q // 8) * 8))
+        bw = min(block_w, max(8, -(-w // 8) * 8))
+        gathered = jnp.take(codes, rows, axis=0)           # (Q, W, M) u8
+        gathered, _ = _pad_to(gathered, bq, axis=0)
+        gathered, _ = _pad_to(gathered, bw, axis=1)
+        padded_gids = jnp.pad(
+            gids, ((0, gathered.shape[0] - q), (0, gathered.shape[1] - w)),
+            constant_values=jnp.iinfo(jnp.int32).max)
+        padded_bias = jnp.pad(
+            rowbias.astype(jnp.float32),
+            ((0, gathered.shape[0] - q), (0, gathered.shape[1] - w)))
+        padded_luts, _ = _pad_to(luts.astype(jnp.float32), bq, axis=0)
+        scores, idx = adc_gather_topl_pallas(
+            gathered, padded_gids, padded_bias, padded_luts, topl=topl,
+            block_w=bw, block_q=bq, interpret=_interpret())
+        return scores[:q], idx[:q]
+    raise ValueError(
+        f"unknown impl for adc_gather_topl: {impl!r} (the gathered top-L "
+        "has 'pallas' and 'xla' paths; 'onehot' routes through the "
+        "materialized generator)")
 
 
 def rerank_gather_dist(cand_codes: jax.Array, queries: jax.Array,

@@ -58,6 +58,64 @@ def adc_scan_topl_ref(codes: jax.Array, luts: jax.Array,
     return -neg, idx
 
 
+_IMAX = jnp.iinfo(jnp.int32).max
+
+
+def adc_gather_topl_ref(codes: jax.Array, rows: jax.Array, gids: jax.Array,
+                        luts: jax.Array, rowbias: jax.Array | None,
+                        topl: int):
+    """Materialized oracle for the gathered (IVF-style) scan+top-L.
+
+    Instead of scanning the whole database, each query scans its own
+    PER-QUERY slot list — the padded ragged batch an IVF index builds by
+    concatenating the inverted lists of its probed cells:
+
+      codes   (N, M)  the contiguous code buffer (cell-grouped for IVF);
+      rows    (Q, W)  buffer rows to score for each query (pad slots may
+                      repeat any valid row — they are masked via gids);
+      gids    (Q, W)  the GLOBAL id each slot stands for (what search
+                      returns); ``_IMAX`` marks pad slots, which score
+                      +inf and can never surface as real candidates;
+      rowbias (Q, W)  additive per-slot score term or None: the gathered
+                      per-point bias (RVQ norms) and the lowered
+                      filter-mask stream (+inf = filtered out);
+      luts    (Q, M, K) per-query score tables.
+
+    Per-slot scores use the same left-to-right M chain as ``adc_scan_ref``
+    on the same code row, so a gathered slot is bit-identical to the same
+    point's score in the flat scan — the whole IVF==flat-at-full-probe
+    guarantee reduces to tie handling.
+
+    CONTRACT: within each query row, ``gids`` must be ascending (pads
+    last). Then ``lax.top_k``'s positional tie-break IS the
+    ascending-global-id tie-break of the flat oracle, and the result is
+    bit-identical to flat search restricted to the listed slots.
+
+    Slots whose score is +inf (pads, filtered) are canonicalized to
+    gid ``_IMAX`` so every implementation returns identical bits even
+    when +inf entries surface (pool smaller than L); the index layer maps
+    them to id -1.
+
+    Returns (scores, gids), each (Q, min(topl, W)), sorted by
+    (score asc, gid asc).
+    """
+    q, w = rows.shape
+    m_idx = jnp.arange(luts.shape[1])[None, None, :]          # (1, 1, M)
+    gathered_codes = jnp.take(codes, rows, axis=0).astype(jnp.int32)
+    picked = jnp.take_along_axis(
+        luts[:, None, :, :],                                  # (Q, 1, M, K)
+        gathered_codes[:, :, :, None], axis=3)[..., 0]        # (Q, W, M)
+    acc = picked[:, :, 0]
+    for m in range(1, luts.shape[1]):                         # adc_scan_ref
+        acc = acc + picked[:, :, m]                           # association
+    if rowbias is not None:
+        acc = acc + rowbias
+    acc = jnp.where(gids == _IMAX, jnp.inf, acc)
+    gids = jnp.where(jnp.isposinf(acc), _IMAX, gids)
+    neg, pos = jax.lax.top_k(-acc, min(topl, w))
+    return -neg, jnp.take_along_axis(gids, pos, axis=1)
+
+
 def decode_with_table(codes: jax.Array, table: jax.Array) -> jax.Array:
     """Additive table decode: ``recon = sum_m table[m, codes[..., m]]``.
 

@@ -43,9 +43,14 @@ DEFAULT_CHUNK_N = 4096
 _IMAX = jnp.iinfo(jnp.int32).max
 
 
-def _adc_scan_topl_kernel(codes_ref, luts_ref, bias_ref, scores_ref, idx_ref,
-                          *, topl: int, block_n: int, block_q: int,
-                          num_books: int, book_size: int, n_valid: int):
+def _adc_scan_topl_kernel(codes_ref, luts_ref, bias_ref, *refs,
+                          topl: int, block_n: int, block_q: int,
+                          num_books: int, book_size: int, n_valid: int,
+                          has_qbias: bool):
+    if has_qbias:
+        qbias_ref, scores_ref, idx_ref = refs
+    else:
+        qbias_ref, (scores_ref, idx_ref) = None, refs
     ni = pl.program_id(1)
 
     @pl.when(ni == 0)
@@ -66,6 +71,10 @@ def _adc_scan_topl_kernel(codes_ref, luts_ref, bias_ref, scores_ref, idx_ref,
             dimension_numbers=(((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)
     acc = acc + bias_ref[...][None, :]
+    if has_qbias:
+        # the per-query bias stream: lowered filter masks (0 = keep,
+        # +inf = drop) and any other per-(query, point) additive term
+        acc = acc + qbias_ref[...]
 
     # global ids of this block; pad rows (>= n_valid) masked to +inf score
     gids = ni * block_n + jax.lax.broadcasted_iota(
@@ -101,7 +110,8 @@ def _adc_scan_topl_kernel(codes_ref, luts_ref, bias_ref, scores_ref, idx_ref,
 @functools.partial(jax.jit, static_argnames=("topl", "n_valid", "block_n",
                                              "block_q", "interpret"))
 def adc_scan_topl_pallas(codes: jax.Array, luts: jax.Array, bias: jax.Array,
-                         *, topl: int, n_valid: int,
+                         qbias: jax.Array | None = None, *, topl: int,
+                         n_valid: int,
                          block_n: int = DEFAULT_TOPL_BLOCK_N,
                          block_q: int = DEFAULT_TOPL_BLOCK_Q,
                          interpret: bool = False):
@@ -111,6 +121,10 @@ def adc_scan_topl_pallas(codes: jax.Array, luts: jax.Array, bias: jax.Array,
            past ``n_valid`` are the pad and are masked out).
     luts:  (Q, M, K) float32, Q % block_q == 0 (ops.py pads).
     bias:  (N,) float32 per-point additive score term (zeros when unused).
+    qbias: optional (Q, N) float32 per-(query, point) additive stream —
+           the lowering target of the filtered-search API (+inf drops a
+           point for one query). Streamed in (block_q, block_n) tiles, so
+           the filter rides the fused path with no extra peak memory.
     Returns (scores, indices): ((Q, topl) f32, (Q, topl) i32), sorted by
     (score asc, index asc) — bit-identical to ``lax.top_k`` over the full
     score matrix.
@@ -123,16 +137,23 @@ def adc_scan_topl_pallas(codes: jax.Array, luts: jax.Array, bias: jax.Array,
     grid = (q // block_q, n // block_n)
     kernel = functools.partial(
         _adc_scan_topl_kernel, topl=topl, block_n=block_n, block_q=block_q,
-        num_books=num_books, book_size=book_size, n_valid=n_valid)
+        num_books=num_books, book_size=book_size, n_valid=n_valid,
+        has_qbias=qbias is not None)
+    in_specs = [
+        pl.BlockSpec((block_n, num_books), lambda qi, ni: (ni, 0)),
+        pl.BlockSpec((block_q, num_books, book_size),
+                     lambda qi, ni: (qi, 0, 0)),
+        pl.BlockSpec((block_n,), lambda qi, ni: (ni,)),
+    ]
+    operands = [codes, luts, bias]
+    if qbias is not None:
+        in_specs.append(pl.BlockSpec((block_q, block_n),
+                                     lambda qi, ni: (qi, ni)))
+        operands.append(qbias)
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_n, num_books), lambda qi, ni: (ni, 0)),
-            pl.BlockSpec((block_q, num_books, book_size),
-                         lambda qi, ni: (qi, 0, 0)),
-            pl.BlockSpec((block_n,), lambda qi, ni: (ni,)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((block_q, topl), lambda qi, ni: (qi, 0)),
             pl.BlockSpec((block_q, topl), lambda qi, ni: (qi, 0)),
@@ -142,18 +163,23 @@ def adc_scan_topl_pallas(codes: jax.Array, luts: jax.Array, bias: jax.Array,
             jax.ShapeDtypeStruct((q, topl), jnp.int32),
         ],
         interpret=interpret,
-    )(codes, luts, bias)
+    )(*operands)
 
 
 @functools.partial(jax.jit, static_argnames=("topl", "n_valid", "chunk_n"))
 def adc_scan_topl_stream_xla(codes: jax.Array, luts: jax.Array,
-                             bias: jax.Array, *, topl: int, n_valid: int,
-                             chunk_n: int = DEFAULT_CHUNK_N):
+                             bias: jax.Array,
+                             qbias: jax.Array | None = None, *, topl: int,
+                             n_valid: int, chunk_n: int = DEFAULT_CHUNK_N):
     """XLA fallback with the SAME streaming semantics as the Pallas kernel:
     a ``lax.scan`` over (Q, chunk_n) code chunks carrying the (Q, L) heap,
     merged with an incremental ``lax.top_k``. Peak live memory is
     O(Q * (L + chunk_n)) — the (Q, N) matrix is never built (asserted by
     the HLO peak-memory test).
+
+    ``qbias`` is the optional (Q, N) per-(query, point) bias stream (the
+    lowered filter mask), consumed in (Q, chunk_n) slices alongside the
+    code chunks.
 
     Exactness: the carry is sorted by (score, index) and every chunk entry
     has a larger global index than every carried entry, so ``lax.top_k``'s
@@ -166,11 +192,15 @@ def adc_scan_topl_stream_xla(codes: jax.Array, luts: jax.Array,
     codes_c = jnp.pad(codes, ((0, pad), (0, 0))).reshape(-1, chunk_n, m)
     bias_c = jnp.pad(bias, (0, pad)).reshape(-1, chunk_n)
     starts = (jnp.arange(codes_c.shape[0]) * chunk_n).astype(jnp.int32)
+    qbias_c = None if qbias is None else jnp.moveaxis(
+        jnp.pad(qbias, ((0, 0), (0, pad))).reshape(q, -1, chunk_n), 1, 0)
 
     def step(carry, inp):
         vals, idx = carry                       # (Q, L), (Q, L)
-        chunk, bias_i, start = inp
+        chunk, bias_i, start, qbias_i = inp
         s = ref.adc_scan_batch_ref(chunk, luts) + bias_i[None, :]
+        if qbias_i is not None:
+            s = s + qbias_i
         gids = start + jnp.arange(chunk_n, dtype=jnp.int32)
         s = jnp.where(gids[None, :] < n_valid, s, jnp.inf)
         cand_s = jnp.concatenate([vals, s], axis=1)
@@ -181,5 +211,6 @@ def adc_scan_topl_stream_xla(codes: jax.Array, luts: jax.Array,
 
     init = (jnp.full((q, topl), jnp.inf, jnp.float32),
             jnp.full((q, topl), _IMAX, jnp.int32))
-    (vals, idx), _ = jax.lax.scan(step, init, (codes_c, bias_c, starts))
+    (vals, idx), _ = jax.lax.scan(step, init,
+                                  (codes_c, bias_c, starts, qbias_c))
     return vals, idx

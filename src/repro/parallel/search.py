@@ -22,6 +22,15 @@ therefore reproduces flat-search tie resolution bit-for-bit. Rows added to
 pad the database to a device multiple get a +inf bias, so they can never
 surface (the same -inf-in-the-negated-domain masking the kernel applies to
 its own block padding).
+
+``device_gather_topl`` is the IVF face: shards are CELL ranges of the
+cell-grouped buffer, each device receives only its own ragged probe plan
+(slots of cells it owns — "probes only owning shards" by construction),
+runs the gathered scan+top-L (``ops.adc_gather_topl``), and the
+all-gathered pools merge lexicographically by (score, GLOBAL id) on the
+host — cell-grouped shards interleave global ids, so the device-major
+positional argument above does not apply and the merge is explicit
+(``candidates.merge_topl``).
 """
 from __future__ import annotations
 
@@ -34,35 +43,46 @@ import numpy as np
 from repro.kernels import ops
 from repro.utils import compat
 
+_IMAX = np.iinfo(np.int32).max
+
 
 @functools.lru_cache(maxsize=16)
-def _device_topl_fn(mesh, topl_local: int, shard_rows: int, impl: str):
+def _device_topl_fn(mesh, topl_local: int, shard_rows: int, impl: str,
+                    has_qbias: bool):
     """Compiled per-device scan+top-L + all-gather for one mesh/shape."""
     from jax.sharding import PartitionSpec as P
 
-    def per_device(codes, bias, luts):
-        scores, idx = ops.adc_scan_topl(codes, luts, topl=topl_local,
-                                        bias=bias, impl=impl)
+    def per_device(codes, bias, luts, *qbias):
+        scores, idx = ops.adc_scan_topl(
+            codes, luts, topl=topl_local, bias=bias,
+            qbias=qbias[0] if has_qbias else None, impl=impl)
         offset = jax.lax.axis_index("shard").astype(jnp.int32) * shard_rows
-        idx = idx + offset
+        # +inf slots (device pad rows, filtered-out points) keep the _IMAX
+        # sentinel instead of a wrapped/out-of-range "global" id
+        idx = jnp.where(jnp.isposinf(scores), _IMAX, idx + offset)
         # all-gather of the per-device (L, 2) candidate tuples -> every
         # device (and the host) sees the full (D, Q, L) pool
         return (jax.lax.all_gather(scores, "shard"),
                 jax.lax.all_gather(idx, "shard"))
 
+    in_specs = [P("shard"), P("shard"), P()]
+    if has_qbias:
+        in_specs.append(P(None, "shard"))
     f = compat.shard_map(
         per_device, mesh=mesh,
-        in_specs=(P("shard"), P("shard"), P()),
+        in_specs=tuple(in_specs),
         out_specs=(P(), P()),
         check_vma=False)
     return jax.jit(f)
 
 
 def device_stage1_topl(codes, luts, bias, *, topl: int, impl: str,
-                       devices=None):
+                       qbias=None, devices=None):
     """Sharded stage 1 over ``devices`` (default: all local devices).
 
-    codes (N, M) uint8, luts (Q, M, K) f32, bias None | (N,) ->
+    codes (N, M) uint8, luts (Q, M, K) f32, bias None | (N,),
+    qbias None | (Q, N) per-(query, point) bias stream (the lowered
+    filter mask), sharded along N alongside the codes ->
     (scores, indices), each (Q, min(topl, N)), bit-identical to the flat
     single-device search.
     """
@@ -80,14 +100,97 @@ def device_stage1_topl(codes, luts, bias, *, topl: int, impl: str,
     # program handles the ragged tail shard)
     bias_p = jnp.pad(bias_full.astype(jnp.float32), (0, pad),
                      constant_values=jnp.inf)
+    args = [codes_p, bias_p, luts.astype(jnp.float32)]
+    if qbias is not None:
+        args.append(jnp.pad(qbias.astype(jnp.float32), ((0, 0), (0, pad))))
 
     mesh = jax.sharding.Mesh(np.asarray(devices), ("shard",))
     topl_local = min(topl, shard_rows)
-    fn = _device_topl_fn(mesh, topl_local, shard_rows, impl)
-    s_all, i_all = fn(codes_p, bias_p, luts.astype(jnp.float32))
+    fn = _device_topl_fn(mesh, topl_local, shard_rows, impl,
+                         qbias is not None)
+    s_all, i_all = fn(*args)
 
     # (D, Q, L) -> (Q, D*L) device-major, then one top-L over the pool
     pool_s = jnp.swapaxes(s_all, 0, 1).reshape(q, d * topl_local)
     pool_i = jnp.swapaxes(i_all, 0, 1).reshape(q, d * topl_local)
     neg, order = jax.lax.top_k(-pool_s, topl)
     return -neg, jnp.take_along_axis(pool_i, order, axis=1)
+
+
+@functools.lru_cache(maxsize=16)
+def _device_gather_fn(mesh, topl_local: int, impl: str):
+    """Compiled per-device gathered scan+top-L + all-gather."""
+    from jax.sharding import PartitionSpec as P
+
+    def per_device(codes, rows, gids, rowbias, luts):
+        scores, ids = ops.adc_gather_topl(
+            codes[0], rows[0], gids[0], luts, rowbias=rowbias[0],
+            topl=topl_local, impl=impl)
+        return (jax.lax.all_gather(scores, "shard"),
+                jax.lax.all_gather(ids, "shard"))
+
+    f = compat.shard_map(
+        per_device, mesh=mesh,
+        in_specs=(P("shard"), P("shard"), P("shard"), P("shard"), P()),
+        out_specs=(P(), P()),
+        check_vma=False)
+    return jax.jit(f)
+
+
+def device_gather_topl(codes, bias, plans, luts, rowbias_fn, *, topl: int,
+                       impl: str, devices=None):
+    """Device-resident IVF stage 1: one cell-range shard per device, each
+    probing only the cells it owns.
+
+    codes (N, M) the cell-grouped buffer; bias None | (N,) its per-point
+    stream; plans: per shard ``(row_lo, row_hi, rows, gids)`` — the
+    shard-local ragged probe plan from ``IVFIndex._probe_plan`` (rows
+    already shifted by ``row_lo``); rowbias_fn(rows, gids, shard_bias) ->
+    the (Q, W) slot bias (gathered norms + lowered filter) or None.
+
+    Every shard's buffer slice is padded to a common row count and every
+    plan to a common width, so one SPMD program serves the ragged shards;
+    pad slots carry gid ``_IMAX`` and can never surface. The all-gathered
+    (D, Q, L) pools merge lexicographically by (score, global id) — the
+    exact flat-search tie-break over interleaved id ranges.
+
+    Returns (scores, global ids), each (Q, min(topl, pool width)).
+    """
+    from repro.index.candidates import merge_topl
+
+    devices = list(devices if devices is not None else jax.devices())
+    d = len(devices)
+    if len(plans) != d:
+        raise ValueError(f"{len(plans)} shard plans for {d} devices")
+    q = luts.shape[0]
+    rmax = max(max(hi - lo for lo, hi, _, _ in plans), 1)
+    w = max(max(rows.shape[1] for _, _, rows, _ in plans), 1)
+
+    codes_sh, rows_sh, gids_sh, rb_sh = [], [], [], []
+    for row_lo, row_hi, rows, gids in plans:
+        shard_codes = codes[row_lo:row_hi]
+        shard_codes = jnp.pad(
+            shard_codes, ((0, rmax - shard_codes.shape[0]), (0, 0)))
+        shard_bias = None if bias is None else bias[row_lo:row_hi]
+        rows_j = jnp.asarray(rows)
+        gids_j = jnp.asarray(gids)
+        rb = rowbias_fn(rows_j, gids_j, shard_bias)
+        if rb is None:
+            rb = jnp.zeros(rows_j.shape, jnp.float32)
+        pad_w = w - rows.shape[1]
+        codes_sh.append(shard_codes)
+        rows_sh.append(jnp.pad(rows_j, ((0, 0), (0, pad_w))))
+        gids_sh.append(jnp.pad(gids_j, ((0, 0), (0, pad_w)),
+                               constant_values=_IMAX))
+        rb_sh.append(jnp.pad(rb, ((0, 0), (0, pad_w))))
+
+    mesh = jax.sharding.Mesh(np.asarray(devices), ("shard",))
+    topl_local = min(topl, w)
+    fn = _device_gather_fn(mesh, topl_local, impl)
+    s_all, i_all = fn(jnp.stack(codes_sh), jnp.stack(rows_sh),
+                      jnp.stack(gids_sh), jnp.stack(rb_sh),
+                      luts.astype(jnp.float32))
+
+    pool_s = jnp.swapaxes(s_all, 0, 1).reshape(q, d * topl_local)
+    pool_i = jnp.swapaxes(i_all, 0, 1).reshape(q, d * topl_local)
+    return merge_topl(pool_s, pool_i, topl)

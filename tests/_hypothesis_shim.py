@@ -55,12 +55,14 @@ except ImportError:
 
         def deco(fn):
             @functools.wraps(fn)
-            def wrapper(*args):
-                fn(*args, **{k: s.minimal for k, s in strategies.items()})
+            def wrapper(*args, **kw):
+                # pytest passes fixtures as keywords — forward them
+                fn(*args, **kw,
+                   **{k: s.minimal for k, s in strategies.items()})
                 rng = np.random.default_rng(0)
                 for _ in range(_FALLBACK_EXAMPLES - 1):
-                    fn(*args, **{k: s.sample(rng)
-                                 for k, s in strategies.items()})
+                    fn(*args, **kw, **{k: s.sample(rng)
+                                       for k, s in strategies.items()})
             # hide the strategy params from pytest's fixture resolution
             # (like real @given, the wrapper provides them itself);
             # remaining params (if any) stay visible as fixtures

@@ -7,8 +7,9 @@ import numpy as np
 import pytest
 
 from repro.core.search import recall_at_k
-from repro.index import (Index, OPQIndex, PQIndex, RVQIndex, ShardedIndex,
-                         UNQIndex, index_factory, resolve_scan_backend)
+from repro.index import (Index, IVFIndex, OPQIndex, PQIndex, RVQIndex,
+                         ShardedIndex, UNQIndex, index_factory,
+                         resolve_scan_backend)
 from repro.index.unq_index import build_luts, encode_database
 from repro.kernels import ops, ref
 
@@ -36,9 +37,20 @@ def test_factory_parses_quantizers_and_modifiers():
     idx = index_factory("RVQ4x32", dim=96)
     assert isinstance(idx, RVQIndex)
 
+    idx = index_factory("IVF256,NProbe16,UNQ8x256", dim=96)
+    assert isinstance(idx, IVFIndex) and isinstance(idx.inner, UNQIndex)
+    assert idx.nlist == 256 and idx.nprobe == 16
+    assert idx.rerank == 500        # inherits UNQ's paper default
+
+    idx = index_factory("IVF64,PQ4,Rerank80,Scan(onehot)", dim=96)
+    assert isinstance(idx, IVFIndex) and isinstance(idx.inner, PQIndex)
+    assert idx.nprobe == 8 and idx.rerank == 80
+    assert idx.backend == "onehot" and idx.inner.backend == "onehot"
+
 
 @pytest.mark.parametrize("bad", ["", "Rerank500", "UNQ8x256,PQ4",
-                                 "LSH16", "UNQ8x256,Foo"])
+                                 "LSH16", "UNQ8x256,Foo",
+                                 "IVF64", "NProbe8,PQ4"])
 def test_factory_rejects_malformed_specs(bad):
     with pytest.raises(ValueError):
         index_factory(bad, dim=96)
@@ -126,9 +138,10 @@ def test_train_before_add_is_an_error():
         idx.add(np.zeros((10, 96), np.float32))
 
 
-def test_forced_rerank_without_budget_is_an_error(tiny_dataset):
-    idx = index_factory("PQ4x32", dim=tiny_dataset.dim)   # rerank=0
-    idx.train(tiny_dataset.train, iters=3).add(tiny_dataset.base)
+def test_forced_rerank_without_budget_is_an_error(tiny_dataset,
+                                                  trained_index_factory):
+    idx = trained_index_factory("PQ4x32,Rerank50", iters=4)
+    idx.rerank = 0                    # classic ADC-only IndexPQ behavior
     with pytest.raises(ValueError, match="rerank budget"):
         idx.search(jnp.asarray(tiny_dataset.queries[:5]), 10,
                    use_rerank=True)
@@ -138,19 +151,52 @@ def test_forced_rerank_without_budget_is_an_error(tiny_dataset):
 # save / load roundtrip (checkpoint/manager-backed)
 # ---------------------------------------------------------------------------
 
-def test_save_load_roundtrip_pq_family(tiny_dataset, tmp_path):
+#: every registered index_factory shape (quantizer family x IVF wrapping),
+#: with the train kwargs the session cache uses — the save/load roundtrip
+#: below runs over ALL of them
+REGISTRY_SPECS = [
+    ("PQ4x32,Rerank50", dict(iters=4)),
+    ("OPQ4x32,Rerank50", dict(iters=4)),
+    ("RVQ2x32,Rerank50", dict(iters=4)),
+    ("UNQ8x64,Rerank60", dict(epochs=2, log_every=1000)),
+    ("IVF8,PQ4x32,Rerank50", dict(iters=4)),
+    ("IVF8,NProbe3,RVQ2x32,Rerank50", dict(iters=4)),
+    ("IVF8,UNQ8x64,Rerank60", dict(epochs=2, log_every=1000)),
+]
+
+
+@pytest.mark.parametrize("spec,train_kw",
+                         REGISTRY_SPECS, ids=[s for s, _ in REGISTRY_SPECS])
+def test_save_load_roundtrip_registry(trained_index_factory, tiny_dataset,
+                                      spec, train_kw, tmp_path):
+    """Acceptance satellite: EVERY factory spec — the new IVF prefixes
+    included — roundtrips through save/load with bitwise-equal search
+    results (distances and indices), and IVF wrappers keep their coarse
+    state (nlist/nprobe/cell grouping)."""
+    index = trained_index_factory(spec, **train_kw)
     queries = jnp.asarray(tiny_dataset.queries[:10])
-    for index in _small_pq_family(tiny_dataset):
-        index.train(tiny_dataset.train, iters=3).add(tiny_dataset.base)
-        _, want = index.search(queries, 15)
-        path = tmp_path / type(index).__name__
-        index.save(path)
-        loaded = Index.load(path)
-        assert type(loaded) is type(index)
-        assert loaded.ntotal == index.ntotal
-        assert loaded.rerank == index.rerank
-        _, got = loaded.search(queries, 15)
-        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    want_d, want_i = index.search(queries, 15)
+    index.save(tmp_path / "ckpt")
+    loaded = Index.load(tmp_path / "ckpt")
+    assert type(loaded) is type(index)
+    assert loaded.ntotal == index.ntotal
+    assert loaded.rerank == index.rerank
+    got_d, got_i = loaded.search(queries, 15)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_array_equal(np.asarray(got_d), np.asarray(want_d))
+    if isinstance(index, IVFIndex):
+        assert isinstance(loaded, IVFIndex)
+        assert (loaded.nlist, loaded.nprobe) == (index.nlist, index.nprobe)
+        assert type(loaded.inner) is type(index.inner)
+        np.testing.assert_array_equal(loaded._ids_np, index._ids_np)
+        np.testing.assert_array_equal(loaded._offsets, index._offsets)
+        # a partial probe exercises the restored CSR/coarse state
+        want = index.search(queries, 10, nprobe=2)
+        got = loaded.search(queries, 10, nprobe=2)
+        np.testing.assert_array_equal(np.asarray(got[1]),
+                                      np.asarray(want[1]))
+        np.testing.assert_array_equal(np.asarray(got[0]),
+                                      np.asarray(want[0]))
 
 
 def test_save_load_roundtrip_unq(tiny_unq, tiny_dataset, tmp_path):
@@ -260,12 +306,12 @@ def test_sharded_stage1_matches_flat_oracle(tiny_unq, tiny_dataset):
     np.testing.assert_array_equal(np.asarray(got_s), np.asarray(want_s))
 
 
-def test_sharded_rvq_carries_score_bias(tiny_dataset):
+def test_sharded_rvq_carries_score_bias(tiny_dataset,
+                                        trained_index_factory):
     """Additive quantizers carry a per-point bias (||decode||^2); sharded
     stage 1 must slice it per shard, and from_shards must refuse to drop
     it silently."""
-    index = index_factory("RVQ2x32,Rerank60", dim=tiny_dataset.dim)
-    index.train(tiny_dataset.train, iters=4).add(tiny_dataset.base)
+    index = trained_index_factory("RVQ2x32,Rerank60", iters=4)
     queries = jnp.asarray(tiny_dataset.queries[:15])
     _, flat = index.search(queries, 20)
 
@@ -289,11 +335,11 @@ def test_sharded_rvq_carries_score_bias(tiny_dataset):
     np.testing.assert_array_equal(np.asarray(got2), np.asarray(want2))
 
 
-def test_sharded_pq_backend_pinning(tiny_dataset):
+def test_sharded_pq_backend_pinning(tiny_dataset, trained_index_factory):
     """Sharded search honors the scan-backend registry per inner index."""
-    index = index_factory("PQ4x32,Rerank40,Scan(onehot)",
-                          dim=tiny_dataset.dim)
-    index.train(tiny_dataset.train, iters=3).add(tiny_dataset.base)
+    index = trained_index_factory("PQ4x32,Rerank50", iters=4)
+    index.backend = "onehot"          # as Scan(onehot) would pin it
+    index.rerank = 40
     queries = jnp.asarray(tiny_dataset.queries[:10])
     _, want = index.search(queries, 10)
     index.backend = "xla"
@@ -306,9 +352,9 @@ def test_sharded_pq_backend_pinning(tiny_dataset):
 # subset views
 # ---------------------------------------------------------------------------
 
-def test_subset_view_restricts_results(tiny_dataset):
-    index = index_factory("PQ4x32,Rerank50", dim=tiny_dataset.dim)
-    index.train(tiny_dataset.train, iters=3).add(tiny_dataset.base)
+def test_subset_view_restricts_results(tiny_dataset,
+                                       trained_index_factory):
+    index = trained_index_factory("PQ4x32,Rerank50", iters=4)
     half = index.subset(index.ntotal // 2)
     assert half.ntotal == index.ntotal // 2
     _, got = half.search(jnp.asarray(tiny_dataset.queries[:10]), 10)

@@ -15,23 +15,15 @@ from _hypothesis_shim import given, settings, st
 
 from repro.index import (DedupRerank, TableRerank, VmapRerank,
                          backend_supports, candidate_generator_for,
-                         index_factory, reranker_for)
+                         reranker_for)
 from repro.index.rerank import exhaustive_topk
 from repro.kernels import ops, ref
 from repro.kernels.rerank_dist import rerank_gather_dist_chunked_xla
 
 
-def _case(rng, q, l, m, k, d, tie_heavy):
-    cand = jnp.asarray(rng.integers(0, k, (q, l, m)), jnp.uint8)
-    queries = jnp.asarray(rng.normal(size=(q, d)), jnp.float32)
-    if tie_heavy:
-        # integer-valued tables and queries make d1 collisions ubiquitous:
-        # downstream top-k parity then tests tie RESOLUTION, not just math
-        table = jnp.asarray(rng.integers(-2, 3, (m, k, d)), jnp.float32)
-        queries = jnp.round(queries)
-    else:
-        table = jnp.asarray(rng.normal(size=(m, k, d)), jnp.float32)
-    return cand, queries, table
+# tie-heavy case construction lives in conftest (``rerank_case``):
+# integer tables + rounded queries make d1 collisions ubiquitous, so
+# downstream top-k parity tests tie RESOLUTION, not just math
 
 
 # ---------------------------------------------------------------------------
@@ -43,10 +35,11 @@ def _case(rng, q, l, m, k, d, tie_heavy):
                                    (8, 500, 96),     # paper-ish shape
                                    (1, 1, 8),        # degenerate
                                    (3, 130, 96)])
-def test_rerank_gather_dist_all_impls_bit_exact(q, l, d, tie_heavy):
+def test_rerank_gather_dist_all_impls_bit_exact(rerank_case, q, l, d,
+                                                tie_heavy):
     rng = np.random.default_rng(q * l + d)
-    cand, queries, table = _case(rng, q, l, m=4, k=32, d=d,
-                                 tie_heavy=tie_heavy)
+    cand, queries, table = rerank_case(rng, q, l, m=4, k=32, d=d,
+                                       tie_heavy=tie_heavy)
     want = jax.jit(ref.rerank_gather_dist_ref)(cand, queries, table)
     assert want.shape == (q, l)
     for impl in ("xla", "pallas"):
@@ -87,14 +80,14 @@ def test_duplicate_candidates_across_queries():
     block_l=st.sampled_from([8, 32, 128]),
     seed=st.integers(0, 2**31 - 1),
 )
-def test_rerank_property_parity(l, block_l, seed):
+def test_rerank_property_parity(rerank_case, l, block_l, seed):
     """Property: random shapes/blockings/chunkings — fused kernel
     (interpret mode), chunked xla and the materialized oracle agree
     bit-for-bit on d1."""
     rng = np.random.default_rng(seed)
     q = int(rng.integers(1, 7))
-    cand, queries, table = _case(rng, q, l, m=4, k=16, d=16,
-                                 tie_heavy=bool(rng.integers(0, 2)))
+    cand, queries, table = rerank_case(rng, q, l, m=4, k=16, d=16,
+                                       tie_heavy=bool(rng.integers(0, 2)))
     want = jax.jit(ref.rerank_gather_dist_ref)(cand, queries, table)
     for impl in ("xla", "pallas"):
         got = ops.rerank_gather_dist(cand, queries, table, impl=impl,
@@ -110,9 +103,9 @@ def test_rerank_property_parity(l, block_l, seed):
 
 @pytest.mark.parametrize("spec", ["PQ4x32,Rerank50", "OPQ4x32,Rerank50",
                                   "RVQ2x32,Rerank50"])
-def test_table_rerankers_bit_identical_on_index(tiny_dataset, spec):
-    index = index_factory(spec, dim=tiny_dataset.dim)
-    index.train(tiny_dataset.train, iters=4).add(tiny_dataset.base)
+def test_table_rerankers_bit_identical_on_index(tiny_dataset,
+                                                trained_index_factory, spec):
+    index = trained_index_factory(spec, iters=4)
     queries = jnp.asarray(tiny_dataset.queries[:20])
     luts = index._build_luts(queries)
     _, cand = candidate_generator_for("xla").topl(index.codes, luts,
@@ -167,13 +160,13 @@ def test_dedup_rerank_matches_vmap_oracle(tiny_dataset):
         np.asarray(VmapRerank().distances(index, queries, hot)))
 
 
-def test_exhaustive_rerank_chunked_equals_materialized(tiny_dataset):
+def test_exhaustive_rerank_chunked_equals_materialized(
+        tiny_dataset, trained_index_factory):
     """``use_d2=False`` chunks over N with a running (Q, k) heap — the
     result (distance AND index, ties included) is bit-identical to
     ``lax.top_k`` over the materialized (Q, N) d1 matrix."""
     for spec in ("PQ4x32,Rerank50", "RVQ2x32,Rerank50"):
-        index = index_factory(spec, dim=tiny_dataset.dim)
-        index.train(tiny_dataset.train, iters=4).add(tiny_dataset.base)
+        index = trained_index_factory(spec, iters=4)
         queries = jnp.asarray(tiny_dataset.queries[:15])
         got_d, got_i = index.search(queries, 25, use_d2=False)
         full = jnp.broadcast_to(jnp.arange(index.ntotal),
@@ -253,13 +246,13 @@ def test_exhaustive_rerank_never_materializes_qnd():
 # capability matrix + reranker resolution
 # ---------------------------------------------------------------------------
 
-def test_fused_rerank_capability_and_resolution(tiny_dataset):
+def test_fused_rerank_capability_and_resolution(trained_index_factory):
     assert backend_supports("pallas", "fused_rerank")
     assert not backend_supports("xla", "fused_rerank")
     assert not backend_supports("onehot", "fused_rerank")
 
-    pq = index_factory("PQ4x32,Rerank40", dim=tiny_dataset.dim)
-    pq.train(tiny_dataset.train, iters=3)
+    pq = trained_index_factory("PQ4x32,Rerank50", iters=4)
+    pq.rerank = 40
     pq.backend = "pallas"
     rr = reranker_for(pq)
     assert isinstance(rr, TableRerank) and rr.impl == "pallas"
@@ -274,12 +267,12 @@ def test_fused_rerank_capability_and_resolution(tiny_dataset):
 # satellite: bucket-padded add
 # ---------------------------------------------------------------------------
 
-def test_add_bucket_pads_to_fixed_shapes(tiny_dataset):
+def test_add_bucket_pads_to_fixed_shapes(tiny_dataset,
+                                         trained_index_factory):
     """Differently-sized adds reuse one encoder compilation: every
     ``_encode`` call sees a shape from the bucket ladder, and the codes
     are bit-identical to unpadded encoding (encoders are row-stable)."""
-    index = index_factory("PQ4x32", dim=tiny_dataset.dim)
-    index.train(tiny_dataset.train, iters=3)
+    index = trained_index_factory("PQ4x32,Rerank50", iters=4)
     single = index.with_codes(None)
     single.add(tiny_dataset.base)
 

@@ -17,15 +17,9 @@ from repro.kernels import ops, ref
 from repro.kernels.topl_scan import adc_scan_topl_stream_xla
 
 
-def _case(rng, n, m, k, q, tie_heavy):
-    codes = jnp.asarray(rng.integers(0, k, (n, m)), jnp.uint8)
-    if tie_heavy:
-        # integer-valued tables make d2 collisions ubiquitous: the parity
-        # below is then a test of tie RESOLUTION, not just of score math
-        luts = jnp.asarray(rng.integers(-2, 3, (q, m, k)), jnp.float32)
-    else:
-        luts = jnp.asarray(rng.normal(size=(q, m, k)), jnp.float32)
-    return codes, luts
+# tie-heavy case construction lives in conftest (``scan_case``): integer
+# tables make d2 collisions ubiquitous, so parity tests exercise tie
+# RESOLUTION, not just score math
 
 
 @pytest.mark.parametrize("tie_heavy", [False, True])
@@ -33,9 +27,9 @@ def _case(rng, n, m, k, q, tie_heavy):
                                  (257, 300),     # L > N (clamped to N)
                                  (2048, 64),     # exact block multiple
                                  (1, 1)])        # degenerate
-def test_topl_all_backends_bit_exact(n, L, tie_heavy):
+def test_topl_all_backends_bit_exact(scan_case, n, L, tie_heavy):
     rng = np.random.default_rng(n + L)
-    codes, luts = _case(rng, n, m=8, k=64, q=5, tie_heavy=tie_heavy)
+    codes, luts = scan_case(rng, n, m=8, k=64, q=5, tie_heavy=tie_heavy)
     want_s, want_i = ref.adc_scan_topl_ref(codes, luts, None, L)
     assert want_s.shape == (5, min(L, n))
     for impl in ("xla", "pallas"):
@@ -47,11 +41,11 @@ def test_topl_all_backends_bit_exact(n, L, tie_heavy):
                                       err_msg=impl)
 
 
-def test_topl_bias_flows_through_fused_path():
+def test_topl_bias_flows_through_fused_path(scan_case):
     """Per-point biases (RVQ's ||decode||^2) must flow through both
     streaming paths, not just the materialized one."""
     rng = np.random.default_rng(0)
-    codes, luts = _case(rng, 700, m=4, k=32, q=3, tie_heavy=True)
+    codes, luts = scan_case(rng, 700, m=4, k=32, q=3, tie_heavy=True)
     bias = jnp.asarray(rng.integers(0, 3, (700,)), jnp.float32)
     want_s, want_i = ref.adc_scan_topl_ref(codes, luts, bias, 50)
     for impl in ("xla", "pallas"):
@@ -70,15 +64,15 @@ def test_topl_bias_flows_through_fused_path():
     block_n=st.sampled_from([64, 128, 256]),
     seed=st.integers(0, 2**31 - 1),
 )
-def test_topl_property_parity(n, L, block_n, seed):
+def test_topl_property_parity(scan_case, n, L, block_n, seed):
     """Property: for random shapes/blockings — N not a multiple of the
     block, L > N, tie-heavy tables — the fused kernel (interpret mode),
     the chunked xla fallback, and lax.top_k over the full matrix agree
     bit-for-bit in (score, index)."""
     rng = np.random.default_rng(seed)
     q = int(rng.integers(1, 7))
-    codes, luts = _case(rng, n, m=4, k=16, q=q,
-                        tie_heavy=bool(rng.integers(0, 2)))
+    codes, luts = scan_case(rng, n, m=4, k=16, q=q,
+                            tie_heavy=bool(rng.integers(0, 2)))
     bias = (jnp.asarray(rng.integers(-1, 2, (n,)), jnp.float32)
             if rng.integers(0, 2) else None)
     want_s, want_i = ref.adc_scan_topl_ref(codes, luts, bias, L)
@@ -144,13 +138,34 @@ def test_backend_capability_matrix_and_generator_resolution():
     assert not auto.materializes_scores
 
 
-def test_generators_bit_identical_on_index_data(tiny_dataset):
+def test_qbias_stream_flows_through_every_path(scan_case):
+    """The per-(query, point) bias stream (the lowered filter mask) is
+    bit-exact across the materialized oracle, the chunked xla path and
+    the fused kernel — ±inf entries included."""
+    rng = np.random.default_rng(7)
+    n, q = 900, 5
+    codes, luts = scan_case(rng, n, m=4, k=32, q=q, tie_heavy=True)
+    bias = jnp.asarray(rng.integers(0, 3, (n,)), jnp.float32)
+    qbias = jnp.where(jnp.asarray(rng.integers(0, 3, (q, n))) == 0,
+                      jnp.inf, 0.0)
+    scores = ref.adc_scan_batch_ref(codes, luts) + bias[None, :] + qbias
+    neg, idx = jax.lax.top_k(-scores, 60)
+    want_s, want_i = -neg, idx
+    for impl in ("xla", "pallas"):
+        got_s, got_i = ops.adc_scan_topl(codes, luts, topl=60, bias=bias,
+                                         qbias=qbias, impl=impl,
+                                         block_n=256, chunk_n=192)
+        np.testing.assert_array_equal(np.asarray(got_s), np.asarray(want_s),
+                                      err_msg=impl)
+        np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i),
+                                      err_msg=impl)
+
+
+def test_generators_bit_identical_on_index_data(tiny_dataset,
+                                                trained_index_factory):
     """End-to-end generator interchange on a real trained index (RVQ so the
     per-point bias is exercised): streaming == materialized bit-for-bit."""
-    from repro.index import index_factory
-
-    index = index_factory("RVQ2x32,Rerank60", dim=tiny_dataset.dim)
-    index.train(tiny_dataset.train, iters=4).add(tiny_dataset.base)
+    index = trained_index_factory("RVQ2x32,Rerank60", iters=4)
     luts = index._build_luts(jnp.asarray(tiny_dataset.queries[:25]))
     m_s, m_i = MaterializedTopL("xla").topl(index.codes, luts, index.bias,
                                             topl=60)
@@ -163,14 +178,10 @@ def test_generators_bit_identical_on_index_data(tiny_dataset):
                                       err_msg=impl)
 
 
-def test_index_bias_is_public(tiny_dataset):
+def test_index_bias_is_public(trained_index_factory):
     """Satellite: wrappers read ``Index.bias``, never ``_bias`` (custom
     subclasses only need the public surface)."""
-    from repro.index import index_factory
-
-    pq = index_factory("PQ4x32", dim=tiny_dataset.dim)
-    pq.train(tiny_dataset.train, iters=3).add(tiny_dataset.base)
+    pq = trained_index_factory("PQ4x32,Rerank50", iters=4)
     assert pq.bias is None
-    rvq = index_factory("RVQ2x32", dim=tiny_dataset.dim)
-    rvq.train(tiny_dataset.train, iters=3).add(tiny_dataset.base)
+    rvq = trained_index_factory("RVQ2x32,Rerank60", iters=4)
     assert rvq.bias is not None and rvq.bias.shape == (rvq.ntotal,)
