@@ -1,5 +1,6 @@
 """IVF trajectory benchmark: coarse partitioning vs the flat streaming
-scan — throughput AND recall across the nprobe dial.
+scan — throughput AND recall across the nprobe dial, plain vs residual
+(IVFADC) encoding at a MATCHED code budget.
 
 Writes ``BENCH_ivf.json`` (repo root by default):
 
@@ -10,14 +11,23 @@ Writes ``BENCH_ivf.json`` (repo root by default):
                           average fraction of the database the probe
                           plan actually scans — the work saved) and
                           ``plan_width`` (the padded ragged width W);
+  * ``ivf-res/nprobe=P`` — the SAME nprobe points over a residual
+                          (``Residual`` factory token) index with the
+                          identical quantizer spec — same bytes/vector,
+                          so any recall gap is purely the encoding;
+  * ``residual_study``  — the side-by-side recall@1/@10 deltas
+                          (residual minus plain) per nprobe, plus the
+                          two indexes' mean reconstruction MSE;
   * ``headline``        — qps speedup of the best IVF point that holds
                           recall@10 within 0.02 of flat.
 
 The recall@k here is against the dataset's true nearest neighbor
 (recall@k = fraction of queries whose true NN appears in the top k), the
-paper's Table 2-4 metric. At nprobe == nlist the IVF results are
-bit-identical to flat search (enforced by tests/test_ivf.py); this
-benchmark tracks what the nprobe dial trades away BELOW that point.
+paper's Table 2-4 metric. At nprobe == nlist the plain-IVF results are
+bit-identical to flat search (enforced by tests/test_ivf.py) and the
+residual results are bit-identical to the centroid + decode oracle
+(tests/test_residual.py); this benchmark tracks what the nprobe dial —
+and the encoding choice — trade BELOW full probe.
 
 Run via ``python -m benchmarks.run --only ivf`` (ci.sh records the json
 on every PR alongside the stage-1/stage-2 trajectories).
@@ -49,6 +59,41 @@ def _timed_search(index, queries, k, **kw):
     return got, us
 
 
+def _recon_mse(ivf, base: np.ndarray) -> float:
+    """Mean ||x - recon(x)||^2 over the database (recon includes the
+    centroid in residual mode) — the quantity residual encoding buys."""
+    rows = jnp.take(ivf._pos_dev, jnp.arange(ivf.ntotal))
+    recon = np.asarray(ivf.reconstruct_rows(rows))
+    return float(((recon - base) ** 2).sum(-1).mean())
+
+
+def _probe_stats(ivf, queries, nprobe):
+    lens = np.diff(ivf._offsets)
+    probe = ivf.probe_cells(queries, nprobe)
+    probed = float(np.mean(lens[probe].sum(axis=1)) / ivf.ntotal)
+    rows, _, _ = ivf._probe_plan(probe)
+    return probed, int(rows.shape[1])
+
+
+def _nprobe_sweep(ivf, tag, queries, gt, k, results):
+    nlist = ivf.nlist
+    for nprobe in _NPROBES:
+        nprobe = min(nprobe, nlist)
+        got, us = _timed_search(ivf, queries, k, nprobe=nprobe)
+        rec = recall_at_k(got, gt, ks=(1, 10))
+        probed, width = _probe_stats(ivf, queries, nprobe)
+        results["paths"][f"{tag}/nprobe={nprobe}"] = {
+            "us_per_query": round(us, 1), "qps": round(1e6 / us, 1),
+            "recall@1": round(rec["recall@1"], 4),
+            "recall@10": round(rec["recall@10"], 4),
+            "probed_frac": round(probed, 4),
+            "plan_width": width}
+        common.emit(f"{tag}/nprobe={nprobe}", us,
+                    f"R@1={rec['recall@1']:.3f} "
+                    f"R@10={rec['recall@10']:.3f} "
+                    f"probed={probed * 100:.1f}%")
+
+
 def run(scale: str = "quick", out_path: str | None = None) -> dict:
     s = common.SCALES[scale]
     nlist = _NLIST.get(scale, _NLIST["quick"])
@@ -63,6 +108,9 @@ def run(scale: str = "quick", out_path: str | None = None) -> dict:
     ivf = index_factory(f"IVF{nlist},PQ8x64,Rerank100", dim=ds.dim)
     ivf.train(ds.train, iters=s["kmeans_iters"])
     ivf.add(ds.base)
+    res = index_factory(f"IVF{nlist},Residual,PQ8x64,Rerank100", dim=ds.dim)
+    res.train(ds.train, iters=s["kmeans_iters"])
+    res.add(ds.base)
 
     results = {"n": int(flat.ntotal), "q": int(queries.shape[0]),
                "nlist": nlist, "backend": jax.default_backend(),
@@ -77,30 +125,36 @@ def run(scale: str = "quick", out_path: str | None = None) -> dict:
     common.emit("ivf/flat", us,
                 f"R@1={rec['recall@1']:.3f} R@10={rec['recall@10']:.3f}")
 
-    lens = np.diff(ivf._offsets)
+    _nprobe_sweep(ivf, "ivf", queries, gt, k, results)
+    _nprobe_sweep(res, "ivf-res", queries, gt, k, results)
+
+    # residual-vs-plain at matched code budget: per-nprobe recall deltas
+    study = {"code_bytes_per_vector": int(np.asarray(ivf.codes).shape[1]),
+             "recon_mse_plain": round(_recon_mse(ivf, np.asarray(ds.base)),
+                                      4),
+             "recon_mse_residual": round(_recon_mse(res,
+                                                    np.asarray(ds.base)),
+                                         4),
+             "per_nprobe": {}}
     for nprobe in _NPROBES:
         nprobe = min(nprobe, nlist)
-        got, us = _timed_search(ivf, queries, k, nprobe=nprobe)
-        rec = recall_at_k(got, gt, ks=(1, 10))
-        probe = ivf.probe_cells(queries, nprobe)
-        probed = float(np.mean(lens[probe].sum(axis=1)) / ivf.ntotal)
-        rows, _ = ivf._probe_plan(probe)
-        results["paths"][f"ivf/nprobe={nprobe}"] = {
-            "us_per_query": round(us, 1), "qps": round(1e6 / us, 1),
-            "recall@1": round(rec["recall@1"], 4),
-            "recall@10": round(rec["recall@10"], 4),
-            "probed_frac": round(probed, 4),
-            "plan_width": int(rows.shape[1])}
-        common.emit(f"ivf/nprobe={nprobe}", us,
-                    f"R@1={rec['recall@1']:.3f} "
-                    f"R@10={rec['recall@10']:.3f} "
-                    f"probed={probed * 100:.1f}%")
+        plain_row = results["paths"][f"ivf/nprobe={nprobe}"]
+        res_row = results["paths"][f"ivf-res/nprobe={nprobe}"]
+        study["per_nprobe"][str(nprobe)] = {
+            "recall@1_plain": plain_row["recall@1"],
+            "recall@1_residual": res_row["recall@1"],
+            "recall@1_delta": round(
+                res_row["recall@1"] - plain_row["recall@1"], 4),
+            "recall@10_plain": plain_row["recall@10"],
+            "recall@10_residual": res_row["recall@10"],
+            "recall@10_delta": round(
+                res_row["recall@10"] - plain_row["recall@10"], 4)}
+    results["residual_study"] = study
 
     flat_row = results["paths"]["flat"]
     eligible = {
         name: p for name, p in results["paths"].items()
-        if name.startswith("ivf/")
-        and p["recall@10"] >= flat_row["recall@10"] - 0.02}
+        if "/" in name and p["recall@10"] >= flat_row["recall@10"] - 0.02}
     best = max(eligible, key=lambda n: eligible[n]["qps"], default=None)
     results["headline"] = {
         "best": best,

@@ -32,10 +32,14 @@ import time
 import traceback
 
 #: smoke specs: name -> (factory string, train kwargs). IVF at
-#: nprobe == nlist so backend parity is exact, not probe-dependent.
+#: nprobe == nlist so backend parity is exact, not probe-dependent; the
+#: Residual spec additionally exercises the IVFADC correction streams
+#: (per-row cross bias + per-(query, cell) bias) and the extended-table
+#: residual reranker on every backend.
 SMOKE_SPECS = {
     "PQ8x64,Rerank64": dict(iters=4),
     "IVF32,NProbe32,PQ8x64,Rerank64": dict(iters=4),
+    "IVF32,NProbe32,Residual,PQ8x64,Rerank64": dict(iters=4),
     "UNQ8x64,Rerank64": dict(epochs=2, log_every=1000),
 }
 

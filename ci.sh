@@ -13,8 +13,11 @@ if [ "$(python -c 'import jax; print(jax.default_backend())')" != "tpu" ]; then
   export REPRO_PALLAS_INTERPRET="${REPRO_PALLAS_INTERPRET:-1}"
 fi
 
-echo "== tier-1 tests =="
-python -m pytest -x -q
+echo "== tier-1 tests (docs suite runs in its own gate below) =="
+python -m pytest -x -q --ignore=tests/test_docs.py
+
+echo "== docs gate (snippet tests + dead intra-repo links) =="
+python -m pytest -q tests/test_docs.py
 
 echo "== backend-parity smoke (all scan backends vs xla oracle) =="
 python -m benchmarks.run --smoke
@@ -25,7 +28,7 @@ python -m benchmarks.run --only stage1 --scale quick
 echo "== stage-2 engine trajectory (writes BENCH_stage2.json) =="
 python -m benchmarks.run --only stage2 --scale quick
 
-echo "== IVF trajectory: flat vs nprobe dial (writes BENCH_ivf.json) =="
+echo "== IVF trajectory: nprobe dial + residual study (writes BENCH_ivf.json) =="
 python -m benchmarks.run --only ivf --scale quick
 
 echo "CI OK"

@@ -25,6 +25,52 @@ from repro.data import descriptors as ddata
 from repro import optim
 
 
+# ---------------------------------------------------------------------------
+# Ordered trainer pipeline (the Index.train substrate)
+# ---------------------------------------------------------------------------
+#
+# ``repro.index.base.Index.train`` no longer hardcodes "fit one quantizer":
+# every index declares an ORDERED list of TrainStages and the shared driver
+# runs them front to back, feeding each stage the (possibly transformed)
+# training vectors the previous stage returned. Plain quantizers are a
+# single stage; composite indexes sequence theirs — IVF fits the coarse
+# k-means FIRST and, in residual mode (IVFADC), hands ``x - centroid(x)``
+# to the wrapped quantizer's stage, so codebook capacity is spent on the
+# low-variance residual distribution instead of the raw vectors.
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStage:
+    """One step of an index's ordered training pipeline.
+
+    ``fit(xs, **kw)`` consumes the current training vectors plus the
+    caller's keyword arguments (each stage picks out the ones it knows,
+    swallowing the rest with ``**_``) and either returns ``None`` — the
+    next stage sees the same vectors — or returns a TRANSFORMED array the
+    downstream stages train on instead (IVF's coarse stage returning
+    per-vector residuals is the canonical use).
+    """
+
+    name: str
+    fit: Callable[..., Any]
+
+
+def run_train_pipeline(stages, xs, kw: dict):
+    """Run ``stages`` in order over training vectors ``xs``.
+
+    Stage order is load-bearing, not cosmetic: a stage may transform the
+    vectors every LATER stage sees (and may rely on the model state its
+    predecessors installed — IVF's quantizer stage encodes residuals
+    against the centroids the coarse stage just fit). Returns the vectors
+    the final stage saw, mostly for tests.
+    """
+    for stage in stages:
+        out = stage.fit(xs, **kw)
+        if out is not None:
+            xs = out
+    return xs
+
+
 @dataclasses.dataclass(frozen=True)
 class TrainConfig:
     epochs: int = 10

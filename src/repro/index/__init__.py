@@ -18,7 +18,10 @@ stage-2 reranking resolves the same way to the streaming rerank engine
 (``repro.index.rerank``: fused gather-decode-distance kernel, chunked
 table decode, or cross-query dedup); an ``IVF{nlist}`` factory prefix
 wraps any quantizer in ``IVFIndex`` (coarse k-means cells, ``nprobe``
-probed per query, bit-exact vs flat search at full probe); every
+probed per query, bit-exact vs flat search at full probe) and the
+``Residual`` token turns it into IVFADC (encode ``x - centroid(x)``,
+reconstruct ``centroid + decode(code)``, exact distance correction on
+the bias streams for table quantizers); every
 ``search`` accepts ``filter_mask=`` (±inf bias streams through all
 stage-1 paths); wrap any index in ``ShardedIndex`` for pod-style
 per-device scanning — by coarse cell for IVF inners — with an
@@ -33,11 +36,11 @@ from repro.index.base import Index
 from repro.index.candidates import (CandidateGenerator, MaterializedTopL,
                                     StreamingTopL, candidate_generator_for,
                                     merge_topl)
-from repro.index.factory import index_factory
+from repro.index.factory import FACTORY_GRAMMAR, index_factory
 from repro.index.ivf import IVFIndex
 from repro.index.pq_index import OPQIndex, PQIndex, RVQIndex
-from repro.index.rerank import (DedupRerank, Reranker, TableRerank,
-                                VmapRerank, reranker_for)
+from repro.index.rerank import (DedupRerank, Reranker, ResidualRerank,
+                                TableRerank, VmapRerank, reranker_for)
 from repro.index.sharded import ShardedIndex
 from repro.index.unq_index import UNQIndex
 
@@ -60,8 +63,10 @@ __all__ = [
     "TableRerank",
     "DedupRerank",
     "VmapRerank",
+    "ResidualRerank",
     "reranker_for",
     "index_factory",
+    "FACTORY_GRAMMAR",
     "load_index",
     "available_scan_backends",
     "backend_capabilities",

@@ -123,9 +123,42 @@ class Index(abc.ABC):
 
     # -- quantizer primitives (implementation-specific) --------------------
 
-    @abc.abstractmethod
     def train(self, xs, **kw) -> "Index":
-        """Fit the quantizer on (n, dim) training vectors. Returns self."""
+        """Fit the index on (n, dim) training vectors. Returns self.
+
+        Training is an ORDERED pipeline of ``TrainStage``s
+        (``core.training.run_train_pipeline``): plain quantizers declare
+        the single ``_fit_quantizer`` stage, composite indexes sequence
+        theirs — ``IVFIndex`` fits its coarse k-means first and, in
+        residual mode, hands ``x - centroid(x)`` to the wrapped
+        quantizer's stage. Keyword arguments are shared across the whole
+        pipeline; each stage picks the ones it declares and ignores the
+        rest (so ``train(xs, coarse_iters=5, iters=10)`` configures both
+        IVF stages in one call).
+
+        ``xs`` is handed to the first stage as given — each stage
+        coerces to the array type it needs (UNQ trains host-side from
+        numpy; the shallow quantizers convert to jnp themselves), so a
+        large numpy training set is not round-tripped through the
+        device before training starts.
+        """
+        from repro.core.training import run_train_pipeline
+        run_train_pipeline(self._train_stages(), xs, kw)
+        self._invalidate_caches()
+        return self
+
+    def _train_stages(self):
+        """The ordered ``TrainStage`` list ``train`` runs. Default: the
+        single quantizer-fitting stage."""
+        from repro.core.training import TrainStage
+        return [TrainStage(self.kind, self._fit_quantizer)]
+
+    def _fit_quantizer(self, xs, **kw) -> jax.Array | None:
+        """Fit this index's own quantizer (the default single pipeline
+        stage). Return None, or transformed vectors for later stages."""
+        raise NotImplementedError(
+            f"{type(self).__name__} must implement _fit_quantizer or "
+            "override _train_stages")
 
     @abc.abstractmethod
     def _encode(self, xs) -> jax.Array:

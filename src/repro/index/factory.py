@@ -1,9 +1,11 @@
 """FAISS-style string factory for compressed-domain indexes.
 
     index = index_factory("UNQ8x256,Rerank500", dim=96)
-    index = index_factory("IVF1024,UNQ8x256,Rerank500", dim=96)
+    index = index_factory("IVF1024,Residual,PQ8x256,Rerank500", dim=96)
 
-Grammar — comma-separated components, exactly one quantizer:
+Grammar — comma-separated components, exactly one quantizer (the
+canonical component table is ``FACTORY_GRAMMAR`` below; ``docs/API.md``
+renders it and ``tests/test_docs.py`` keeps the two in sync):
 
   quantizers                         modifiers
   ----------------------------       ---------------------------------
@@ -11,6 +13,9 @@ Grammar — comma-separated components, exactly one quantizer:
   PQ{M}[x{K}]  product quant.                    in front of the scan
   OPQ{M}[x{K}] rotated PQ            NProbe{p}   cells probed per query
   RVQ{M}[x{K}] residual/additive                 (default 8; needs IVF)
+                                     Residual    IVFADC: encode
+                                                 x - centroid(x)
+                                                 (needs IVF)
                                      Rerank{L}   stage-2 budget (d1)
                                      Scan(name)  pin a scan backend
                                                  (xla|onehot|pallas|auto)
@@ -20,7 +25,11 @@ Without ``Rerank``, UNQ keeps its paper default (L=500) and the shallow
 quantizers are ADC-only — the classic FAISS IndexPQ behavior. An ``IVF``
 prefix wraps the quantizer in an ``IVFIndex``: vectors are assigned to
 ``nlist`` k-means cells on ``add`` and only ``nprobe`` cells are scanned
-per query (``nprobe=nlist`` reproduces flat search bit-for-bit).
+per query (``nprobe=nlist`` reproduces flat search bit-for-bit). Adding
+``Residual`` turns the IVF index into the classic IVFADC refinement: the
+quantizer trains on and encodes ``x - centroid(x)``, reconstructions
+become ``centroid + decode(code)``, and search corrects distances
+accordingly (exactly for table-decodable quantizers).
 """
 from __future__ import annotations
 
@@ -40,6 +49,22 @@ _SCAN_RE = re.compile(r"^Scan\((\w+)\)$")
 _QUANTIZERS = {"UNQ": UNQIndex, "PQ": PQIndex, "OPQ": OPQIndex,
                "RVQ": RVQIndex}
 
+#: The canonical factory grammar: one (component, description) row per
+#: token the parser accepts. ``docs/API.md``'s grammar table renders
+#: exactly these components and ``tests/test_docs.py`` asserts the doc
+#: and the parser never drift apart.
+FACTORY_GRAMMAR: tuple[tuple[str, str], ...] = (
+    ("UNQ{M}x{K}", "neural quantizer (the paper); M codebooks, K codewords"),
+    ("PQ{M}[x{K}]", "product quantization (K defaults to 256)"),
+    ("OPQ{M}[x{K}]", "optimized PQ: learned rotation + PQ"),
+    ("RVQ{M}[x{K}]", "residual (additive) vector quantization"),
+    ("IVF{nlist}", "coarse k-means partition in front of the scan"),
+    ("NProbe{p}", "cells probed per query (default 8; requires IVF)"),
+    ("Residual", "IVFADC: encode x - centroid(x) (requires IVF)"),
+    ("Rerank{L}", "stage-2 exact-reconstruction budget (d1)"),
+    ("Scan(name)", "pin a scan backend: xla / onehot / pallas / auto"),
+)
+
 
 def index_factory(spec: str, dim: int, *, backend: str = "auto") -> Index:
     """Build an untrained Index from a factory string (see module doc)."""
@@ -47,6 +72,7 @@ def index_factory(spec: str, dim: int, *, backend: str = "auto") -> Index:
     rerank = None
     nlist = None
     nprobe = None
+    residual = False
     scan = backend
     for comp in spec.split(","):
         comp = comp.strip()
@@ -69,6 +95,9 @@ def index_factory(spec: str, dim: int, *, backend: str = "auto") -> Index:
         if m:
             nprobe = int(m.group(1))
             continue
+        if comp == "Residual":
+            residual = True
+            continue
         m = _RERANK_RE.match(comp)
         if m:
             rerank = int(m.group(1))
@@ -80,11 +109,15 @@ def index_factory(spec: str, dim: int, *, backend: str = "auto") -> Index:
         raise ValueError(
             f"cannot parse component {comp!r} of factory string {spec!r} "
             "(expected UNQ8x256 / PQ8 / OPQ8x256 / RVQ8 / IVF1024 / "
-            "NProbe8 / Rerank500 / Scan(xla))")
+            "NProbe8 / Residual / Rerank500 / Scan(xla))")
     if quant is None:
         raise ValueError(f"no quantizer component in factory string {spec!r}")
     if nprobe is not None and nlist is None:
         raise ValueError(f"NProbe without an IVF component in {spec!r}")
+    if residual and nlist is None:
+        raise ValueError(
+            f"Residual without an IVF component in {spec!r} (residual "
+            "encoding is defined against the coarse centroids)")
 
     cls, num_books, book_size = quant
     kw: dict = {"backend": scan}
@@ -99,4 +132,4 @@ def index_factory(spec: str, dim: int, *, backend: str = "auto") -> Index:
         return inner
     return IVFIndex(dim, inner=inner, nlist=nlist,
                     nprobe=nprobe if nprobe is not None else 8,
-                    rerank=inner.rerank, backend=scan)
+                    rerank=inner.rerank, backend=scan, residual=residual)

@@ -5,16 +5,18 @@ billion-scale regime: DEEP1B-class corpora are never scanned linearly).
 train/add/search/save/load surface and prepends a k-means coarse
 quantizer with ``nlist`` cells:
 
-  * ``train`` fits the wrapped quantizer AND the coarse centroids;
+  * ``train`` runs an ORDERED pipeline (``core.training.TrainStage``):
+    the coarse k-means fits FIRST, then the wrapped quantizer — in
+    residual mode on ``x - centroid(x)`` instead of ``x``;
   * ``add`` encodes as usual, assigns each vector to its nearest
     centroid, and keeps the codes in ONE contiguous cell-grouped buffer
     with CSR offsets (``_offsets[c]:_offsets[c+1]`` is cell c's inverted
     list) — no per-cell Python lists, so the probed cells of a whole
     query batch concatenate into a single padded (Q, W) ragged plan;
   * ``search`` ranks centroids per query, takes the top ``nprobe``
-    cells, builds the ragged plan (slot -> buffer row + global id,
-    sorted by global id, pads marked ``_IMAX``) host-side from the CSR
-    offsets, and hands it to the stage-1 engine's gathered face
+    cells, builds the ragged plan (slot -> buffer row + global id +
+    cell, sorted by global id, pads marked ``_IMAX``) host-side from the
+    CSR offsets, and hands it to the stage-1 engine's gathered face
     (``CandidateGenerator.gather_topl`` -> ``ops.adc_gather_topl``):
     fused Pallas kernel, chunked xla, or the materialized control —
     all bit-identical.
@@ -29,9 +31,37 @@ same plan carries the per-point bias stream (RVQ norms) and the lowered
 ``filter_mask`` (+inf drops a slot), so filtered IVF search composes for
 free.
 
-Stage 2 is unchanged: candidate global ids translate to buffer rows
-through the stored permutation and ride the streaming rerank engine
-(fused table kernel / cross-query dedup) exactly like a flat index.
+Residual encoding (IVFADC, ``residual=True`` / the ``Residual`` factory
+token): vectors are encoded as ``x - centroid(x)``, so codebook capacity
+is spent on the much-lower-variance residual distribution. Every point's
+implied reconstruction becomes ``centroid + decode(code)`` and the d2
+scan needs a distance correction; for table-decodable quantizers it is
+EXACT and rides the existing bias streams, with no kernel changes::
+
+    ||q - (c + d)||^2 = ||q - d||^2          the uncorrected LUT scan
+                      + 2<c, d>              per-ROW cross term: computed
+                                             at add time from the per-cell
+                                             cross-LUT (2 * coarse @ table)
+                                             and folded into the per-point
+                                             ``bias`` stream
+                      + ||c||^2 - 2<q, c>    per-(query, cell) term: the
+                                             coarse-distance matrix already
+                                             computed for probing, gathered
+                                             per plan slot into the
+                                             ``rowbias`` stream
+
+Decoder quantizers (UNQ) have no exact LUT decomposition; their stage-1
+scores stay a proxy (LUTs built from the query residualized against its
+top-1 probed centroid, so the encoder sees residual-scale inputs) and
+stage 2 reranks with the exact ``centroid + decode`` reconstruction
+through ``rerank.ResidualRerank``. Plain (non-residual) indexes take
+exactly the pre-residual code paths — bitwise unchanged.
+
+Stage 2 translates candidate global ids to buffer rows through the stored
+permutation and rides the streaming rerank engine (fused table kernel /
+cross-query dedup) exactly like a flat index; residual indexes resolve a
+``ResidualRerank`` wrapper that reconstructs ``centroid + decode(code)``
+(see ``repro.index.rerank``).
 """
 from __future__ import annotations
 
@@ -64,7 +94,8 @@ class IVFIndex(base.Index):
     kind = "ivf"
 
     def __init__(self, dim: int, *, inner: base.Index, nlist: int,
-                 nprobe: int = 8, rerank: int = 0, backend: str = "auto"):
+                 nprobe: int = 8, rerank: int = 0, backend: str = "auto",
+                 residual: bool = False):
         super().__init__(dim, rerank=rerank, backend=backend)
         if nlist < 1:
             raise ValueError(f"nlist must be >= 1, got {nlist}")
@@ -74,12 +105,18 @@ class IVFIndex(base.Index):
         self.inner = inner
         self.nlist = nlist
         self.nprobe = nprobe
+        self.residual = bool(residual)
         self.coarse: jax.Array | None = None     # (nlist, dim) centroids
         # cell-grouped buffer state (parallel to self._codes / self._bias)
         self._ids_np: np.ndarray | None = None   # (N,) buffer row -> gid
         self._cells_np: np.ndarray | None = None  # (N,) buffer row -> cell
+        self._cells_dev: jax.Array | None = None  # device copy of the above
         self._offsets: np.ndarray | None = None  # (nlist + 1,) CSR
         self._pos_dev: jax.Array | None = None   # (N,) gid -> buffer row
+        # residual-mode caches (dropped by _invalidate_caches)
+        self._crosslut = None                    # (nlist, M, K) cross-LUT
+        self._res_table = None                   # (M+1, K', D) stage-2 table
+        self._res_rerank_fn = None               # jitted residual vmap oracle
 
     # -- delegated quantizer primitives ------------------------------------
 
@@ -87,16 +124,39 @@ class IVFIndex(base.Index):
     def is_trained(self) -> bool:
         return self.inner.is_trained and self.coarse is not None
 
-    def train(self, xs, *, coarse_iters: int = 10, coarse_seed: int = 0,
-              **kw) -> "IVFIndex":
-        """Fit the wrapped quantizer (``**kw`` pass through) and the
-        k-means coarse partition on the same training vectors."""
-        xs = jnp.asarray(xs)
-        self.inner.train(xs, **kw)
+    def _train_stages(self):
+        """The ordered IVF pipeline: coarse k-means MUST finish before the
+        wrapped quantizer trains — in residual mode the coarse stage
+        transforms the training vectors into residuals for it."""
+        from repro.core.training import TrainStage
+        return [TrainStage("coarse", self._fit_coarse),
+                TrainStage(self.inner.kind, self._fit_inner)]
+
+    def _fit_coarse(self, xs, *, coarse_iters: int = 10,
+                    coarse_seed: int = 0, **_):
+        """Fit the k-means coarse partition; in residual mode return
+        ``x - centroid(x)`` for the downstream quantizer stage."""
+        xs = jnp.asarray(xs)        # the coarse fit runs on device anyway
         self.coarse = kmeans(jax.random.PRNGKey(coarse_seed), xs,
                              self.nlist, iters=coarse_iters)
-        self._invalidate_caches()
-        return self
+        if not self.residual:
+            return None
+        cells = jnp.argmin(self._coarse_dists(xs), axis=1)
+        return xs - jnp.take(self.coarse, cells, axis=0)
+
+    def _fit_inner(self, xs, **kw):
+        """Fit the wrapped quantizer (on residuals when residual mode is
+        on). The coarse stage's own keyword parameters — read off its
+        signature, so the two can never drift — are filtered out;
+        everything else passes through (UNQ treats every leftover kwarg
+        as a TrainConfig field, so leaking one would raise)."""
+        import inspect
+        coarse_params = {
+            name for name, p in
+            inspect.signature(self._fit_coarse).parameters.items()
+            if p.kind is p.KEYWORD_ONLY}
+        inner_kw = {k: v for k, v in kw.items() if k not in coarse_params}
+        self.inner.train(xs, **inner_kw)
 
     def _encode(self, xs) -> jax.Array:
         self.inner.backend = self.backend       # keep encode impl in sync
@@ -118,30 +178,129 @@ class IVFIndex(base.Index):
         super()._invalidate_caches()
         self.inner._invalidate_caches()
         self._assign_fn = None
+        self._crosslut = None
+        self._res_table = None
+        self._res_rerank_fn = None
+
+    # -- residual machinery --------------------------------------------------
+
+    @property
+    def _exact_residual(self) -> bool:
+        """True when residual mode can apply the EXACT stage-1 distance
+        correction: the wrapped quantizer is table-decodable, so
+        ``||q - (c + d)||^2`` decomposes onto the existing bias streams
+        (see module doc). Decoder quantizers (UNQ) stay a proxy."""
+        return self.residual and self.inner._decode_table() is not None
+
+    def _crosstable(self) -> jax.Array:
+        """(nlist, M, K) per-cell cross-LUT for the residual correction:
+        ``crosslut[c, m, k] = 2 * <coarse[c], table[m, k]>``, so the
+        per-row cross term ``2<c, decode(code)>`` is an M-term chained
+        LUT sum over the row's own code — the same access pattern as the
+        d2 scan itself."""
+        if self._crosslut is None:
+            with jax.ensure_compile_time_eval():
+                table = self.inner._decode_table().astype(jnp.float32)
+                self._crosslut = 2.0 * jnp.einsum(
+                    "mkd,cd->cmk", table, self.coarse.astype(jnp.float32))
+        return self._crosslut
+
+    def _cross_bias(self, codes, cells) -> jax.Array:
+        """Per-row residual cross term ``2<centroid(row), decode(code)>``
+        (n,) f32, accumulated left-to-right over M like ``adc_scan_ref``
+        so every path shares one association."""
+        lut = self._crosstable()                           # (C, M, K)
+        m_idx = jnp.arange(lut.shape[1])[None, :]          # (1, M)
+        g = lut[jnp.asarray(cells)[:, None], m_idx,
+                codes.astype(jnp.int32)]                   # (n, M)
+        acc = g[:, 0]
+        for m in range(1, lut.shape[1]):
+            acc = acc + g[:, m]
+        return acc
+
+    def _residual_table(self) -> jax.Array:
+        """(M+1, K', D) stage-2 decode table with the coarse centroids
+        appended as an extra face (K' = max(K, nlist), zero-padded).
+        Extending each candidate's code row with its cell id makes the
+        UNCHANGED table rerank engine reconstruct
+        ``decode(code) + centroid`` exactly: the centroid face is the
+        last chained add, bit-identical to adding the centroid to
+        ``ref.decode_with_table`` output.
+
+        The inner-face padding is only free when ``nlist <= K`` —
+        ``reranker_for`` routes ``nlist > K`` residual indexes through
+        the dedup reranker instead, so in practice K' == max(K, nlist)
+        never inflates the resident table on the path that uses it."""
+        if self._res_table is None:
+            with jax.ensure_compile_time_eval():
+                table = self.inner._decode_table().astype(jnp.float32)
+                m, k, d = table.shape
+                kk = max(k, self.nlist)
+                faces = jnp.zeros((m + 1, kk, d), jnp.float32)
+                faces = faces.at[:m, :k, :].set(table)
+                faces = faces.at[m, :self.nlist, :].set(
+                    self.coarse.astype(jnp.float32))
+                self._res_table = faces
+        return self._res_table
+
+    def reconstruct_rows(self, rows) -> jax.Array:
+        """(n,) buffer rows -> (n, dim) implied reconstructions:
+        ``decode(code)`` plus, in residual mode, the row's coarse
+        centroid — the materialized oracle the residual search paths are
+        validated against."""
+        rows = jnp.asarray(rows, jnp.int32)
+        recon = self._reconstruct(jnp.take(self._codes, rows, axis=0))
+        if self.residual:
+            cells = jnp.take(self._cells_dev, rows)
+            recon = recon + jnp.take(self.coarse, cells, axis=0)
+        return recon
 
     # -- cell-grouped database ---------------------------------------------
 
     def _coarse_dists(self, xs):
         """(n, dim) -> (n, nlist) squared distances up to a per-row
-        constant (||x||^2 dropped: rankings are all we use)."""
+        constant (||x||^2 dropped: rankings are all we use — and the
+        dropped term is per-QUERY, so the same matrix doubles as the
+        residual correction's per-(query, cell) bias)."""
         if getattr(self, "_assign_fn", None) is None:
             self._assign_fn = jax.jit(
                 lambda x, c: jnp.sum(c * c, axis=1)[None, :]
                 - 2.0 * x @ c.T)
         return self._assign_fn(xs, self.coarse)
 
+    def _probe_with_dists(self, queries, nprobe: int):
+        """Clamped per-query top-``nprobe`` probe PLUS the coarse-distance
+        matrix it was ranked by — the single implementation behind
+        ``probe_cells``, ``search`` and the sharded IVF stage 1 (the
+        matrix doubles as the residual correction's per-(query, cell)
+        bias, so callers never recompute it)."""
+        cd = self._coarse_dists(jnp.asarray(queries))
+        nprobe = max(1, min(int(nprobe), self.nlist))
+        _, cells = jax.lax.top_k(-cd, nprobe)
+        return np.asarray(cells), cd
+
     def probe_cells(self, queries, nprobe: int) -> np.ndarray:
         """Per-query top-``nprobe`` coarse cells, (Q, nprobe) int32
         (closest centroid first)."""
-        nprobe = max(1, min(int(nprobe), self.nlist))
-        _, cells = jax.lax.top_k(-self._coarse_dists(jnp.asarray(queries)),
-                                 nprobe)
-        return np.asarray(cells)
+        return self._probe_with_dists(queries, nprobe)[0]
+
+    def _stage1_luts(self, queries, probe: np.ndarray) -> jax.Array:
+        """Per-query stage-1 score tables. Residual DECODER quantizers
+        (no decode table, so no exact correction) residualize the query
+        against its top-1 probed centroid first, keeping the encoder on
+        residual-scale inputs; every other configuration scores raw
+        queries (residual table quantizers correct through the bias
+        streams instead)."""
+        if self.residual and self.inner._decode_table() is None:
+            anchor = jnp.take(self.coarse, jnp.asarray(probe[:, 0]), axis=0)
+            return self._build_luts(queries - anchor)
+        return self._build_luts(queries)
 
     def reset(self) -> None:
         super().reset()
         self._ids_np = None
         self._cells_np = None
+        self._cells_dev = None
         self._offsets = None
         self._pos_dev = None
 
@@ -159,17 +318,29 @@ class IVFIndex(base.Index):
         """Encode, assign to coarse cells, and regroup the contiguous
         buffer (stable by cell) so every inverted list stays one CSR
         slice. Global ids are assignment order, exactly like a flat
-        ``add`` — searches return them, not buffer positions."""
+        ``add`` — searches return them, not buffer positions.
+
+        Residual mode encodes ``x - centroid(x)`` (assignment happens
+        first) and, for table-decodable quantizers, folds the per-row
+        cross term ``2<c, decode(code)>`` into the per-point bias stream
+        alongside any quantizer-native bias (RVQ norms)."""
         if not self.is_trained:
             raise RuntimeError(f"{type(self).__name__}.add before train()")
         xs = jnp.asarray(xs)
         n = xs.shape[0]
+        cells_dev = jnp.argmin(self._coarse_dists(xs), axis=1).astype(
+            jnp.int32)
+        cells = np.asarray(cells_dev, np.int32)
+        enc_in = xs - jnp.take(self.coarse, cells_dev, axis=0) \
+            if self.residual else xs
         bucket = self._encode_bucket(n)
-        xp = jnp.pad(xs, ((0, bucket - n), (0, 0))) if bucket != n else xs
+        xp = jnp.pad(enc_in, ((0, bucket - n), (0, 0))) if bucket != n \
+            else enc_in
         codes = self._encode(xp)[:n]
         bias = self._encode_bias(codes)
-        cells = np.asarray(jnp.argmin(self._coarse_dists(xs), axis=1),
-                           np.int32)
+        if self._exact_residual:
+            cross = self._cross_bias(codes, cells_dev)
+            bias = cross if bias is None else bias + cross
         old_n = self.ntotal
         ids = np.arange(old_n, old_n + n, dtype=np.int32)
         if self._codes is not None:
@@ -183,6 +354,7 @@ class IVFIndex(base.Index):
         self._codes = jnp.take(codes, order_dev, axis=0)
         self._bias = None if bias is None else jnp.take(bias, order_dev)
         self._cells_np = cells[order]
+        self._cells_dev = jnp.asarray(self._cells_np)
         self._ids_np = ids[order]
         counts = np.bincount(self._cells_np, minlength=self.nlist)
         self._offsets = np.concatenate(
@@ -203,10 +375,11 @@ class IVFIndex(base.Index):
         a shard's owned cells (rows shifted by ``row_offset`` so they
         index the shard-local buffer slice).
 
-        Returns (rows, gids): np.int32 (Q, W) — buffer rows to score and
-        the global id behind each slot, SORTED ascending by gid per query
-        (pads last, gid = _IMAX, row = 0) — the plan contract of
-        ``ops.adc_gather_topl``.
+        Returns (rows, gids, cells): np.int32 (Q, W) each — buffer rows
+        to score, the global id behind each slot, and the slot's coarse
+        cell (the residual correction's bias key), SORTED ascending by
+        gid per query (pads last, gid = _IMAX, row = 0, cell = 0) — the
+        plan contract of ``ops.adc_gather_topl``.
         """
         off = self._offsets
         lens = (off[1:] - off[:-1]).astype(np.int64)
@@ -220,6 +393,7 @@ class IVFIndex(base.Index):
         w = _plan_width(int(max(totals.max(initial=0), 1)))
         rows = np.zeros((q, w), np.int32)
         gids = np.full((q, w), _IMAX, np.int32)
+        cells = np.zeros((q, w), np.int32)
         # flat ragged expansion of every (query, cell) list in one shot:
         # slot -> buffer row via the classic repeat/cumsum trick
         counts = cell_lens.ravel()
@@ -234,21 +408,29 @@ class IVFIndex(base.Index):
                 np.cumsum(totals) - totals, totals)
             rows[qidx, col] = (flat_rows - row_offset).astype(np.int32)
             gids[qidx, col] = self._ids_np[flat_rows]
+            cells[qidx, col] = self._cells_np[flat_rows]
             order = np.argsort(gids, axis=1, kind="stable")
             gids = np.take_along_axis(gids, order, axis=1)
             rows = np.take_along_axis(rows, order, axis=1)
-        return rows, gids
+            cells = np.take_along_axis(cells, order, axis=1)
+        return rows, gids, cells
 
     def _plan_rowbias(self, rows, gids, shard_bias, filter_mask,
-                      num_queries: int):
+                      num_queries: int, slot_cells=None, cell_bias=None):
         """The per-slot additive stream for a plan: the gathered per-point
-        bias (RVQ norms, from the buffer/shard the rows index) with the
-        lowered filter mask (+inf = filtered out, keyed by GLOBAL id).
-        Returns (Q, W) f32 or None when there is nothing to add."""
-        if shard_bias is None and filter_mask is None:
+        bias (RVQ norms, residual cross terms — from the buffer/shard the
+        rows index), plus the residual correction's per-(query, cell)
+        term (``cell_bias`` (Q, nlist) gathered at each slot's cell),
+        with the lowered filter mask applied last (+inf = filtered out,
+        keyed by GLOBAL id). Returns (Q, W) f32 or None when there is
+        nothing to add."""
+        if shard_bias is None and filter_mask is None and cell_bias is None:
             return None
         rowbias = jnp.take(shard_bias, rows) if shard_bias is not None \
             else jnp.zeros(rows.shape, jnp.float32)
+        if cell_bias is not None:
+            rowbias = rowbias + jnp.take_along_axis(
+                jnp.asarray(cell_bias), jnp.asarray(slot_cells), axis=1)
         if filter_mask is not None:
             mask = jnp.asarray(filter_mask, bool)
             safe = jnp.where(gids == _IMAX, 0, gids)
@@ -290,13 +472,16 @@ class IVFIndex(base.Index):
                 raise ValueError(
                     "filter_mask is not supported with use_d2=False")
             return self._exhaustive_rerank_topk(queries, k)
-        probe = self.probe_cells(queries, nprobe or self.nprobe)
-        rows_np, gids_np = self._probe_plan(probe)
+        probe, cd = self._probe_with_dists(queries, nprobe or self.nprobe)
+        rows_np, gids_np, cells_np = self._probe_plan(probe)
         rows = jnp.asarray(rows_np)
         gids = jnp.asarray(gids_np)
-        rowbias = self._plan_rowbias(rows, gids, self._bias, filter_mask,
-                                     queries.shape[0])
-        luts = self._build_luts(queries)
+        exact = self._exact_residual
+        rowbias = self._plan_rowbias(
+            rows, gids, self._bias, filter_mask, queries.shape[0],
+            slot_cells=cells_np if exact else None,
+            cell_bias=cd if exact else None)
+        luts = self._stage1_luts(queries, probe)
         topl = min(self.rerank if use_rerank else k, rows.shape[1])
         gen = candidate_generator_for(self.backend)
         d2, ids = gen.gather_topl(self._codes, rows, gids, luts, rowbias,
@@ -333,14 +518,29 @@ class IVFIndex(base.Index):
 
     def _exhaustive_rerank_topk(self, queries, k: int):
         """``use_d2=False`` over the ADD-ORDER view of the buffer, so tie
-        resolution matches a flat index over the same vectors."""
+        resolution matches a flat index over the same vectors. Residual
+        mode reconstructs ``decode(code) + centroid`` per chunk (the
+        cells ride the scan payload alongside the codes)."""
         from repro.index.rerank import exhaustive_topk
-        if self._exhaustive_fn is None:
-            self._exhaustive_fn = jax.jit(
-                functools.partial(exhaustive_topk, self._reconstruct),
-                static_argnames=("k",))
         codes_add = jnp.take(self._codes, self._pos_dev, axis=0)
-        return self._exhaustive_fn(codes_add, queries,
+        if not self.residual:
+            if self._exhaustive_fn is None:
+                self._exhaustive_fn = jax.jit(
+                    functools.partial(exhaustive_topk, self._reconstruct),
+                    static_argnames=("k",))
+            return self._exhaustive_fn(codes_add, queries,
+                                       k=min(k, self.ntotal))
+        cells_add = jnp.take(self._cells_dev, self._pos_dev)
+        if self._exhaustive_fn is None:
+            def recon(payload):
+                codes, cells = payload
+                return self._reconstruct(codes) + jnp.take(
+                    self.coarse, cells, axis=0)
+
+            self._exhaustive_fn = jax.jit(
+                functools.partial(exhaustive_topk, recon),
+                static_argnames=("k",))
+        return self._exhaustive_fn((codes_add, cells_add), queries,
                                    k=min(k, self.ntotal))
 
     # -- persistence ---------------------------------------------------------
@@ -364,7 +564,7 @@ class IVFIndex(base.Index):
     def _metadata(self) -> dict:
         return {"dim": self.dim, "nlist": self.nlist, "nprobe": self.nprobe,
                 "rerank": self.rerank, "backend": self.backend,
-                "ntotal": self.ntotal,
+                "ntotal": self.ntotal, "residual": self.residual,
                 "has_bias": self._bias is not None,
                 "inner_kind": self.inner.kind,
                 "inner_meta": self.inner._metadata()}
@@ -376,7 +576,8 @@ class IVFIndex(base.Index):
         inner._codes = None                      # codes live on the wrapper
         index = cls(meta["dim"], inner=inner, nlist=meta["nlist"],
                     nprobe=meta["nprobe"], rerank=meta["rerank"],
-                    backend=meta["backend"])
+                    backend=meta["backend"],
+                    residual=meta.get("residual", False))
         n = meta["ntotal"]
         m = inner._tree()["codes"].shape[1]
         index.coarse = jnp.zeros((meta["nlist"], meta["dim"]), jnp.float32)
@@ -397,6 +598,7 @@ class IVFIndex(base.Index):
         if n:
             self._ids_np = np.asarray(tree["ids"])
             self._cells_np = np.asarray(tree["cells"])
+            self._cells_dev = jnp.asarray(self._cells_np)
             counts = np.bincount(self._cells_np, minlength=self.nlist)
             self._offsets = np.concatenate(
                 [[0], np.cumsum(counts)]).astype(np.int64)
@@ -409,5 +611,6 @@ class IVFIndex(base.Index):
 
     def __repr__(self):
         return (f"IVFIndex({self.inner!r}, nlist={self.nlist}, "
-                f"nprobe={self.nprobe}, ntotal={self.ntotal}, "
-                f"rerank={self.rerank}, backend={self.backend!r})")
+                f"nprobe={self.nprobe}, residual={self.residual}, "
+                f"ntotal={self.ntotal}, rerank={self.rerank}, "
+                f"backend={self.backend!r})")

@@ -32,11 +32,9 @@ class PQIndex(base.Index):
     def is_trained(self) -> bool:
         return self.model is not None
 
-    def train(self, xs, *, iters: int = 25, seed: int = 0, **kw) -> "PQIndex":
+    def _fit_quantizer(self, xs, *, iters: int = 25, seed: int = 0, **_):
         self.model = bl.train_pq(jax.random.PRNGKey(seed), jnp.asarray(xs),
                                  self.num_books, self.book_size, iters=iters)
-        self._invalidate_caches()
-        return self
 
     def _encode(self, xs) -> jax.Array:
         return self.model.encode(xs)
@@ -107,14 +105,12 @@ class OPQIndex(PQIndex):
 
     kind = "opq"
 
-    def train(self, xs, *, outer_iters: int = 8, kmeans_iters: int = 10,
-              seed: int = 0, **kw) -> "OPQIndex":
+    def _fit_quantizer(self, xs, *, outer_iters: int = 8,
+                       kmeans_iters: int = 10, seed: int = 0, **_):
         self.model = bl.train_opq(jax.random.PRNGKey(seed), jnp.asarray(xs),
                                   self.num_books, self.book_size,
                                   outer_iters=outer_iters,
                                   kmeans_iters=kmeans_iters)
-        self._invalidate_caches()
-        return self
 
 
 class RVQIndex(base.Index):
@@ -136,11 +132,9 @@ class RVQIndex(base.Index):
     def is_trained(self) -> bool:
         return self.model is not None
 
-    def train(self, xs, *, iters: int = 20, seed: int = 0, **kw) -> "RVQIndex":
+    def _fit_quantizer(self, xs, *, iters: int = 20, seed: int = 0, **_):
         self.model = bl.train_rvq(jax.random.PRNGKey(seed), jnp.asarray(xs),
                                   self.num_books, self.book_size, iters=iters)
-        self._invalidate_caches()
-        return self
 
     def _encode(self, xs) -> jax.Array:
         return self.model.encode(jnp.asarray(xs))

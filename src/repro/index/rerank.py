@@ -25,11 +25,17 @@ stage 1 resolves a ``CandidateGenerator``:
                      materializing (Q, L, D). Kept as the A/B oracle and
                      used by backends without streaming capabilities
                      (onehot).
+  * ``ResidualRerank`` wraps any of the three for residual IVF indexes
+                     (IVFADC): candidates reconstruct as
+                     ``centroid + decode(code)`` — an extra centroid face
+                     on the decode table for the table engine, centroid
+                     adds on the deduped unique rows for decoder
+                     quantizers.
 
-All three produce bit-identical d1 (and therefore identical final
-(distance, index) rankings) — verified by tests/test_rerank.py — so
-reranker selection is purely a memory/performance decision, never a
-quality one.
+All paths produce bit-identical d1 (and therefore identical final
+(distance, index) rankings) — verified by tests/test_rerank.py and
+tests/test_residual.py — so reranker selection is purely a
+memory/performance decision, never a quality one.
 
 ``exhaustive_rerank_topk`` is the ``use_d2=False`` ablation re-shaped the
 same way: a ``lax.scan`` over database chunks, each decoded ONCE for all
@@ -144,14 +150,22 @@ class DedupRerank(Reranker):
     of batch composition for batch > 1), so gathered unique rows are
     bit-identical to the per-query decode — d1 matches ``VmapRerank``
     bit-for-bit.
+
+    ``add_centroid=True`` is the residual-IVF variant (resolved through
+    ``ResidualRerank``): dedup runs over unique BUFFER ROWS — a row pins
+    both its code and its coarse cell — and each unique reconstruction
+    gains its row's centroid, so d1 is computed against
+    ``decode(code) + centroid`` exactly.
     """
 
     materializes_recon = False
 
     def __init__(self, decode_chunk: int = DEDUP_DECODE_CHUNK,
-                 dist_chunk: int = DEDUP_DIST_CHUNK):
+                 dist_chunk: int = DEDUP_DIST_CHUNK,
+                 add_centroid: bool = False):
         self.decode_chunk = decode_chunk
         self.dist_chunk = dist_chunk
+        self.add_centroid = add_centroid
 
     def distances(self, index, queries, cand):
         cand = jnp.asarray(cand)
@@ -163,16 +177,96 @@ class DedupRerank(Reranker):
         while chunk // 2 >= max(uniq.size, 8) and chunk > 8:
             chunk //= 2
         pad = (-uniq.size) % chunk
-        codes_u = jnp.take(index.codes, jnp.asarray(
-            np.pad(uniq, (0, pad)), jnp.int32), axis=0)      # (U_pad, M)
+        rows_u = jnp.asarray(np.pad(uniq, (0, pad)), jnp.int32)
+        codes_u = jnp.take(index.codes, rows_u, axis=0)      # (U_pad, M)
+        cells_u = jnp.take(index._cells_dev, rows_u) \
+            if self.add_centroid else None
         decode = index._chunk_decode_fn()
-        recon_u = jnp.concatenate(
-            [decode(codes_u[s:s + chunk])
-             for s in range(0, codes_u.shape[0], chunk)], axis=0)
+        parts = []
+        for s in range(0, codes_u.shape[0], chunk):
+            r = decode(codes_u[s:s + chunk])
+            if cells_u is not None:
+                r = r + jnp.take(index.coarse, cells_u[s:s + chunk], axis=0)
+            parts.append(r)
+        recon_u = jnp.concatenate(parts, axis=0)
         return _gathered_dist_chunked(
             recon_u, jnp.asarray(queries, jnp.float32),
             jnp.asarray(inv.reshape(q, l), jnp.int32),
             chunk_l=self.dist_chunk)
+
+
+class ResidualRerank(Reranker):
+    """Stage 2 for residual IVF indexes (IVFADC): every candidate's
+    implied reconstruction is ``centroid + decode(code)``, so d1 must be
+    computed against it — the wrapped reranker's ``||q - decode(code)||^2``
+    would rank residual decodes as if they were points.
+
+    Wraps whichever reranker the backend would resolve for the wrapped
+    quantizer and reroutes it:
+
+      * ``TableRerank`` — candidate code rows are EXTENDED with their
+        coarse cell id and scored against the index's residual decode
+        table (``IVFIndex._residual_table``: the inner table plus one
+        centroid face), so the UNCHANGED fused/chunked table engine
+        reconstructs ``decode(code) + centroid`` bit-exactly — the
+        centroid face is simply the last chained add;
+      * ``DedupRerank`` — cross-query dedup over unique buffer rows with
+        ``add_centroid=True`` (a row pins code AND cell);
+      * ``VmapRerank`` — the materialized per-query oracle with the
+        centroid added to each gathered reconstruction (the A/B ground
+        truth of the two above, used by the onehot backend).
+
+    All three produce bit-identical d1 (``decode`` is shared and the
+    centroid add is a single exact fp add per row), extending the
+    engine's "reranker selection is never a quality decision" contract
+    to residual indexes.
+    """
+
+    def __init__(self, inner: Reranker):
+        self.inner = inner
+        self.materializes_recon = inner.materializes_recon
+        if isinstance(inner, DedupRerank):
+            # a residual wrap ALWAYS adds centroids — enforced here so the
+            # natural composition ResidualRerank(DedupRerank()) cannot
+            # silently rank against bare residual decodes
+            inner.add_centroid = True
+
+    def distances(self, index, queries, cand):
+        if isinstance(self.inner, TableRerank) and index.nlist <= 256:
+            # this route only resolves when nlist <= K <= 256 (uint8
+            # codes), so the cell column fits uint8 too — the extended
+            # tensor keeps the table engine's uint8 streaming footprint
+            # (a direct construction with nlist > 256 falls through to
+            # the materialized residual oracle instead of wrapping)
+            cand_codes = jnp.take(index.codes, cand, axis=0)  # (Q, L, M)
+            cand_cells = jnp.take(index._cells_dev,
+                                  cand)[..., None].astype(cand_codes.dtype)
+            codes_ext = jnp.concatenate([cand_codes, cand_cells], axis=-1)
+            return ops.rerank_gather_dist(
+                codes_ext, jnp.asarray(queries, jnp.float32),
+                index._residual_table(), impl=self.inner.impl)
+        if isinstance(self.inner, DedupRerank):
+            return self.inner.distances(index, queries, cand)
+        return self._vmap_residual(index, queries, cand)
+
+    @staticmethod
+    def _vmap_residual(index, queries, cand):
+        """Materialized residual oracle: per-query gather + decode +
+        centroid add + reduce under vmap (cached on the index; dropped by
+        ``_invalidate_caches``)."""
+        if index._res_rerank_fn is None:
+            def _one(codes, cells, coarse, q, c_idx):
+                recon = index._reconstruct(codes[c_idx]) \
+                    + coarse[cells[c_idx]]                   # (L, D)
+                return jnp.sum(jnp.square(recon - q[None, :]), axis=-1)
+
+            index._res_rerank_fn = jax.jit(
+                jax.vmap(_one, in_axes=(None, None, None, 0, 0)))
+        return index._res_rerank_fn(index.codes, index._cells_dev,
+                                    index.coarse, queries, cand)
+
+    def __repr__(self):
+        return f"ResidualRerank({self.inner!r})"
 
 
 def reranker_for(index) -> Reranker:
@@ -183,25 +277,43 @@ def reranker_for(index) -> Reranker:
     and the index is table-decodable, the chunked xla path otherwise for
     tables, cross-query dedup for decoder quantizers. Backends without a
     streaming path (onehot) keep the materialized vmap reference.
+    Residual IVF indexes get their resolved reranker wrapped in
+    ``ResidualRerank`` so candidates reconstruct as centroid + decode.
+    One residual-specific override: the extended-table route pads every
+    decode-table face to max(K, nlist), so when ``nlist > K`` (large IVF
+    over small codebooks) it would inflate the resident table and the
+    per-face contraction work — those indexes rerank through the dedup
+    route instead (bit-identical d1, per the engine contract).
     """
+    residual = bool(getattr(index, "residual", False))
     impl = resolve_scan_backend(index.backend)
+    table = index._decode_table()
     if not backend_supports(impl, "streaming_topl"):
-        return VmapRerank()
-    if index._decode_table() is not None:
-        return TableRerank(
+        inner: Reranker = VmapRerank()
+    elif table is not None and not (residual and
+                                    index.nlist > table.shape[1]):
+        inner = TableRerank(
             "pallas" if backend_supports(impl, "fused_rerank") else "xla")
-    return DedupRerank()
+    else:
+        inner = DedupRerank()
+    return ResidualRerank(inner) if residual else inner
 
 
 # ---------------------------------------------------------------------------
 # use_d2=False: chunked exhaustive rerank over the whole database
 # ---------------------------------------------------------------------------
 
-def exhaustive_topk(reconstruct_fn, codes, queries, *, k: int,
+def exhaustive_topk(reconstruct_fn, payload, queries, *, k: int,
                     chunk_n: int = 2048):
     """Exact-d1 top-k over ALL codes without a (Q, N, D) reconstruction:
-    a ``lax.scan`` over (chunk_n, M) code chunks, each decoded ONCE for
+    a ``lax.scan`` over chunk_n-row payload chunks, each decoded ONCE for
     every query, carrying a (Q, k) heap merged with ``lax.top_k``.
+
+    ``payload`` is whatever ``reconstruct_fn`` needs per point: the
+    (N, M) code matrix for plain quantizers, or any pytree of N-leading
+    arrays — residual IVF threads ``(codes, cells)`` so each chunk can
+    reconstruct ``decode(code) + centroid``. The scan chunks every leaf
+    along the leading axis together.
 
     Tie semantics are exactly ``lax.top_k`` over the full (Q, N) d1
     matrix: the carry is sorted by (distance, index) and every chunk
@@ -211,12 +323,18 @@ def exhaustive_topk(reconstruct_fn, codes, queries, *, k: int,
     Trace-time function: callers jit it (with ``reconstruct_fn`` closed
     over) so the decode+distance fuse per chunk.
     """
-    n, m = codes.shape
+    n = jax.tree_util.tree_leaves(payload)[0].shape[0]
     q = queries.shape[0]
     k = min(k, n)
     pad = (-n) % chunk_n
-    codes_c = jnp.pad(codes, ((0, pad), (0, 0))).reshape(-1, chunk_n, m)
-    starts = (jnp.arange(codes_c.shape[0]) * chunk_n).astype(jnp.int32)
+
+    def chunked(a):
+        a = jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+        return a.reshape((-1, chunk_n) + a.shape[1:])
+
+    payload_c = jax.tree_util.tree_map(chunked, payload)
+    num_chunks = (n + pad) // chunk_n
+    starts = (jnp.arange(num_chunks) * chunk_n).astype(jnp.int32)
 
     def step(carry, inp):
         vals, idx = carry                                    # (Q, k) x2
@@ -234,5 +352,5 @@ def exhaustive_topk(reconstruct_fn, codes, queries, *, k: int,
 
     init = (jnp.full((q, k), jnp.inf, jnp.float32),
             jnp.full((q, k), _IMAX, jnp.int32))
-    (vals, idx), _ = jax.lax.scan(step, init, (codes_c, starts))
+    (vals, idx), _ = jax.lax.scan(step, init, (payload_c, starts))
     return vals, idx

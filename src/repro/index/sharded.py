@@ -234,8 +234,9 @@ class ShardedIndex:
         (score, global id)."""
         ivf = self.inner
         q = queries.shape[0]
-        probe = ivf.probe_cells(queries, nprobe or ivf.nprobe)
-        luts = ivf._build_luts(queries)
+        probe, cd = ivf._probe_with_dists(queries, nprobe or ivf.nprobe)
+        luts = ivf._stage1_luts(queries, probe)
+        cell_bias = cd if ivf._exact_residual else None
         bounds = self._ivf_cell_bounds()
         off = ivf._offsets
 
@@ -250,11 +251,13 @@ class ShardedIndex:
             for s in range(self.num_shards):
                 c_lo, c_hi = bounds[s], bounds[s + 1]
                 row_lo, row_hi = int(off[c_lo]), int(off[c_hi])
-                rows, gids = ivf._probe_plan(probe, cell_range=(c_lo, c_hi),
-                                             row_offset=row_lo)
-                plans.append((row_lo, row_hi, rows, gids))
-            rowbias_fn = lambda rows, gids, sb: ivf._plan_rowbias(  # noqa: E731
-                rows, gids, sb, filter_mask, q)
+                rows, gids, cells = ivf._probe_plan(
+                    probe, cell_range=(c_lo, c_hi), row_offset=row_lo)
+                plans.append((row_lo, row_hi, rows, gids, cells))
+            rowbias_fn = lambda rows, gids, cells, sb: ivf._plan_rowbias(  # noqa: E731
+                rows, gids, sb, filter_mask, q,
+                slot_cells=cells if cell_bias is not None else None,
+                cell_bias=cell_bias)
             return device_gather_topl(ivf.codes, ivf.bias, plans, luts,
                                       rowbias_fn, topl=topl, impl=impl)
 
@@ -265,17 +268,18 @@ class ShardedIndex:
             row_lo, row_hi = int(off[c_lo]), int(off[c_hi])
             if row_hi == row_lo:
                 continue
-            rows_np, gids_np = ivf._probe_plan(probe,
-                                               cell_range=(c_lo, c_hi),
-                                               row_offset=row_lo)
+            rows_np, gids_np, cells_np = ivf._probe_plan(
+                probe, cell_range=(c_lo, c_hi), row_offset=row_lo)
             if (gids_np == _IMAX).all():
                 continue                      # no query probes this shard
             rows = jnp.asarray(rows_np)
             gids = jnp.asarray(gids_np)
             shard_bias = None if ivf.bias is None \
                 else ivf.bias[row_lo:row_hi]
-            rowbias = ivf._plan_rowbias(rows, gids, shard_bias,
-                                        filter_mask, q)
+            rowbias = ivf._plan_rowbias(
+                rows, gids, shard_bias, filter_mask, q,
+                slot_cells=cells_np if cell_bias is not None else None,
+                cell_bias=cell_bias)
             s_s, s_i = gen.gather_topl(ivf.codes[row_lo:row_hi], rows,
                                        gids, luts, rowbias,
                                        topl=min(topl, rows.shape[1]))

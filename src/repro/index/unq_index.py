@@ -73,8 +73,8 @@ class UNQIndex(base.Index):
     def is_trained(self) -> bool:
         return self.params is not None
 
-    def train(self, xs, *, train_cfg=None, callback=None,
-              **overrides) -> "UNQIndex":
+    def _fit_quantizer(self, xs, *, train_cfg=None, callback=None,
+                       **overrides):
         """Fit UNQ on (n, dim) vectors (paper §3.4: QHAdam + One-Cycle,
         L = L1 + alpha*L2 + beta*CV^2). ``overrides`` are TrainConfig
         fields (epochs=..., lr=..., alpha=...)."""
@@ -89,8 +89,6 @@ class UNQIndex(base.Index):
             gt_nn=np.zeros((0,), np.int64), name="index-train")
         self.params, self.state, self.history = training.train_unq(
             ds, self.cfg, tcfg, callback=callback)
-        self._invalidate_caches()
-        return self
 
     def _encode(self, xs) -> jax.Array:
         impl = encode_impl_for(resolve_scan_backend(self.backend))

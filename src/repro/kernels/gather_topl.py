@@ -20,7 +20,12 @@ Memory model per grid step (grid = (Q/block_q, W/block_w), w innermost):
     never materialize at (Q, N) scale);
   * slots with gid == _IMAX (the ragged pad) score +inf; slots whose bias
     carries +inf (filtered out) are canonicalized to gid _IMAX, so +inf
-    entries are identical bits across every implementation.
+    entries are identical bits across every implementation;
+  * the (block_q, block_w) slot-bias tile is ONE pre-composed stream
+    (``ops.adc_gather_topl`` docstring): per-point biases, the residual
+    IVF correction's per-(query, cell) term, and lowered filter masks are
+    summed host-side in a fixed order, so the kernel adds exactly one
+    value per slot and stays bit-identical to the oracle for any mix.
 
 Tie semantics are EXACTLY those of flat search: the merge selects
 lexicographic (score asc, global id asc) minima, so at nprobe == nlist

@@ -175,9 +175,17 @@ def adc_gather_topl(codes: jax.Array, rows: jax.Array, gids: jax.Array,
     codes (N, M) code buffer, rows (Q, W) buffer rows to score per query,
     gids (Q, W) the global id behind each slot (``_IMAX`` marks ragged
     pads), luts (Q, M, K), optional rowbias (Q, W) additive per-slot
-    stream (gathered RVQ norms, lowered filter masks; +inf drops a slot)
-    -> ((Q, L), (Q, L) int32) with L = min(topl, W), sorted by
+    stream -> ((Q, L), (Q, L) int32) with L = min(topl, W), sorted by
     (score asc, global id asc).
+
+    ``rowbias`` is the single additive slot stream every per-slot term
+    composes onto HOST-SIDE before the kernel runs: gathered per-point
+    biases (RVQ norms, residual-IVF cross terms ``2<centroid, decode>``),
+    the residual correction's per-(query, cell) term
+    ``||centroid||^2 - 2<q, centroid>`` gathered at each slot's cell, and
+    the lowered filter mask (+inf drops a slot). Keeping the composition
+    outside the kernel fixes one addition order, which is what makes all
+    paths bit-identical for any mix of streams.
 
     CONTRACT: gids must be ascending within each query row (pads last) —
     IVF plan builders sort their probe lists by global id, which is what

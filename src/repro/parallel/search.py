@@ -143,10 +143,14 @@ def device_gather_topl(codes, bias, plans, luts, rowbias_fn, *, topl: int,
     probing only the cells it owns.
 
     codes (N, M) the cell-grouped buffer; bias None | (N,) its per-point
-    stream; plans: per shard ``(row_lo, row_hi, rows, gids)`` — the
-    shard-local ragged probe plan from ``IVFIndex._probe_plan`` (rows
-    already shifted by ``row_lo``); rowbias_fn(rows, gids, shard_bias) ->
-    the (Q, W) slot bias (gathered norms + lowered filter) or None.
+    stream; plans: per shard ``(row_lo, row_hi, rows, gids, cells)`` —
+    the shard-local ragged probe plan from ``IVFIndex._probe_plan`` (rows
+    already shifted by ``row_lo``; cells are each slot's coarse cell, the
+    residual correction's bias key); rowbias_fn(rows, gids, cells,
+    shard_bias) -> the (Q, W) slot bias (gathered norms/residual cross
+    terms + per-(query, cell) residual correction + lowered filter) or
+    None. The slot bias is composed host-side BEFORE the shard plans ship
+    to devices, so the per-device kernel contract is unchanged.
 
     Every shard's buffer slice is padded to a common row count and every
     plan to a common width, so one SPMD program serves the ragged shards;
@@ -163,18 +167,18 @@ def device_gather_topl(codes, bias, plans, luts, rowbias_fn, *, topl: int,
     if len(plans) != d:
         raise ValueError(f"{len(plans)} shard plans for {d} devices")
     q = luts.shape[0]
-    rmax = max(max(hi - lo for lo, hi, _, _ in plans), 1)
-    w = max(max(rows.shape[1] for _, _, rows, _ in plans), 1)
+    rmax = max(max(hi - lo for lo, hi, *_ in plans), 1)
+    w = max(max(rows.shape[1] for _, _, rows, _, _ in plans), 1)
 
     codes_sh, rows_sh, gids_sh, rb_sh = [], [], [], []
-    for row_lo, row_hi, rows, gids in plans:
+    for row_lo, row_hi, rows, gids, cells in plans:
         shard_codes = codes[row_lo:row_hi]
         shard_codes = jnp.pad(
             shard_codes, ((0, rmax - shard_codes.shape[0]), (0, 0)))
         shard_bias = None if bias is None else bias[row_lo:row_hi]
         rows_j = jnp.asarray(rows)
         gids_j = jnp.asarray(gids)
-        rb = rowbias_fn(rows_j, gids_j, shard_bias)
+        rb = rowbias_fn(rows_j, gids_j, cells, shard_bias)
         if rb is None:
             rb = jnp.zeros(rows_j.shape, jnp.float32)
         pad_w = w - rows.shape[1]

@@ -176,6 +176,18 @@ for nprobe in (3, 16):
     np.testing.assert_array_equal(np.asarray(i_flat), np.asarray(i_dev))
     np.testing.assert_array_equal(np.asarray(d_flat), np.asarray(d_dev))
 
+# residual IVF (IVFADC): the per-(query, cell) correction composes onto
+# each device's slot-bias stream host-side before the plans ship
+res = index_factory("IVF16,Residual,PQ4x32,Rerank60", dim=ds.dim)
+res.train(ds.train, iters=3).add(ds.base)
+shr = ShardedIndex(res, num_shards=8)
+assert shr.resolved_placement == "device"
+for nprobe in (3, 16):
+    d_flat, i_flat = res.search(queries, 15, nprobe=nprobe)
+    d_dev, i_dev = shr.search(queries, 15, nprobe=nprobe)
+    np.testing.assert_array_equal(np.asarray(i_flat), np.asarray(i_dev))
+    np.testing.assert_array_equal(np.asarray(d_flat), np.asarray(d_dev))
+
 # flat index + filter masks through the device path's qbias stream
 flat = index_factory("RVQ2x32,Rerank60", dim=ds.dim)
 flat.train(ds.train, iters=3).add(ds.base)

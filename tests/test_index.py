@@ -162,6 +162,8 @@ REGISTRY_SPECS = [
     ("IVF8,PQ4x32,Rerank50", dict(iters=4)),
     ("IVF8,NProbe3,RVQ2x32,Rerank50", dict(iters=4)),
     ("IVF8,UNQ8x64,Rerank60", dict(epochs=2, log_every=1000)),
+    ("IVF8,Residual,PQ4x32,Rerank50", dict(iters=4)),
+    ("IVF8,NProbe3,Residual,RVQ2x32,Rerank50", dict(iters=4)),
 ]
 
 

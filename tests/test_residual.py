@@ -1,0 +1,418 @@
+"""Residual IVF encoding (IVFADC): the acceptance properties.
+
+  * the trainer pipeline is ordered — coarse k-means first, the wrapped
+    quantizer second, trained on ``x - centroid(x)`` (measured: residual
+    codebooks live at residual scale, far below data scale);
+  * stage-1 d2 scores under the exact correction ARE the distances to
+    the implied ``centroid + decode(code)`` reconstruction (semantic
+    check, fp tolerance), and every streaming path agrees bit-for-bit
+    with the materialized residual oracle (ref scan + the composed bias
+    streams);
+  * on INTEGER data (exact float arithmetic, ubiquitous ties) full
+    search is bit-identical to a brute-force ``centroid + decode``
+    oracle on xla, pallas-interpret AND onehot — ties included;
+  * all residual rerankers (extended-table fused/chunked, dedup+centroid,
+    materialized vmap) produce bit-identical d1;
+  * plain (non-residual) IVF paths are untouched: the residual flag off
+    reproduces the pre-residual behavior (covered by tests/test_ivf.py's
+    full-probe == flat properties, which must keep passing);
+  * by-cell host sharding, filtered search, incremental adds, save/load
+    and ``use_d2=False`` all compose with residual encoding.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import baselines as bl
+from repro.index import IVFIndex, Index, ShardedIndex, index_factory
+from repro.index.rerank import (DedupRerank, ResidualRerank, TableRerank,
+                                VmapRerank, reranker_for)
+from repro.kernels import ref
+
+_IMAX = np.iinfo(np.int32).max
+
+
+# ---------------------------------------------------------------------------
+# training pipeline
+# ---------------------------------------------------------------------------
+
+def test_train_pipeline_order_and_residual_feed(tiny_dataset):
+    """The IVF trainer pipeline runs coarse k-means BEFORE the wrapped
+    quantizer, and in residual mode the quantizer stage sees residuals:
+    its codebooks land at residual scale (far below data scale), while a
+    plain IVF quantizer stays at data scale."""
+    ivf = index_factory("IVF16,Residual,PQ4x32,Rerank50",
+                        dim=tiny_dataset.dim)
+    stages = [s.name for s in ivf._train_stages()]
+    assert stages == ["coarse", "pq"]
+    ivf.train(tiny_dataset.train, iters=4)
+    plain = index_factory("IVF16,PQ4x32,Rerank50", dim=tiny_dataset.dim)
+    plain.train(tiny_dataset.train, iters=4)
+
+    def codebook_scale(index):
+        table = np.asarray(index.inner._decode_table())
+        return float(np.linalg.norm(table.sum(axis=0), axis=-1).mean())
+
+    data_scale = float(np.linalg.norm(tiny_dataset.train, axis=1).mean())
+    assert codebook_scale(ivf) < 0.5 * data_scale
+    assert codebook_scale(plain) > 0.5 * data_scale
+    # the residual flag reaches metadata and repr
+    assert ivf._metadata()["residual"] is True
+    assert "residual=True" in repr(ivf)
+
+
+def test_residual_requires_ivf_and_parses():
+    with pytest.raises(ValueError, match="Residual"):
+        index_factory("Residual,PQ4x32", dim=32)
+    index = index_factory("IVF8,Residual,PQ4x32", dim=32)
+    assert isinstance(index, IVFIndex) and index.residual
+
+
+# ---------------------------------------------------------------------------
+# stage-1 correction: semantic + bitwise-vs-oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", ["IVF8,Residual,PQ4x32,Rerank50",
+                                  "IVF8,Residual,RVQ2x32,Rerank50"])
+def test_stage1_scores_are_recon_distances(trained_index_factory,
+                                           tiny_dataset, spec):
+    """Semantic acceptance: with the exact correction, the d2 score of
+    every surfaced candidate equals ||q - (centroid + decode(code))||^2
+    (RVQ scores carry their usual -||q||^2 per-query offset) up to fp
+    rounding — the correction is a distance, not a heuristic."""
+    ivf = trained_index_factory(spec, iters=4)
+    queries = jnp.asarray(tiny_dataset.queries[:16])
+    d2, ids = ivf.search(queries, 10, nprobe=ivf.nlist, use_rerank=False)
+    d2, ids = np.asarray(d2), np.asarray(ids)
+    rows = np.asarray(jnp.take(ivf._pos_dev, jnp.asarray(ids)))
+    recon = np.asarray(
+        ivf.reconstruct_rows(rows.ravel())).reshape(*ids.shape, ivf.dim)
+    q_np = np.asarray(queries, np.float64)
+    true = ((q_np[:, None, :] - recon.astype(np.float64)) ** 2).sum(-1)
+    if spec.startswith("IVF8,Residual,RVQ"):
+        true = true - (q_np ** 2).sum(-1)[:, None]
+    scale = np.maximum(np.abs(true), 1.0)
+    np.testing.assert_allclose(d2, true, atol=5e-3 * scale.max())
+
+
+@pytest.mark.parametrize("spec", ["IVF8,Residual,PQ4x32,Rerank50",
+                                  "IVF8,Residual,RVQ2x32,Rerank50"])
+def test_stage1_paths_bitwise_vs_residual_oracle(trained_index_factory,
+                                                 tiny_dataset, spec):
+    """Every streaming stage-1 path (chunked xla, fused pallas-interpret)
+    is bit-identical to the materialized residual oracle: the ref gather
+    scan over the same plan with the bias streams composed exactly as
+    ``_plan_rowbias`` composes them (per-row cross term first, then the
+    per-(query, cell) coarse term)."""
+    from repro.kernels import ops
+    ivf = trained_index_factory(spec, iters=4)
+    queries = jnp.asarray(tiny_dataset.queries[:12])
+    cd = ivf._coarse_dists(queries)
+    for nprobe in (2, ivf.nlist):
+        probe = ivf.probe_cells(queries, nprobe)
+        rows_np, gids_np, cells_np = ivf._probe_plan(probe)
+        rows, gids = jnp.asarray(rows_np), jnp.asarray(gids_np)
+        rowbias = ivf._plan_rowbias(rows, gids, ivf.bias, None,
+                                    queries.shape[0],
+                                    slot_cells=cells_np, cell_bias=cd)
+        luts = ivf._build_luts(queries)
+        want = ref.adc_gather_topl_ref(ivf.codes, rows, gids, luts,
+                                       rowbias, 50)
+        for impl in ("xla", "pallas"):
+            got = ops.adc_gather_topl(ivf.codes, rows, gids, luts,
+                                      topl=50, rowbias=rowbias, impl=impl)
+            np.testing.assert_array_equal(
+                np.asarray(got[0]), np.asarray(want[0]),
+                err_msg=f"{impl} nprobe={nprobe} scores")
+            np.testing.assert_array_equal(
+                np.asarray(got[1]), np.asarray(want[1]),
+                err_msg=f"{impl} nprobe={nprobe} ids")
+
+
+# ---------------------------------------------------------------------------
+# integer-exact end-to-end oracle: all three backends, ties included
+# ---------------------------------------------------------------------------
+
+def _integer_residual_ivf(rng, n, dim=16, m=4, k=8, nlist=6, rerank=30):
+    """A hand-built residual PQ/IVF index over INTEGER codebooks,
+    centroids and data: every score and distance is exactly
+    representable, collisions are ubiquitous, so search parity against
+    the brute-force oracle tests tie resolution end to end."""
+    books = jnp.asarray(rng.integers(-2, 3, (m, k, dim // m)), jnp.float32)
+    ivf = index_factory(f"IVF{nlist},Residual,PQ{m}x{k},Rerank{rerank}",
+                        dim=dim)
+    ivf.inner.model = bl.PQModel(books)
+    ivf.coarse = jnp.asarray(rng.integers(-2, 3, (nlist, dim)), jnp.float32)
+    data = rng.integers(-2, 3, (n, dim)).astype(np.float32)
+    ivf.add(data)
+    return ivf, data
+
+
+def test_integer_residual_bit_exact_on_every_backend():
+    """Acceptance: residual IVF search — stage 1 AND rerank, partial and
+    full probe — is bit-identical to a brute-force oracle that
+    materializes ``centroid + decode(code)`` and sorts by
+    (distance, global id), on xla, pallas-interpret AND onehot. Integer
+    data makes float arithmetic exact, so association differences cannot
+    hide and ties are everywhere."""
+    rng = np.random.default_rng(7)
+    ivf, data = _integer_residual_ivf(rng, n=400)
+    queries = jnp.asarray(rng.integers(-2, 3, (12, ivf.dim)), jnp.float32)
+    q_np = np.asarray(queries)
+
+    rows_all = np.asarray(jnp.take(ivf._pos_dev, jnp.arange(ivf.ntotal)))
+    recon = np.asarray(ivf.reconstruct_rows(rows_all))      # add order
+    dist = ((q_np[:, None, :] - recon[None, :, :]) ** 2).sum(-1)
+    cells_add = ivf._cells_np[rows_all]
+    assert (dist == dist.astype(np.float32)).all()          # exact in f32
+
+    for nprobe in (2, ivf.nlist):
+        probe = ivf.probe_cells(queries, nprobe)
+        for k in (10, 25):      # <= the rerank budget: pool width == k
+            want_d, want_i = [], []
+            for qi in range(q_np.shape[0]):
+                elig = np.isin(cells_add, probe[qi])
+                order = sorted(np.flatnonzero(elig),
+                               key=lambda g: (dist[qi, g], g))[:k]
+                dd = [dist[qi, g] for g in order]
+                ii = list(order)
+                while len(dd) < min(k, ivf.ntotal):
+                    dd.append(np.inf)
+                    ii.append(-1)
+                want_d.append(dd)
+                want_i.append(ii)
+            want_d = np.asarray(want_d, np.float32)
+            want_i = np.asarray(want_i, np.int32)
+            for backend in ("xla", "pallas", "onehot"):
+                ivf.backend = backend
+                got_d, got_i = ivf.search(queries, k, nprobe=nprobe)
+                np.testing.assert_array_equal(
+                    np.asarray(got_i), want_i,
+                    err_msg=f"{backend} nprobe={nprobe} k={k} idx")
+                np.testing.assert_array_equal(
+                    np.asarray(got_d), want_d,
+                    err_msg=f"{backend} nprobe={nprobe} k={k} dist")
+                # use_rerank=False: d2 == d1 here (the correction is
+                # exact and arithmetic is integer), same ranking
+                got_d2, got_i2 = ivf.search(queries, k, nprobe=nprobe,
+                                            use_rerank=False)
+                np.testing.assert_array_equal(np.asarray(got_i2), want_i,
+                                              err_msg=f"{backend} no-rr")
+                np.testing.assert_array_equal(np.asarray(got_d2), want_d,
+                                              err_msg=f"{backend} no-rr d")
+
+
+def test_integer_residual_exhaustive_matches_oracle():
+    """use_d2=False over a residual index ranks the whole database by
+    exact ``centroid + decode`` distances (integer-exact, so bitwise)."""
+    rng = np.random.default_rng(8)
+    ivf, _ = _integer_residual_ivf(rng, n=300)
+    queries = jnp.asarray(rng.integers(-2, 3, (8, ivf.dim)), jnp.float32)
+    rows_all = np.asarray(jnp.take(ivf._pos_dev, jnp.arange(ivf.ntotal)))
+    recon = np.asarray(ivf.reconstruct_rows(rows_all))
+    dist = ((np.asarray(queries)[:, None, :] - recon[None, :, :]) ** 2
+            ).sum(-1)
+    neg, idx = jax.lax.top_k(-jnp.asarray(dist, jnp.float32), 15)
+    got_d, got_i = ivf.search(queries, 15, use_d2=False)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(idx))
+    np.testing.assert_array_equal(np.asarray(got_d), np.asarray(-neg))
+
+
+# ---------------------------------------------------------------------------
+# stage 2: all residual rerankers agree bitwise
+# ---------------------------------------------------------------------------
+
+def test_residual_rerankers_bitwise_identical(trained_index_factory,
+                                              tiny_dataset):
+    """The three residual rerank routes — extended-table (fused pallas /
+    chunked xla), dedup+centroid, materialized vmap — produce
+    bit-identical d1 over the same candidate rows."""
+    ivf = trained_index_factory("IVF8,Residual,PQ4x32,Rerank50", iters=4)
+    rng = np.random.default_rng(3)
+    queries = jnp.asarray(tiny_dataset.queries[:9])
+    cand = jnp.asarray(rng.integers(0, ivf.ntotal, (9, 40)), jnp.int32)
+    routes = {
+        "table-xla": ResidualRerank(TableRerank("xla")),
+        "table-pallas": ResidualRerank(TableRerank("pallas")),
+        "dedup": ResidualRerank(DedupRerank(add_centroid=True)),
+        "vmap": ResidualRerank(VmapRerank()),
+    }
+    outs = {name: np.asarray(rr.distances(ivf, queries, cand))
+            for name, rr in routes.items()}
+    for name, got in outs.items():
+        np.testing.assert_array_equal(got, outs["vmap"], err_msg=name)
+
+
+def test_reranker_resolution_wraps_residual(trained_index_factory):
+    res = trained_index_factory("IVF8,Residual,PQ4x32,Rerank50", iters=4)
+    plain = trained_index_factory("IVF8,PQ4x32,Rerank50", iters=4)
+    assert isinstance(reranker_for(res), ResidualRerank)
+    assert not isinstance(reranker_for(plain), ResidualRerank)
+    res.backend = "onehot"
+    rr = reranker_for(res)
+    assert isinstance(rr, ResidualRerank)
+    assert isinstance(rr.inner, VmapRerank)
+    # wrapping a DedupRerank ALWAYS forces the centroid add — the
+    # natural composition cannot silently rank bare residual decodes
+    assert ResidualRerank(DedupRerank()).inner.add_centroid
+
+
+def test_nlist_above_book_size_routes_through_dedup():
+    """When nlist > K the extended decode table would pad every face to
+    nlist; those residual indexes rerank through the dedup route instead
+    (bit-identical d1 — checked against the vmap oracle here)."""
+    rng = np.random.default_rng(11)
+    ivf, _ = _integer_residual_ivf(rng, n=300, nlist=20, k=8)
+    assert ivf.nlist > ivf.inner._decode_table().shape[1]
+    rr = reranker_for(ivf)
+    assert isinstance(rr, ResidualRerank)
+    assert isinstance(rr.inner, DedupRerank) and rr.inner.add_centroid
+    queries = jnp.asarray(rng.integers(-2, 3, (6, ivf.dim)), jnp.float32)
+    cand = jnp.asarray(rng.integers(0, ivf.ntotal, (6, 25)), jnp.int32)
+    got = np.asarray(rr.distances(ivf, queries, cand))
+    want = np.asarray(
+        ResidualRerank(VmapRerank()).distances(ivf, queries, cand))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_residual_unq_reranks_exact_reconstruction(tiny_dataset):
+    """Residual + decoder quantizer (UNQ): stage 1 is a proxy (documented)
+    but stage 2 reranks against the exact centroid + decode
+    reconstruction, and xla/pallas agree bitwise."""
+    ivf = index_factory("IVF4,Residual,UNQ4x16,Rerank50",
+                        dim=tiny_dataset.dim)
+    ivf.train(tiny_dataset.train[:600], epochs=2, log_every=1000)
+    ivf.add(tiny_dataset.base[:800])
+    queries = jnp.asarray(tiny_dataset.queries[:8])
+    d, i = ivf.search(queries, 10, nprobe=4)
+    d, i = np.asarray(d), np.asarray(i)
+    rows = np.asarray(jnp.take(ivf._pos_dev,
+                               jnp.asarray(np.where(i < 0, 0, i))))
+    recon = ivf.reconstruct_rows(rows.ravel())
+    true = np.asarray(jax.jit(
+        lambda q, r: jnp.sum(jnp.square(r - q[:, None, :]), -1))(
+        queries, recon.reshape(*i.shape, ivf.dim)))
+    finite = np.isfinite(d)
+    assert finite.any()
+    np.testing.assert_allclose(d[finite], true[finite], rtol=1e-4,
+                               atol=1e-4)
+    ivf.backend = "pallas"
+    d2, i2 = ivf.search(queries, 10, nprobe=4)
+    np.testing.assert_array_equal(np.asarray(i2), i)
+    np.testing.assert_array_equal(np.asarray(d2), d)
+
+
+# ---------------------------------------------------------------------------
+# composition: sharding, filtering, incremental adds, persistence
+# ---------------------------------------------------------------------------
+
+def test_sharded_residual_matches_unsharded(trained_index_factory):
+    """By-cell host sharding reproduces the unsharded residual result
+    bit-for-bit for every nprobe (the per-(query, cell) correction rides
+    each shard's slot-bias stream)."""
+    ivf = trained_index_factory("IVF8,Residual,RVQ2x32,Rerank50", iters=4)
+    rng = np.random.default_rng(5)
+    queries = jnp.asarray(rng.normal(size=(10, ivf.dim)), jnp.float32)
+    for num_shards in (1, 3):
+        sharded = ShardedIndex(ivf, num_shards=num_shards)
+        assert sharded.resolved_placement == "host"
+        for nprobe in (2, 8):
+            dw, iw = ivf.search(queries, 12, nprobe=nprobe)
+            dg, ig = sharded.search(queries, 12, nprobe=nprobe)
+            np.testing.assert_array_equal(
+                np.asarray(ig), np.asarray(iw),
+                err_msg=f"shards={num_shards} nprobe={nprobe}")
+            np.testing.assert_array_equal(
+                np.asarray(dg), np.asarray(dw),
+                err_msg=f"shards={num_shards} nprobe={nprobe}")
+
+
+def test_residual_filter_mask_composes(trained_index_factory):
+    """filter_mask + residual: masked ids never surface on any backend
+    and a fully-masked query reports all (+inf, -1)."""
+    ivf = trained_index_factory("IVF8,Residual,PQ4x32,Rerank50", iters=4)
+    rng = np.random.default_rng(6)
+    q = 8
+    queries = jnp.asarray(rng.normal(size=(q, ivf.dim)), jnp.float32)
+    mask = rng.integers(0, 2, ivf.ntotal).astype(bool)
+    for backend in ("xla", "pallas", "onehot"):
+        ivf.backend = backend
+        d, i = ivf.search(queries, 12, nprobe=8, filter_mask=mask)
+        for x in np.asarray(i).ravel():
+            assert x == -1 or mask[x], backend
+    maskq = rng.integers(0, 2, (q, ivf.ntotal)).astype(bool)
+    maskq[2, :] = False
+    d, i = ivf.search(queries, 12, nprobe=8, filter_mask=maskq)
+    d, i = np.asarray(d), np.asarray(i)
+    assert (i[2] == -1).all() and np.isinf(d[2]).all()
+    for qi in range(q):
+        for x in i[qi]:
+            assert x == -1 or maskq[qi, x]
+
+
+def test_residual_incremental_adds_match_bulk(trained_index_factory):
+    """Chunked adds regroup into the same residual index state as one
+    bulk add: identical cross-term biases, cells and search results."""
+    master = trained_index_factory("IVF8,Residual,PQ4x32,Rerank50", iters=4)
+    rng = np.random.default_rng(2)
+    data = rng.normal(size=(300, master.dim)).astype(np.float32)
+    queries = jnp.asarray(rng.normal(size=(6, master.dim)), jnp.float32)
+
+    def fresh():
+        index = IVFIndex(master.dim, inner=master.inner, nlist=8,
+                         nprobe=4, rerank=50, residual=True)
+        index.coarse = master.coarse
+        return index
+
+    one = fresh().add(data)
+    chunked = fresh()
+    for lo, hi in ((0, 100), (100, 103), (103, 300)):
+        chunked.add(data[lo:hi])
+    np.testing.assert_array_equal(chunked._ids_np, one._ids_np)
+    np.testing.assert_array_equal(chunked._cells_np, one._cells_np)
+    np.testing.assert_array_equal(np.asarray(chunked.bias),
+                                  np.asarray(one.bias))
+    for nprobe in (2, 8):
+        dw, iw = one.search(queries, 10, nprobe=nprobe)
+        dg, ig = chunked.search(queries, 10, nprobe=nprobe)
+        np.testing.assert_array_equal(np.asarray(ig), np.asarray(iw))
+        np.testing.assert_array_equal(np.asarray(dg), np.asarray(dw))
+
+
+def test_residual_save_load_roundtrip(trained_index_factory, tiny_dataset,
+                                      tmp_path):
+    ivf = trained_index_factory("IVF8,Residual,PQ4x32,Rerank50", iters=4)
+    queries = jnp.asarray(tiny_dataset.queries[:8])
+    want_d, want_i = ivf.search(queries, 12, nprobe=4)
+    ivf.save(tmp_path / "ck")
+    loaded = Index.load(tmp_path / "ck")
+    assert isinstance(loaded, IVFIndex) and loaded.residual
+    got_d, got_i = loaded.search(queries, 12, nprobe=4)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_array_equal(np.asarray(got_d), np.asarray(want_d))
+
+
+# ---------------------------------------------------------------------------
+# the point of it all: residual codes reconstruct better
+# ---------------------------------------------------------------------------
+
+def test_residual_reconstruction_beats_plain(trained_index_factory,
+                                             tiny_dataset):
+    """At a matched code budget, residual encoding reconstructs the base
+    vectors strictly better than plain encoding (that is the entire
+    IVFADC argument: codebook capacity against the low-variance residual
+    distribution; the margin here is modest because the synthetic set's
+    64 clusters overflow the 16 coarse cells — the benchmark's recall
+    study tracks the end-to-end effect)."""
+    res = trained_index_factory("IVF16,Residual,PQ4x32,Rerank50", iters=4)
+    plain = trained_index_factory("IVF16,PQ4x32,Rerank50", iters=4)
+    base = np.asarray(tiny_dataset.base)
+
+    def mse(index):
+        rows = np.asarray(jnp.take(index._pos_dev,
+                                   jnp.arange(index.ntotal)))
+        recon = np.asarray(index.reconstruct_rows(rows))
+        return float(((recon - base) ** 2).sum(-1).mean())
+
+    assert mse(res) < 0.95 * mse(plain), (mse(res), mse(plain))
