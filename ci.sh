@@ -13,6 +13,22 @@ if [ "$(python -c 'import jax; print(jax.default_backend())')" != "tpu" ]; then
   export REPRO_PALLAS_INTERPRET="${REPRO_PALLAS_INTERPRET:-1}"
 fi
 
+echo "== static analysis (HLO contracts + repo lint + compile discipline) =="
+python -m repro.analysis.check
+# the gate must also be able to FAIL: on the seeded-violation fixtures
+# (oracle-less kernel, recompile hazards, a materialized (Q, N) scan) a
+# zero exit means the detectors went blind
+if python -m repro.analysis.check --seeded-violations > /dev/null 2>&1; then
+  echo "ERROR: --seeded-violations exited 0 (detectors missed seeded defects)"
+  exit 1
+fi
+echo "seeded-violation fixtures correctly rejected"
+if command -v ruff > /dev/null 2>&1; then
+  ruff check src tests benchmarks
+else
+  echo "(ruff not installed in this container; baseline lives in pyproject.toml)"
+fi
+
 echo "== tier-1 tests (docs suite runs in its own gate below) =="
 python -m pytest -x -q --ignore=tests/test_docs.py
 

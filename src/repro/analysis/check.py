@@ -1,0 +1,191 @@
+"""``python -m repro.analysis.check`` — the repo's static-analysis gate.
+
+Three sections, each independently selectable via ``--only``:
+
+  contracts  compile every registered engine path over its shape buckets
+             and verify the declared streaming-memory/HLO contract
+             (repro.analysis.contracts);
+  lint       run the repo-specific AST rules over the live tree
+             (repro.analysis.lint);
+  compile    the compile-count discipline scenario: one encoder compile
+             per ENCODE_BUCKETS bucket, zero compiles on repeat search
+             (repro.analysis.compilecount).
+
+All violations are printed before the non-zero exit (the same convention
+as ``ci.sh --smoke``). ``--seeded-violations`` inverts the role: it runs
+the detectors against the known-bad fixtures (the oracle-less kernel, the
+recompile hazards, a deliberately materialized (Q, N) scan) and exits
+non-zero WITH findings / zero without — CI asserts it fails, proving the
+gate can actually catch what it claims to.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import pathlib
+import sys
+
+# The sharded contract needs >= 2 devices; force a 2-way CPU split before
+# jax initializes (harmless under a real multi-device runtime, skipped if
+# the caller already imported jax or set their own flags).
+if "jax" not in sys.modules and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+
+_REPO = pathlib.Path(__file__).resolve().parents[3]
+_SECTIONS = ("contracts", "lint", "compile")
+
+
+def run_contracts(only_ids=None) -> tuple[list[str], int]:
+    from repro.analysis import contracts
+    lines, bad = [], 0
+    for pid, contract in contracts.REGISTRY.items():
+        if only_ids and pid not in only_ids:
+            continue
+        res = contracts.check_contract(pid)
+        if res.skipped:
+            lines.append(f"  SKIP {pid}: {res.reason}")
+        elif res.violations:
+            bad += 1
+            lines.append(f"  FAIL {pid}")
+            lines.extend(f"       {v}" for v in res.violations)
+        else:
+            lines.append(f"  ok   {pid}")
+    return lines, bad
+
+
+def run_lint_section(tree=None) -> tuple[list[str], int]:
+    from repro.analysis.lint import run_lint
+    findings = run_lint(tree)
+    lines = [f"  {f}" for f in findings]
+    if not findings:
+        lines.append("  ok   all lint rules clean")
+    return lines, len(findings)
+
+
+def run_compile_section() -> tuple[list[str], int]:
+    from repro.analysis.compilecount import encode_ladder_violations
+    violations = encode_ladder_violations()
+    lines = [f"  FAIL {v}" for v in violations]
+    if not violations:
+        lines.append("  ok   encode-ladder / repeat-search discipline holds")
+    return lines, len(violations)
+
+
+def run_seeded_violations() -> tuple[list[str], int]:
+    """Detectors vs the known-bad fixtures: MUST find everything seeded."""
+    import dataclasses
+
+    from repro.analysis import contracts
+    from repro.analysis.lint import LintTree, run_lint
+
+    lines, found = [], 0
+
+    fixtures = _REPO / "tests" / "fixtures" / "lint" / "bad"
+    findings = run_lint(LintTree(src=fixtures / "src",
+                                 tests=fixtures / "tests"))
+    lines.append(f"  lint findings on bad fixture tree: {len(findings)}")
+    lines.extend(f"    {f}" for f in findings)
+    found += len(findings)
+    seeded_rules = {"kernel-oracle", "capability-consumed",
+                    "recompile-hazard", "host-sync"}
+    missing = seeded_rules - {f.rule for f in findings}
+    if missing:
+        lines.append(f"  MISSED seeded lint rules: {sorted(missing)}")
+
+    # the streaming stage-1 contract pointed at the materialized build:
+    # the verifier must reject the (Q, N) scan it deliberately contains
+    control = contracts.REGISTRY["stage1.materialized.control"]
+    seeded = dataclasses.replace(
+        contracts.REGISTRY["stage1.stream.xla"],
+        path_id="seeded.materialized-qn-scan",
+        build=control.build, buckets=control.buckets, max_temp=None)
+    res = contracts.verify(seeded)
+    lines.append(f"  contract violations on materialized (Q, N) scan: "
+                 f"{len(res.violations)}")
+    lines.extend(f"    {v}" for v in res.violations)
+    found += len(res.violations)
+    if not any(v.kind == "materialization" for v in res.violations):
+        lines.append("  MISSED seeded (Q, N) materialization")
+        missing.add("qn-materialization")
+
+    return lines, found if not missing else 0
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis.check",
+        description="static-analysis gate: HLO contracts + repo lint + "
+                    "compile-count discipline")
+    parser.add_argument("--only", default=None,
+                        help="comma-separated sections to run "
+                             f"({','.join(_SECTIONS)}) and/or contract "
+                             "path ids")
+    parser.add_argument("--list", action="store_true",
+                        help="list registered contracts and lint rules")
+    parser.add_argument("--seeded-violations", action="store_true",
+                        help="run detectors against the known-bad fixtures; "
+                             "exits non-zero iff everything seeded is found")
+    args = parser.parse_args(argv)
+
+    if args.list:
+        from repro.analysis import contracts
+        from repro.analysis.lint import ALL_RULES
+        print("contracts:")
+        for pid, c in contracts.REGISTRY.items():
+            print(f"  {pid:32s} {c.description.splitlines()[0]}")
+        print("lint rules:")
+        for rule in ALL_RULES:
+            print(f"  {rule}")
+        return 0
+
+    if args.seeded_violations:
+        lines, found = run_seeded_violations()
+        print("== seeded violations ==")
+        for line in lines:
+            print(line)
+        if found:
+            print(f"seeded-violation check: detectors caught everything "
+                  f"({found} findings) -> exit 1 by design")
+            return 1
+        print("seeded-violation check: detectors MISSED seeded defects "
+              "-> exit 0 (CI treats this as failure)")
+        return 0
+
+    selected = set(_SECTIONS)
+    only_ids = None
+    if args.only:
+        tokens = {t.strip() for t in args.only.split(",") if t.strip()}
+        selected = tokens & set(_SECTIONS)
+        only_ids = tokens - set(_SECTIONS) or None
+        if only_ids and not selected:
+            selected = {"contracts"}
+
+    total_bad = 0
+    if "contracts" in selected:
+        print("== contracts ==")
+        lines, bad = run_contracts(only_ids)
+        for line in lines:
+            print(line)
+        total_bad += bad
+    if "lint" in selected:
+        print("== lint ==")
+        lines, bad = run_lint_section()
+        for line in lines:
+            print(line)
+        total_bad += bad
+    if "compile" in selected:
+        print("== compile discipline ==")
+        lines, bad = run_compile_section()
+        for line in lines:
+            print(line)
+        total_bad += bad
+
+    if total_bad:
+        print(f"static analysis: {total_bad} violation(s)")
+        return 1
+    print("static analysis: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

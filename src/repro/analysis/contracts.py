@@ -1,0 +1,498 @@
+"""Declarative streaming-memory / HLO contracts for the engine paths.
+
+The paper's value proposition is compressed-domain search: stage 1 scores
+the database through LUTs without a (Q, N) score matrix, stage 2 reranks
+candidates without a (Q, L, D) reconstruction tensor. Before this module
+those guarantees were ad-hoc regex greps scattered across tests; here each
+engine path declares ONE contract — forbidden materializations as symbolic
+shapes over the path's size parameters, forbidden host-transfer ops, the
+expected collective set for sharded paths, and an optional bound on the
+compiler's own temp-memory estimate — and the verifier proves it by
+jit-compiling the path over a small shape-bucket matrix and walking the
+compiled HLO with ``repro.analysis.hlo``.
+
+Grammar (see docs/ANALYSIS.md):
+
+  Contract(
+      path_id="stage1.stream.xla",          # registry key, dotted path name
+      build=<fn: params dict -> jax Compiled>,
+      buckets=({"Q": 8, "N": 4096, ...}, ...),   # shape matrix to compile
+      forbid=(("f32", ("Q", "N")),),        # shapes that must NOT be
+                                            #   produced by any compute op
+      require=(...),                        # shapes that MUST appear
+                                            #   (detector controls)
+      forbidden_ops=("infeed", ...),        # opcodes that must not appear
+      collectives=frozenset({...}),         # exact executed-collective set
+      max_temp=lambda p: p["Q"]*p["N"]*4,   # strict bound on the backend's
+                                            #   temp_size_in_bytes estimate
+      min_devices=1,                        # skip (not fail) below this
+  )
+
+Dims in ``forbid``/``require`` are ints, parameter names, or eval-able
+expressions over the bucket parameters ("N//2"). Only COMPUTE-op results
+count as materializations: parameters, tuple plumbing, while carries and
+copies route existing buffers and legitimately carry forbidden shapes
+(e.g. the (Q, N) qbias stream enters as a parameter by design).
+
+Pallas paths compile through interpret mode off-TPU (``ops._interpret``),
+which yields real HLO for the kernel body — forbidden-shape checks apply —
+but its scratch accounting does not model TPU VMEM, so ``max_temp`` bounds
+are declared on the xla paths only.
+
+``check_contract(path_id)`` memoizes per path: tests and the CLI share one
+compile per contract per process. ``verify(contract)`` runs an ad-hoc
+(unregistered) contract — the negative tests and the seeded-violation CLI
+mode use it to prove the detector actually rejects materialized paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import hlo
+
+_SDS = jax.ShapeDtypeStruct
+
+#: ops that move data across the host boundary — never allowed in a
+#: compiled search path (the engine is eager at the API edge only)
+HOST_TRANSFER_OPS = ("infeed", "outfeed", "send", "recv")
+
+#: result-producing ops that merely route existing buffers; their results
+#: are not fresh materializations
+_PASSTHROUGH = frozenset({
+    "parameter", "get-tuple-element", "tuple", "while", "conditional",
+    "bitcast", "copy", "copy-start", "copy-done", "optimization-barrier",
+    "after-all",
+})
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    path_id: str
+    bucket: str          # rendered bucket params, e.g. "Q=8 N=4096 ..."
+    kind: str            # materialization | missing-shape | forbidden-op |
+                         # collectives | temp-memory | parser
+    message: str
+
+    def __str__(self):
+        return f"[{self.path_id} @ {self.bucket}] {self.kind}: {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class ContractResult:
+    path_id: str
+    skipped: bool = False
+    reason: str = ""
+    violations: tuple = ()
+
+    @property
+    def ok(self) -> bool:
+        return not self.skipped and not self.violations
+
+
+@dataclasses.dataclass(frozen=True)
+class Contract:
+    path_id: str
+    description: str
+    build: callable          # params dict -> jax Compiled
+    buckets: tuple           # tuple of params dicts
+    forbid: tuple = ()       # ((dtype, (dim, ...)), ...)
+    require: tuple = ()
+    forbidden_ops: tuple = HOST_TRANSFER_OPS
+    collectives: frozenset = frozenset()
+    max_temp: callable | None = None
+    min_devices: int = 1
+
+
+REGISTRY: dict[str, Contract] = {}
+
+
+def register(contract: Contract) -> Contract:
+    REGISTRY[contract.path_id] = contract
+    return contract
+
+
+def _dim(expr, params) -> int:
+    if isinstance(expr, int):
+        return expr
+    return int(eval(expr, {"__builtins__": {}}, dict(params)))
+
+
+def _bucket_str(params) -> str:
+    return " ".join(f"{k}={v}" for k, v in params.items())
+
+
+def _shape_hits(ops_list, dtype: str, dims) -> list:
+    """Compute ops whose result shape contains dtype[d0,d1,...]."""
+    pat = re.compile(
+        rf"(?<![a-z0-9]){re.escape(dtype)}"
+        rf"\[{','.join(str(d) for d in dims)}\](?![0-9])")
+    return [op for op in ops_list
+            if op.op not in _PASSTHROUGH and pat.search(op.shape)]
+
+
+def verify(contract: Contract) -> ContractResult:
+    """Compile every bucket of ``contract`` and check all clauses."""
+    if len(jax.devices()) < contract.min_devices:
+        return ContractResult(
+            contract.path_id, skipped=True,
+            reason=(f"needs >= {contract.min_devices} devices, have "
+                    f"{len(jax.devices())}"))
+    violations = []
+    for params in contract.buckets:
+        bucket = _bucket_str(params)
+        compiled = contract.build(dict(params))
+        text = compiled.as_text()
+        ops_list = list(hlo.iter_ops(text))
+
+        for dtype, dims in contract.forbid:
+            rdims = [_dim(d, params) for d in dims]
+            hits = _shape_hits(ops_list, dtype, rdims)
+            if hits:
+                extra = f" (+{len(hits) - 1} more)" if len(hits) > 1 else ""
+                violations.append(Violation(
+                    contract.path_id, bucket, "materialization",
+                    f"forbidden {dtype}[{','.join(map(str, rdims))}] "
+                    f"produced by {hits[0].op} %{hits[0].name} in "
+                    f"%{hits[0].comp}{extra}"))
+
+        for dtype, dims in contract.require:
+            rdims = [_dim(d, params) for d in dims]
+            if not _shape_hits(ops_list, dtype, rdims):
+                violations.append(Violation(
+                    contract.path_id, bucket, "missing-shape",
+                    f"expected {dtype}[{','.join(map(str, rdims))}] buffer "
+                    "not found (detector control would pass vacuously)"))
+
+        forbidden = set(contract.forbidden_ops)
+        for op in ops_list:
+            base = op.op
+            for suffix in ("-start", "-done"):
+                if base.endswith(suffix):
+                    base = base[: -len(suffix)]
+            if base in forbidden:
+                violations.append(Violation(
+                    contract.path_id, bucket, "forbidden-op",
+                    f"{op.op} %{op.name} in %{op.comp} (line {op.lineno})"))
+
+        got_coll = set(hlo.collective_bytes(text)["counts"])
+        if got_coll != set(contract.collectives):
+            violations.append(Violation(
+                contract.path_id, bucket, "collectives",
+                f"executed collective set {sorted(got_coll)} != declared "
+                f"{sorted(contract.collectives)}"))
+
+        if contract.max_temp is not None:
+            bound = contract.max_temp(dict(params))
+            try:
+                temp = compiled.memory_analysis().temp_size_in_bytes
+            except Exception:
+                temp = None              # backend without memory_analysis
+            if temp is not None and temp >= bound:
+                violations.append(Violation(
+                    contract.path_id, bucket, "temp-memory",
+                    f"compiler temp estimate {temp} >= bound {bound}"))
+
+        stats = hlo.analyze(text)
+        if stats["unparsed_lines"]:
+            violations.append(Violation(
+                contract.path_id, bucket, "parser",
+                f"{stats['unparsed_lines']} HLO lines matched no parser "
+                f"regex; first: {stats['unparsed_sample'][:1]}"))
+
+    return ContractResult(contract.path_id, violations=tuple(violations))
+
+
+_RESULTS: dict[str, ContractResult] = {}
+
+
+def check_contract(path_id: str, *, force: bool = False) -> ContractResult:
+    """Verify a registered contract (memoized per process)."""
+    if force or path_id not in _RESULTS:
+        _RESULTS[path_id] = verify(REGISTRY[path_id])
+    return _RESULTS[path_id]
+
+
+def assert_contract(path_id: str) -> ContractResult:
+    """Raise AssertionError listing every violation; returns the result
+    (callers can inspect ``.skipped`` for min_devices contracts)."""
+    res = check_contract(path_id)
+    assert not res.violations, "\n".join(str(v) for v in res.violations)
+    return res
+
+
+# ---------------------------------------------------------------------------
+# builders — each closes over nothing and compiles one engine path from
+# abstract shapes (no data, no training)
+# ---------------------------------------------------------------------------
+
+def _build_stage1_stream_xla(p):
+    from repro.kernels.topl_scan import adc_scan_topl_stream_xla
+    codes = _SDS((p["N"], p["M"]), jnp.uint8)
+    luts = _SDS((p["Q"], p["M"], p["K"]), jnp.float32)
+    bias = _SDS((p["N"],), jnp.float32)
+
+    def f(c, l, b):
+        return adc_scan_topl_stream_xla(c, l, b, None, topl=p["L"],
+                                        n_valid=p["N"], chunk_n=p["CHUNK"])
+
+    return jax.jit(f).lower(codes, luts, bias).compile()
+
+
+def _build_stage1_fused_pallas(p):
+    from repro.kernels import ops
+    codes = _SDS((p["N"], p["M"]), jnp.uint8)
+    luts = _SDS((p["Q"], p["M"], p["K"]), jnp.float32)
+    bias = _SDS((p["N"],), jnp.float32)
+
+    def f(c, l, b):
+        return ops.adc_scan_topl(c, l, topl=p["L"], bias=b, impl="pallas",
+                                 block_n=p["BN"], block_q=8)
+
+    return jax.jit(f).lower(codes, luts, bias).compile()
+
+
+def _build_stage1_materialized(p):
+    from repro.kernels import ref
+    codes = _SDS((p["N"], p["M"]), jnp.uint8)
+    luts = _SDS((p["Q"], p["M"], p["K"]), jnp.float32)
+    bias = _SDS((p["N"],), jnp.float32)
+
+    def f(c, l, b):
+        s = ref.adc_scan_batch_ref(c, l) + b[None, :]       # (Q, N) — control
+        neg, idx = jax.lax.top_k(-s, p["L"])
+        return -neg, idx
+
+    return jax.jit(f).lower(codes, luts, bias).compile()
+
+
+def _build_stage1_gathered_xla(p):
+    from repro.kernels.gather_topl import adc_gather_topl_stream_xla
+    codes = _SDS((p["N"], p["M"]), jnp.uint8)
+    rows = _SDS((p["Q"], p["W"]), jnp.int32)
+    gids = _SDS((p["Q"], p["W"]), jnp.int32)
+    rowbias = _SDS((p["Q"], p["W"]), jnp.float32)
+    luts = _SDS((p["Q"], p["M"], p["K"]), jnp.float32)
+
+    def f(c, r, g, rb, l):
+        return adc_gather_topl_stream_xla(c, r, g, rb, l, topl=p["L"],
+                                          chunk_w=p["CHUNK"])
+
+    return jax.jit(f).lower(codes, rows, gids, rowbias, luts).compile()
+
+
+def _build_stage1_gathered_pallas(p):
+    from repro.kernels import ops
+    codes = _SDS((p["N"], p["M"]), jnp.uint8)
+    rows = _SDS((p["Q"], p["W"]), jnp.int32)
+    gids = _SDS((p["Q"], p["W"]), jnp.int32)
+    rowbias = _SDS((p["Q"], p["W"]), jnp.float32)
+    luts = _SDS((p["Q"], p["M"], p["K"]), jnp.float32)
+
+    def f(c, r, g, rb, l):
+        return ops.adc_gather_topl(c, r, g, l, topl=p["L"], rowbias=rb,
+                                   impl="pallas", block_w=p["BW"], block_q=8)
+
+    return jax.jit(f).lower(codes, rows, gids, rowbias, luts).compile()
+
+
+def _build_stage2_table_xla(p):
+    from repro.kernels.rerank_dist import rerank_gather_dist_chunked_xla
+    cand = _SDS((p["Q"], p["L"], p["M"]), jnp.uint8)
+    queries = _SDS((p["Q"], p["D"]), jnp.float32)
+    table = _SDS((p["M"], p["K"], p["D"]), jnp.float32)
+
+    def f(c, q, t):
+        return rerank_gather_dist_chunked_xla(c, q, t, chunk_l=p["CHUNK"])
+
+    return jax.jit(f).lower(cand, queries, table).compile()
+
+
+def _build_stage2_fused_pallas(p):
+    from repro.kernels import ops
+    cand = _SDS((p["Q"], p["L"], p["M"]), jnp.uint8)
+    queries = _SDS((p["Q"], p["D"]), jnp.float32)
+    table = _SDS((p["M"], p["K"], p["D"]), jnp.float32)
+
+    def f(c, q, t):
+        return ops.rerank_gather_dist(c, q, t, impl="pallas",
+                                      block_l=p["BL"], block_q=8)
+
+    return jax.jit(f).lower(cand, queries, table).compile()
+
+
+def _build_stage2_dedup_xla(p):
+    from repro.index.rerank import _gathered_dist_chunked
+    recon_u = _SDS((p["U"], p["D"]), jnp.float32)
+    queries = _SDS((p["Q"], p["D"]), jnp.float32)
+    inv = _SDS((p["Q"], p["L"]), jnp.int32)
+
+    def f(r, q, i):
+        return _gathered_dist_chunked(r, q, i, chunk_l=p["CHUNK"])
+
+    return jax.jit(f).lower(recon_u, queries, inv).compile()
+
+
+def _build_stage2_exhaustive_xla(p):
+    from repro.index.rerank import exhaustive_topk
+    from repro.kernels import ref
+    codes = _SDS((p["N"], p["M"]), jnp.uint8)
+    queries = _SDS((p["Q"], p["D"]), jnp.float32)
+    table = _SDS((p["M"], p["K"], p["D"]), jnp.float32)
+
+    def f(c, q, t):
+        return exhaustive_topk(lambda ch: ref.decode_with_table(ch, t),
+                               c, q, k=p["TOPK"], chunk_n=p["CHUNK"])
+
+    return jax.jit(f).lower(codes, queries, table).compile()
+
+
+def _build_stage2_vmap_control(p):
+    from repro.kernels import ref
+    cand = _SDS((p["Q"], p["L"], p["M"]), jnp.uint8)
+    queries = _SDS((p["Q"], p["D"]), jnp.float32)
+    table = _SDS((p["M"], p["K"], p["D"]), jnp.float32)
+    return jax.jit(ref.rerank_gather_dist_ref).lower(
+        cand, queries, table).compile()
+
+
+def _build_sharded_stage1(p):
+    from repro.parallel import search as ps
+    devices = jax.devices()[:2]
+    mesh = jax.sharding.Mesh(np.asarray(devices), ("shard",))
+    shard_rows = p["N"] // 2
+    fn = ps._device_topl_fn(mesh, min(p["L"], shard_rows), shard_rows,
+                            "xla", False)
+    codes = _SDS((p["N"], p["M"]), jnp.uint8)
+    bias = _SDS((p["N"],), jnp.float32)
+    luts = _SDS((p["Q"], p["M"], p["K"]), jnp.float32)
+    return fn.lower(codes, bias, luts).compile()
+
+
+# ---------------------------------------------------------------------------
+# the registry: one contract per engine path
+# ---------------------------------------------------------------------------
+
+register(Contract(
+    path_id="stage1.stream.xla",
+    description="chunked lax.scan stage 1: no (Q, N) score matrix, temp "
+                "memory strictly below the matrix footprint",
+    build=_build_stage1_stream_xla,
+    buckets=({"Q": 8, "N": 4096, "M": 8, "K": 64, "L": 32, "CHUNK": 512},
+             {"Q": 5, "N": 2816, "M": 4, "K": 32, "L": 48, "CHUNK": 384}),
+    forbid=(("f32", ("Q", "N")),),
+    max_temp=lambda p: p["Q"] * p["N"] * 4,
+))
+
+register(Contract(
+    path_id="stage1.fused.pallas",
+    description="fused scan+top-L kernel (interpret off-TPU): no (Q, N) "
+                "score matrix in the kernel HLO",
+    build=_build_stage1_fused_pallas,
+    buckets=({"Q": 8, "N": 2048, "M": 8, "K": 64, "L": 32, "BN": 256},
+             {"Q": 8, "N": 1024, "M": 4, "K": 32, "L": 16, "BN": 128}),
+    forbid=(("f32", ("Q", "N")),),
+))
+
+register(Contract(
+    path_id="stage1.materialized.control",
+    description="DETECTOR CONTROL: the materialized full-matrix scan must "
+                "show the (Q, N) buffer the streaming contracts forbid",
+    build=_build_stage1_materialized,
+    buckets=({"Q": 8, "N": 4096, "M": 8, "K": 64, "L": 32},),
+    require=(("f32", ("Q", "N")),),
+))
+
+register(Contract(
+    path_id="stage1.gathered.xla",
+    description="chunked gather-scan (IVF probing): no (Q, W) slot-score "
+                "batch and no (Q, N) matrix",
+    build=_build_stage1_gathered_xla,
+    buckets=({"Q": 8, "N": 4096, "W": 960, "M": 4, "K": 32, "L": 50,
+              "CHUNK": 128},),
+    forbid=(("f32", ("Q", "W")), ("f32", ("Q", "N"))),
+    # peak = the (rows, gids, rowbias) chunk restacks (O(Q*W), <=16 B per
+    # slot across the three streams) + the O(Q*chunk_w*M) gathered working
+    # set — chunk-scaled, never the (Q, W, M) f32 gather a materialized
+    # path would hold
+    max_temp=lambda p: (p["Q"] * -(-p["W"] // p["CHUNK"]) * p["CHUNK"] * 16
+                        + p["Q"] * p["CHUNK"] * p["M"] * 16),
+))
+
+register(Contract(
+    path_id="stage1.gathered.pallas",
+    description="fused gathered kernel (interpret off-TPU): no (Q, W) "
+                "slot-score batch and no (Q, N) matrix",
+    build=_build_stage1_gathered_pallas,
+    buckets=({"Q": 8, "N": 4096, "W": 900, "M": 4, "K": 32, "L": 50,
+              "BW": 128},),
+    forbid=(("f32", ("Q", "W")), ("f32", ("Q", "N"))),
+))
+
+register(Contract(
+    path_id="stage2.table.xla",
+    description="chunked table-decode rerank: no (Q, L, D) reconstruction",
+    build=_build_stage2_table_xla,
+    buckets=({"Q": 8, "L": 512, "M": 8, "K": 64, "D": 96, "CHUNK": 64},),
+    forbid=(("f32", ("Q", "L", "D")),),
+    max_temp=lambda p: p["Q"] * p["L"] * p["D"] * 4,
+))
+
+register(Contract(
+    path_id="stage2.fused.pallas",
+    description="fused gather-decode-distance kernel (interpret off-TPU): "
+                "no (Q, L, D) reconstruction",
+    build=_build_stage2_fused_pallas,
+    buckets=({"Q": 8, "L": 512, "M": 8, "K": 64, "D": 96, "BL": 64},),
+    forbid=(("f32", ("Q", "L", "D")),),
+))
+
+register(Contract(
+    path_id="stage2.dedup.xla",
+    description="cross-query dedup gather-back: no (Q, L, D) gathered "
+                "reconstruction (held memory is the deduped (U, D))",
+    build=_build_stage2_dedup_xla,
+    buckets=({"Q": 8, "L": 512, "U": 777, "D": 96, "CHUNK": 64},),
+    forbid=(("f32", ("Q", "L", "D")),),
+    max_temp=lambda p: p["Q"] * p["L"] * p["D"] * 4,
+))
+
+register(Contract(
+    path_id="stage2.exhaustive.xla",
+    description="chunked exhaustive rerank: no (Q, N, D) reconstruction "
+                "and no (Q, N) distance matrix",
+    build=_build_stage2_exhaustive_xla,
+    buckets=({"Q": 8, "N": 4096, "M": 4, "K": 32, "D": 96, "TOPK": 30,
+              "CHUNK": 256},),
+    forbid=(("f32", ("Q", "N", "D")), ("f32", ("Q", "N"))),
+    # peak = a few (Q, chunk_n, D) distance-working tensors per scan step;
+    # chunk-scaled — the materialized (Q, N, D) reconstruction would be
+    # N/chunk_n times larger
+    max_temp=lambda p: 3 * p["Q"] * p["CHUNK"] * p["D"] * 4,
+))
+
+register(Contract(
+    path_id="stage2.vmap.control",
+    description="DETECTOR CONTROL: the materialized vmap reranker must "
+                "show the (Q, L, D) reconstruction the streaming "
+                "contracts forbid",
+    build=_build_stage2_vmap_control,
+    buckets=({"Q": 8, "L": 128, "M": 8, "K": 64, "D": 96},),
+    require=(("f32", ("Q", "L", "D")),),
+))
+
+register(Contract(
+    path_id="sharded.stage1.device",
+    description="shard_map stage 1 (per-partition SPMD program): streaming "
+                "per shard, exactly one collective kind (the (D, Q, L) "
+                "candidate all-gather), no (Q, N) or (Q, N/2) matrix",
+    build=_build_sharded_stage1,
+    buckets=({"Q": 4, "N": 4096, "M": 8, "K": 64, "L": 16},),
+    forbid=(("f32", ("Q", "N")), ("f32", ("Q", "N//2"))),
+    collectives=frozenset({"all-gather"}),
+    min_devices=2,
+))

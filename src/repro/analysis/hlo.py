@@ -32,9 +32,16 @@ import re
 from collections import defaultdict
 
 _DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
     "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
     "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    # narrow dtypes current jaxlib can emit: sub-byte ints at their packed
+    # width, the fnuz/b11 float8 family, mx float4/float8-scale formats
+    "s4": 0.5, "u4": 0.5, "s2": 0.25, "u2": 0.25, "s1": 0.125, "u1": 0.125,
+    "f8e4m3": 1, "f8e3m4": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1,
+    "f8e4m3b11fnuz": 1, "f8e8m0fnu": 1, "f4e2m1fn": 0.5,
+    # zero-width bookkeeping types (token/opaque carry no payload)
+    "token": 0, "opaque": 0,
 }
 
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
@@ -57,6 +64,11 @@ _SLICING = {"dynamic-slice", "gather", "slice"}
 _UPDATING = {"dynamic-update-slice", "scatter"}
 _FREE = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
          "after-all", "iota"}
+# ops whose result merely routes existing buffers: excluded from the peak
+# single-buffer statistic (a while's carry tuple is not a fresh allocation)
+_PASSTHROUGH = {"parameter", "get-tuple-element", "tuple", "while",
+                "conditional", "bitcast", "copy", "copy-start", "copy-done",
+                "optimization-barrier", "after-all"}
 
 
 def _shapes(shape_str: str) -> list[tuple[str, int]]:
@@ -111,13 +123,73 @@ class _Comp:
         return 0.0  # parameter unused
 
 
-def _parse(text: str) -> tuple[dict[str, _Comp], str | None]:
+@dataclasses.dataclass
+class Diagnostics:
+    """Parser health report: what the walker could NOT account for.
+
+    ``unparsed`` lists (computation, lineno, snippet) for op lines inside a
+    computation body that matched no parser regex — before this existed they
+    silently vanished from the byte/flop accounting. ``unknown_dtypes`` are
+    dtype tokens missing from ``_DTYPE_BYTES`` (billed at 4 bytes/elem).
+    ``peak_buffer_bytes`` is the largest single buffer produced by any
+    compute op in any computation (pass-through ops like tuple/while/copy
+    excluded) — the coarse "biggest live tensor" statistic contracts bound.
+    """
+    unparsed: list = dataclasses.field(default_factory=list)
+    unknown_dtypes: set = dataclasses.field(default_factory=set)
+    peak_buffer_bytes: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class OpLine:
+    """One parsed HLO instruction, as seen by the graph walker."""
+    comp: str       # computation the op lives in
+    name: str       # SSA value name (no leading %)
+    op: str         # opcode, e.g. "fusion", "dot", "all-gather"
+    shape: str      # result shape string (may be a tuple shape)
+    lineno: int     # 1-based line number in the module text
+    raw: str        # the stripped source line
+
+
+def iter_ops(text: str):
+    """Yield every parseable instruction in the module as an ``OpLine``.
+
+    This is the raw-op view used by ``analysis/contracts.py`` to scan for
+    forbidden materializations and host-transfer ops; it deliberately does
+    no executed-cost scaling.
+    """
+    cur = None
+    for lineno, raw in enumerate(text.splitlines(), start=1):
+        line = raw.rstrip()
+        if cur is None:
+            m = _HEADER_RE.match(line)
+            if m:
+                cur = m.group(2)
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _LINE_RE.match(line)
+        if m:
+            name, shape_str, op, _rest = m.groups()
+            yield OpLine(comp=cur, name=name, op=op, shape=shape_str,
+                         lineno=lineno, raw=line.strip())
+
+
+def _note_dtypes(shape_str: str, diag: Diagnostics) -> None:
+    for dtype, _dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            diag.unknown_dtypes.add(dtype)
+
+
+def _parse(text: str) -> tuple[dict[str, _Comp], str | None, Diagnostics]:
     comps: dict[str, _Comp] = {}
     entry = None
     cur: _Comp | None = None
     symbols: dict[str, str] = {}
+    diag = Diagnostics()
 
-    for raw in text.splitlines():
+    for lineno, raw in enumerate(text.splitlines(), start=1):
         line = raw.rstrip()
         if cur is None:
             m = _HEADER_RE.match(line)
@@ -133,9 +205,16 @@ def _parse(text: str) -> tuple[dict[str, _Comp], str | None]:
             continue
         m = _LINE_RE.match(line)
         if not m:
+            stripped = line.strip()
+            if stripped and not stripped.startswith("//"):
+                diag.unparsed.append((cur.name, lineno, stripped[:120]))
             continue
         name, shape_str, op, rest = m.groups()
         symbols[name] = shape_str
+        _note_dtypes(shape_str, diag)
+        if op not in _PASSTHROUGH:
+            diag.peak_buffer_bytes = max(diag.peak_buffer_bytes,
+                                         _shape_bytes(shape_str))
 
         cm = _CONST_RE.search(line)
         if op == "constant" and cm:
@@ -227,7 +306,7 @@ def _parse(text: str) -> tuple[dict[str, _Comp], str | None]:
                     b += _shape_bytes(symbols[o])
             cur.bytes += b
 
-    return comps, entry
+    return comps, entry, diag
 
 
 def _trip_count(comps, cond_name, annotated):
@@ -246,9 +325,16 @@ def _trip_count(comps, cond_name, annotated):
 
 
 def analyze(text: str) -> dict:
-    """Walk the module from ENTRY; returns executed flops/bytes/collectives."""
-    comps, entry = _parse(text)
+    """Walk the module from ENTRY; returns executed flops/bytes/collectives
+    plus parser diagnostics (unparsed lines, unknown dtypes, peak buffer)."""
+    comps, entry, diag = _parse(text)
     memo: dict[str, dict] = {}
+    diag_fields = {
+        "unparsed_lines": len(diag.unparsed),
+        "unparsed_sample": list(diag.unparsed[:8]),
+        "unknown_dtypes": sorted(diag.unknown_dtypes),
+        "peak_buffer_bytes": float(diag.peak_buffer_bytes),
+    }
 
     def walk(name: str) -> dict:
         if name in memo:
@@ -299,8 +385,9 @@ def analyze(text: str) -> dict:
         return memo[name]
 
     if entry is None:
-        return {"flops": 0.0, "bytes": 0.0, "coll": {}, "coll_counts": {}}
-    return walk(entry)
+        return {"flops": 0.0, "bytes": 0.0, "coll": {}, "coll_counts": {},
+                **diag_fields}
+    return {**walk(entry), **diag_fields}
 
 
 def collective_bytes(text: str) -> dict:
@@ -323,4 +410,8 @@ def executed_cost(text: str) -> dict:
         "collectives": {k: float(v) for k, v in stats["coll"].items()},
         "collective_counts": {k: float(v)
                               for k, v in stats["coll_counts"].items()},
+        "unparsed_lines": stats["unparsed_lines"],
+        "unparsed_sample": stats["unparsed_sample"],
+        "unknown_dtypes": stats["unknown_dtypes"],
+        "peak_buffer_bytes": stats["peak_buffer_bytes"],
     }

@@ -1,0 +1,396 @@
+"""Repo-specific AST lint rules for the compressed-domain search engine.
+
+Four rules, each guarding an invariant the test suite cannot see locally
+(they are properties of the whole tree, not of one function):
+
+  kernel-oracle        every ``pallas_call`` kernel under ``kernels/`` is
+                       named ``<base>_pallas``, has a ``<base>_ref`` oracle
+                       in ``kernels/ref.py``, and some test references the
+                       oracle together with the pallas path (the parity
+                       harness that keeps the kernel honest).
+  capability-consumed  every capability flag declared by a
+                       ``register_scan_backend`` call in
+                       ``index/backend.py`` is consumed by at least one
+                       ``backend_supports(..., "<flag>")`` resolution site
+                       outside backend.py — a declared-but-unread flag is
+                       dead configuration that silently stops meaning
+                       anything.
+  recompile-hazard     no ``float()`` / ``.item()`` / ``np.*`` calls inside
+                       traced functions under ``kernels/``, ``index/``,
+                       ``parallel/`` — host round-trips inside jit bodies
+                       either crash on tracers or silently force
+                       per-call recompiles.
+  host-sync            no ``jax.device_get`` / ``block_until_ready`` in the
+                       search hot paths (``index/``, ``kernels/``,
+                       ``parallel/``) — synchronization belongs to
+                       benchmarks and the API edge, never inside the
+                       engine.
+
+"Traced" for recompile-hazard means: decorated with ``jax.jit`` (including
+``functools.partial(jax.jit, ...)``), passed by name into ``jit`` / ``scan``
+/ ``vmap`` / ``pmap`` / ``shard_map`` / ``fori_loop`` / ``while_loop``,
+nested inside a traced function, or called by a traced function in the same
+module (one-module transitive closure).
+
+Suppression: append ``# lint: allow(<rule>)`` to the offending line.
+
+``run_lint()`` lints the live repo tree; tests point ``LintTree`` at the
+known-good/known-bad fixture trees under ``tests/fixtures/lint/``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+import re
+
+ALL_RULES = ("kernel-oracle", "capability-consumed", "recompile-hazard",
+             "host-sync")
+
+#: directories (relative to the src root) whose compiled functions are the
+#: search hot path
+_HOT_DIRS = ("kernels", "index", "parallel")
+
+#: transforms whose function-valued arguments are traced
+_TRACING_CALLS = {"jit", "scan", "vmap", "pmap", "shard_map", "fori_loop",
+                  "while_loop", "checkpoint", "remat", "custom_vjp",
+                  "custom_jvp"}
+
+#: np.<attr> accesses that are trace-safe (dtype objects and constants,
+#: resolved at trace time, never at run time)
+_NP_SAFE = {
+    "float16", "float32", "float64", "int8", "int16", "int32", "int64",
+    "uint8", "uint16", "uint32", "uint64", "bool_", "complex64",
+    "complex128", "inf", "nan", "pi", "e", "newaxis", "iinfo", "finfo",
+    "dtype", "ndarray",
+}
+
+_ALLOW_RE = re.compile(r"#\s*lint:\s*allow\(([\w\-,\s]+)\)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def __str__(self):
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class LintTree:
+    """The pair of roots a lint run sees: engine sources + their tests."""
+    src: pathlib.Path
+    tests: pathlib.Path
+
+
+def default_tree() -> LintTree:
+    root = pathlib.Path(__file__).resolve().parents[3]
+    return LintTree(src=root / "src" / "repro", tests=root / "tests")
+
+
+def _allowed_rules(source_line: str) -> set[str]:
+    m = _ALLOW_RE.search(source_line)
+    if not m:
+        return set()
+    return {r.strip() for r in m.group(1).split(",")}
+
+
+class _FileLint:
+    """Shared parse + pragma machinery for one source file."""
+
+    def __init__(self, path: pathlib.Path):
+        self.path = path
+        self.text = path.read_text()
+        self.lines = self.text.splitlines()
+        self.tree = ast.parse(self.text, filename=str(path))
+
+    def suppressed(self, rule: str, lineno: int) -> bool:
+        if 1 <= lineno <= len(self.lines):
+            return rule in _allowed_rules(self.lines[lineno - 1])
+        return False
+
+
+def _iter_py(root: pathlib.Path):
+    if root.is_dir():
+        yield from sorted(root.rglob("*.py"))
+
+
+def _dotted(node: ast.AST) -> str:
+    """'jax.lax.scan' for an Attribute/Name chain (empty if not one)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+# ---------------------------------------------------------------------------
+# rule: kernel-oracle
+# ---------------------------------------------------------------------------
+
+def _contains_pallas_call(fn: ast.FunctionDef) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            name = _dotted(node.func)
+            if name.split(".")[-1] == "pallas_call":
+                return True
+    return False
+
+
+def _rule_kernel_oracle(tree: LintTree) -> list[Finding]:
+    findings = []
+    kernels_dir = tree.src / "kernels"
+    ref_path = kernels_dir / "ref.py"
+    ref_names: set[str] = set()
+    if ref_path.exists():
+        for node in ast.parse(ref_path.read_text()).body:
+            if isinstance(node, ast.FunctionDef):
+                ref_names.add(node.name)
+    test_texts = [p.read_text() for p in _iter_py(tree.tests)]
+
+    for path in _iter_py(kernels_dir):
+        if path.name == "ref.py":
+            continue
+        fl = _FileLint(path)
+        for node in fl.tree.body:
+            if not isinstance(node, ast.FunctionDef):
+                continue
+            if not _contains_pallas_call(node):
+                continue
+            if fl.suppressed("kernel-oracle", node.lineno):
+                continue
+            rel = str(path)
+            if not node.name.endswith("_pallas"):
+                findings.append(Finding(
+                    "kernel-oracle", rel, node.lineno,
+                    f"pallas_call kernel {node.name!r} must follow the "
+                    "'<base>_pallas' naming convention"))
+                continue
+            base = node.name[: -len("_pallas")]
+            oracle = f"{base}_ref"
+            if oracle not in ref_names:
+                findings.append(Finding(
+                    "kernel-oracle", rel, node.lineno,
+                    f"kernel {node.name!r} has no oracle {oracle!r} in "
+                    "kernels/ref.py"))
+                continue
+            has_parity = any(oracle in t and "pallas" in t
+                             for t in test_texts)
+            if not has_parity:
+                findings.append(Finding(
+                    "kernel-oracle", rel, node.lineno,
+                    f"no parity test references both {oracle!r} and the "
+                    f"pallas path of {node.name!r}"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# rule: capability-consumed
+# ---------------------------------------------------------------------------
+
+def _declared_capabilities(backend_py: pathlib.Path) -> list[tuple[str, int]]:
+    """(capability, declaration line) for every register_scan_backend call."""
+    out = []
+    for node in ast.walk(ast.parse(backend_py.read_text())):
+        if not isinstance(node, ast.Call):
+            continue
+        if _dotted(node.func).split(".")[-1] != "register_scan_backend":
+            continue
+        for kw in node.keywords:
+            if kw.arg != "capabilities":
+                continue
+            for sub in ast.walk(kw.value):
+                if isinstance(sub, ast.Constant) and isinstance(sub.value,
+                                                                str):
+                    out.append((sub.value, sub.lineno))
+    return out
+
+
+def _rule_capability_consumed(tree: LintTree) -> list[Finding]:
+    backend_py = tree.src / "index" / "backend.py"
+    if not backend_py.exists():
+        return []
+    declared = _declared_capabilities(backend_py)
+    if not declared:
+        return []
+    consumed: set[str] = set()
+    for path in _iter_py(tree.src):
+        if path == backend_py:
+            continue
+        for node in ast.walk(ast.parse(path.read_text())):
+            if not isinstance(node, ast.Call):
+                continue
+            if _dotted(node.func).split(".")[-1] != "backend_supports":
+                continue
+            if len(node.args) >= 2 and isinstance(node.args[1], ast.Constant):
+                consumed.add(node.args[1].value)
+    fl = _FileLint(backend_py)
+    findings = []
+    for cap, lineno in declared:
+        if cap in consumed:
+            continue
+        if fl.suppressed("capability-consumed", lineno):
+            continue
+        findings.append(Finding(
+            "capability-consumed", str(backend_py), lineno,
+            f"capability {cap!r} is declared but no resolution path "
+            "consumes it via backend_supports(...)"))
+    # dedupe per capability (declared by several backends)
+    seen, unique = set(), []
+    for f in findings:
+        if f.message not in seen:
+            seen.add(f.message)
+            unique.append(f)
+    return unique
+
+
+# ---------------------------------------------------------------------------
+# rule: recompile-hazard
+# ---------------------------------------------------------------------------
+
+def _is_jit_decorator(dec: ast.AST) -> bool:
+    name = _dotted(dec)
+    if name.split(".")[-1] == "jit":
+        return True
+    if isinstance(dec, ast.Call):
+        head = _dotted(dec.func).split(".")[-1]
+        if head == "jit":
+            return True
+        if head == "partial" and dec.args:
+            return _dotted(dec.args[0]).split(".")[-1] == "jit"
+    return False
+
+
+def _module_functions(tree: ast.Module) -> dict[str, ast.FunctionDef]:
+    out = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            out.setdefault(node.name, node)
+    return out
+
+
+def _traced_functions(mod: ast.Module) -> set[ast.FunctionDef]:
+    """Functions whose bodies run under trace (see module docstring)."""
+    funcs = _module_functions(mod)
+    traced: set[ast.FunctionDef] = set()
+    for fn in funcs.values():
+        if any(_is_jit_decorator(d) for d in fn.decorator_list):
+            traced.add(fn)
+    # names passed into tracing transforms anywhere in the module
+    for node in ast.walk(mod):
+        if not isinstance(node, ast.Call):
+            continue
+        if _dotted(node.func).split(".")[-1] not in _TRACING_CALLS:
+            continue
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            if isinstance(arg, ast.Name) and arg.id in funcs:
+                traced.add(funcs[arg.id])
+    # nested defs inherit; same-module callees of traced functions join
+    changed = True
+    while changed:
+        changed = False
+        for fn in list(traced):
+            for node in ast.walk(fn):
+                if (isinstance(node, ast.FunctionDef)
+                        and node not in traced):
+                    traced.add(node)
+                    changed = True
+                if isinstance(node, ast.Call):
+                    callee = _dotted(node.func)
+                    if ("." not in callee and callee in funcs
+                            and funcs[callee] not in traced):
+                        traced.add(funcs[callee])
+                        changed = True
+    return traced
+
+
+def _hazards_in(fn: ast.FunctionDef, fl: _FileLint) -> list[Finding]:
+    findings = []
+
+    def emit(node, msg):
+        if not fl.suppressed("recompile-hazard", node.lineno):
+            findings.append(Finding("recompile-hazard", str(fl.path),
+                                    node.lineno, msg))
+
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            if isinstance(node.func, ast.Name) and node.func.id == "float":
+                emit(node, f"float(...) inside traced {fn.name!r} forces a "
+                           "host round-trip / per-value recompile")
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "item"):
+                emit(node, f".item() inside traced {fn.name!r} forces a "
+                           "host round-trip")
+        if isinstance(node, ast.Attribute):
+            root = node
+            while isinstance(root.value, ast.Attribute):
+                root = root.value
+            if (isinstance(root.value, ast.Name)
+                    and root.value.id in ("np", "numpy")
+                    and root.attr not in _NP_SAFE):
+                emit(node, f"np.{root.attr} inside traced {fn.name!r}: host "
+                           "numpy in a jit body computes at trace time or "
+                           "crashes on tracers")
+    return findings
+
+
+def _rule_recompile_hazard(tree: LintTree) -> list[Finding]:
+    findings = []
+    for sub in _HOT_DIRS:
+        for path in _iter_py(tree.src / sub):
+            fl = _FileLint(path)
+            seen_lines = set()
+            for fn in _traced_functions(fl.tree):
+                for f in _hazards_in(fn, fl):
+                    if (f.line, f.message) not in seen_lines:
+                        seen_lines.add((f.line, f.message))
+                        findings.append(f)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# rule: host-sync
+# ---------------------------------------------------------------------------
+
+def _rule_host_sync(tree: LintTree) -> list[Finding]:
+    findings = []
+    for sub in _HOT_DIRS:
+        for path in _iter_py(tree.src / sub):
+            fl = _FileLint(path)
+            for node in ast.walk(fl.tree):
+                name = ""
+                if isinstance(node, ast.Call):
+                    name = _dotted(node.func).split(".")[-1]
+                if name not in ("device_get", "block_until_ready"):
+                    continue
+                if fl.suppressed("host-sync", node.lineno):
+                    continue
+                findings.append(Finding(
+                    "host-sync", str(fl.path), node.lineno,
+                    f"{name}() in a search hot path — synchronization "
+                    "belongs to benchmarks/ or the API edge"))
+    return findings
+
+
+_RULE_FNS = {
+    "kernel-oracle": _rule_kernel_oracle,
+    "capability-consumed": _rule_capability_consumed,
+    "recompile-hazard": _rule_recompile_hazard,
+    "host-sync": _rule_host_sync,
+}
+
+
+def run_lint(tree: LintTree | None = None,
+             rules: tuple = ALL_RULES) -> list[Finding]:
+    """Run the selected rules over ``tree`` (default: the live repo)."""
+    tree = tree or default_tree()
+    findings = []
+    for rule in rules:
+        findings.extend(_RULE_FNS[rule](tree))
+    return sorted(findings, key=lambda f: (f.path, f.line))

@@ -27,7 +27,8 @@ resolves against instead of branching on backend names:
     materialized vmap reranker.
   * ``fused_topl``     — the streaming stage-1 path is a single fused
     kernel (scan + running top-L heap in VMEM), not a chunked
-    composition.
+    composition; ``candidate_generator_for`` resolves the streaming
+    engine's kernel flavor off this flag.
   * ``fused_rerank``   — the backend runs stage 2 for table-decodable
     quantizers as the single fused gather-decode-distance kernel
     (``ops.rerank_gather_dist``): candidate-code tiles stream HBM->VMEM

@@ -138,11 +138,15 @@ def candidate_generator_for(backend: str | None = "auto") -> CandidateGenerator:
 
     The backend name resolves through the scan registry; backends that
     declare the ``streaming_topl`` capability get the streaming engine,
-    everything else the materialized fallback.
+    everything else the materialized fallback. Within the streaming
+    engine, ``fused_topl`` selects the kernel flavor: backends declaring
+    it run the single fused scan+top-L kernel (the ``pallas`` dispatch
+    target), the rest the chunked ``lax.scan`` composition (``xla``).
     """
     impl = resolve_scan_backend(backend)
     if backend_supports(impl, "streaming_topl"):
-        return StreamingTopL(impl)
+        return StreamingTopL(
+            "pallas" if backend_supports(impl, "fused_topl") else "xla")
     return MaterializedTopL(impl)
 
 

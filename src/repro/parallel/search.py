@@ -31,6 +31,11 @@ all-gathered pools merge lexicographically by (score, GLOBAL id) on the
 host — cell-grouped shards interleave global ids, so the device-major
 positional argument above does not apply and the merge is explicit
 (``candidates.merge_topl``).
+
+The memory/collective shape of this path is pinned by the
+``sharded.stage1.device`` contract in ``repro.analysis.contracts``: no
+device materializes a (Q, N) or even (Q, N/D) score matrix, and the only
+cross-device collective is the candidate-tuple all-gather.
 """
 from __future__ import annotations
 

@@ -1,0 +1,16 @@
+"""Known-bad fixture registry: a capability nothing ever consumes."""
+
+_REGISTRY = {}
+
+
+def register_scan_backend(name, *, priority, capabilities=()):
+    _REGISTRY[name] = (priority, frozenset(capabilities))
+
+
+def backend_supports(name, capability):
+    return name in _REGISTRY and capability in _REGISTRY[name][1]
+
+
+# BAD: "never_used" is declared but no resolution path reads it
+register_scan_backend("toy", priority=1,
+                      capabilities=("consumed_cap", "never_used"))

@@ -1,0 +1,33 @@
+"""Known-bad fixture hot path: every recompile hazard in one traced body,
+plus host syncs in the search path (host-sync rule)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def scores_topk(scores, *, k):
+    # BAD: host round-trip on a tracer
+    threshold = float(scores.max())
+    # BAD: .item() forces a device sync per call
+    first = scores.reshape(-1)[0].item()
+    # BAD: host numpy on traced values
+    logs = np.log(scores + 1.0)
+    return jnp.sort(logs.reshape(-1))[: k + int(threshold) + int(first)]
+
+
+def scan_driver(scores):
+    def body(carry, s):
+        # BAD: hazard inside a lax.scan body (traced without a decorator)
+        return carry + float(s.sum()), None
+
+    return jax.lax.scan(body, 0.0, scores)[0]
+
+
+def eager_edge(x):
+    # BAD twice: explicit host syncs in a hot-path module
+    host = jax.device_get(x)
+    x.block_until_ready()
+    return host

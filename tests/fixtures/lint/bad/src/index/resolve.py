@@ -1,0 +1,6 @@
+"""Known-bad fixture resolution: consumes only one of the two flags."""
+from index.backend import backend_supports
+
+
+def generator_for(name):
+    return "fast" if backend_supports(name, "consumed_cap") else "slow"

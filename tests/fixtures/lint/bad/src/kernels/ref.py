@@ -1,0 +1,5 @@
+"""Known-bad fixture oracles: deliberately missing toy_mul_ref."""
+
+
+def unrelated_ref(x):
+    return x

@@ -1,0 +1,19 @@
+"""Known-bad fixture: an oracle-less pallas kernel (kernel-oracle rule)."""
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def _toy_mul_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] * y_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def toy_mul_pallas(x, y, *, block=128, interpret=True):
+    # BAD: no toy_mul_ref in ref.py, no parity test anywhere
+    return pl.pallas_call(
+        _toy_mul_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x, y)

@@ -1,0 +1,14 @@
+"""Known-good fixture registry: every declared capability is consumed."""
+
+_REGISTRY = {}
+
+
+def register_scan_backend(name, *, priority, capabilities=()):
+    _REGISTRY[name] = (priority, frozenset(capabilities))
+
+
+def backend_supports(name, capability):
+    return name in _REGISTRY and capability in _REGISTRY[name][1]
+
+
+register_scan_backend("toy", priority=1, capabilities=("streaming_fast",))

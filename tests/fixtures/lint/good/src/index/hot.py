@@ -1,0 +1,18 @@
+"""Known-good fixture hot path: traced code with only trace-safe numpy
+(dtype objects / constants) and eager-edge host sync kept OUT of here."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def topk_stream(scores, *, k):
+    init = jnp.full((k,), np.inf, np.float32)
+
+    def step(carry, s):
+        merged = jnp.sort(jnp.concatenate([carry, s]))[:k]
+        return merged, None
+
+    return jax.lax.scan(step, init, scores)[0]

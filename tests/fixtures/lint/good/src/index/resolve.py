@@ -1,0 +1,8 @@
+"""Known-good fixture resolution path: consumes the declared capability."""
+from index.backend import backend_supports
+
+
+def generator_for(name):
+    if backend_supports(name, "streaming_fast"):
+        return "streaming"
+    return "materialized"

@@ -1,0 +1,5 @@
+"""Known-good fixture oracles."""
+
+
+def toy_add_ref(x, y):
+    return x + y

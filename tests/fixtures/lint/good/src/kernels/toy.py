@@ -1,0 +1,27 @@
+"""Known-good fixture: a pallas kernel with oracle + parity coverage."""
+import functools
+
+import jax
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _toy_add_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] + y_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def toy_add_pallas(x, y, *, block=128, interpret=True):
+    # trace-safe np usage: dtype objects resolve at trace time
+    assert x.dtype == np.float32
+    return pl.pallas_call(
+        _toy_add_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x, y)
+
+
+def scale_rows(x, w):
+    def step(carry, row):
+        return carry, row * w
+    return jax.lax.scan(step, None, x)[1]

@@ -1,0 +1,11 @@
+"""Parity harness fixture: references the oracle AND the pallas path.
+
+(Named parity_*.py, not test_*.py, so the real pytest run never collects
+fixture code.)
+"""
+from kernels.ref import toy_add_ref          # noqa: F401
+from kernels.toy import toy_add_pallas       # the pallas kernel under test
+
+
+def check_parity(x, y):
+    assert (toy_add_pallas(x, y) == toy_add_ref(x, y)).all()

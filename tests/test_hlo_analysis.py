@@ -102,6 +102,89 @@ ENTRY %main (p: bf16[4,4]) -> bf16[4,4] {
     assert stats["per_kind_bytes"]["all-gather"] == 8 * 4 * 2
 
 
+def test_unparsed_lines_are_counted_not_silently_skipped():
+    """Satellite: op lines matching no parser regex used to vanish from
+    the accounting — now they are counted and sampled."""
+    text = """
+HloModule t
+
+ENTRY %main (p: f32[4,4]) -> f32[4,4] {
+  %p = f32[4,4]{1,0} parameter(0)
+  this line is not an instruction at all
+  ROOT %r = f32[4,4]{1,0} add(%p, %p)
+}
+"""
+    stats = hlo.executed_cost(text)
+    assert stats["unparsed_lines"] == 1
+    comp, lineno, snippet = stats["unparsed_sample"][0]
+    assert comp == "main" and "not an instruction" in snippet
+    # clean module -> zero
+    clean = text.replace("  this line is not an instruction at all\n", "")
+    assert hlo.executed_cost(clean)["unparsed_lines"] == 0
+
+
+def test_narrow_dtype_bytes():
+    """Sub-byte ints bill at their packed width; fnuz float8 at 1 byte."""
+    text = """
+HloModule t
+
+ENTRY %main (p: s2[64,128]) -> s2[128,128] {
+  %p = s2[64,128]{1,0} parameter(0)
+  %f = f8e4m3fnuz[64,128]{1,0} all-reduce(%p), to_apply=%add
+  ROOT %ag = s2[128,128]{1,0} all-gather(%p), dimensions={0}
+}
+"""
+    stats = hlo.collective_bytes(text)
+    assert stats["per_kind_bytes"]["all-gather"] == 128 * 128 * 0.25
+    assert stats["per_kind_bytes"]["all-reduce"] == 64 * 128 * 1
+    assert hlo.executed_cost(text)["unknown_dtypes"] == []
+
+
+def test_unknown_dtypes_surface():
+    text = """
+HloModule t
+
+ENTRY %main (p: zz9[8,8]) -> zz9[8,8] {
+  %p = zz9[8,8]{1,0} parameter(0)
+  ROOT %r = zz9[8,8]{1,0} add(%p, %p)
+}
+"""
+    assert hlo.executed_cost(text)["unknown_dtypes"] == ["zz9"]
+
+
+def test_peak_buffer_bytes_excludes_passthrough():
+    """Peak reports the largest COMPUTE-op result; parameters and tuple
+    plumbing route existing buffers and do not count."""
+    text = """
+HloModule t
+
+ENTRY %main (p: f32[256,256]) -> f32[64,64] {
+  %p = f32[256,256]{1,0} parameter(0)
+  %t = (f32[256,256]{1,0}) tuple(%p)
+  %g = f32[256,256]{1,0} get-tuple-element(%t), index=0
+  %s = f32[64,64]{1,0} slice(%g), slice={[0:64], [0:64]}
+  ROOT %b = f32[64,64]{1,0} add(%s, %s)
+}
+"""
+    stats = hlo.executed_cost(text)
+    assert stats["peak_buffer_bytes"] == 64 * 64 * 4
+
+
+def test_iter_ops_yields_instructions():
+    text = """
+HloModule t
+
+ENTRY %main (p: f32[4,4]) -> f32[4,4] {
+  %p = f32[4,4]{1,0} parameter(0)
+  ROOT %r = f32[4,4]{1,0} add(%p, %p)
+}
+"""
+    ops = list(hlo.iter_ops(text))
+    assert [(o.comp, o.op) for o in ops] == [("main", "parameter"),
+                                             ("main", "add")]
+    assert ops[1].name == "r" and "f32[4,4]" in ops[1].shape
+
+
 def test_bytes_scale_with_scan():
     """Executed bytes must scale with the scan trip count (the whole point
     of the analyzer vs cost_analysis(), which counts the body once).
