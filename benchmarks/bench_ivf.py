@@ -18,6 +18,16 @@ Writes ``BENCH_ivf.json`` (repo root by default):
   * ``residual_study``  — the side-by-side recall@1/@10 deltas
                           (residual minus plain) per nprobe, plus the
                           two indexes' mean reconstruction MSE;
+  * ``ivf-dispatch/nprobe=P`` and ``ivf-padded/nprobe=P`` for
+                          P in {8, 32} — the two stage-1 faces head to
+                          head over the SAME index and probe (both
+                          bit-identical by contract, so only the cost
+                          model differs): qps, the per-batch plan cost
+                          (host-side padded plan build vs on-device
+                          router), the padded plan's padding-waste
+                          fraction (slots scored that are ragged pads)
+                          and the dispatch face's per-cell batch
+                          occupancy (routed pairs over bucketed slots);
   * ``headline``        — qps speedup of the best IVF point that holds
                           recall@10 within 0.02 of flat.
 
@@ -79,7 +89,11 @@ def _nprobe_sweep(ivf, tag, queries, gt, k, results):
     nlist = ivf.nlist
     for nprobe in _NPROBES:
         nprobe = min(nprobe, nlist)
-        got, us = _timed_search(ivf, queries, k, nprobe=nprobe)
+        # pinned to the padded face: these rows are the longitudinal
+        # recall/qps trajectory (the faces are bit-identical; the
+        # dispatch-vs-padded cost model has its own head-to-head rows)
+        got, us = _timed_search(ivf, queries, k, nprobe=nprobe,
+                                use_dispatch=False)
         rec = recall_at_k(got, gt, ks=(1, 10))
         probed, width = _probe_stats(ivf, queries, nprobe)
         results["paths"][f"{tag}/nprobe={nprobe}"] = {
@@ -92,6 +106,60 @@ def _nprobe_sweep(ivf, tag, queries, gt, k, results):
                     f"R@1={rec['recall@1']:.3f} "
                     f"R@10={rec['recall@10']:.3f} "
                     f"probed={probed * 100:.1f}%")
+
+
+def _dispatch_sweep(ivf, queries, k, results):
+    """Dispatch face vs padded face over the same index: search qps plus
+    the per-batch plan cost each face pays (host numpy plan build vs
+    on-device routing) and each face's waste metric."""
+    from repro.index.dispatch import build_dispatch
+
+    reps = 5
+    for nprobe in (8, 32):
+        nprobe = min(nprobe, ivf.nlist)
+        probe_dev, _ = ivf._probe_with_dists(queries, nprobe)
+        probe = np.asarray(probe_dev)
+        q, p = probe.shape
+
+        # padded face: host plan build (cold, memo cleared) + waste
+        t0 = time.time()
+        for _ in range(reps):
+            ivf._plan_cache = {}
+            rows, gids, _ = ivf._probe_plan(probe)
+        plan_ms = (time.time() - t0) * 1e3 / reps
+        real = int((gids != np.iinfo(np.int32).max).sum())
+        waste = 1.0 - real / float(gids.size)
+        _, us = _timed_search(ivf, queries, k, nprobe=nprobe,
+                              use_dispatch=False)
+        results["paths"][f"ivf-padded/nprobe={nprobe}"] = {
+            "us_per_query": round(us, 1), "qps": round(1e6 / us, 1),
+            "plan_build_ms": round(plan_ms, 3),
+            "padding_waste_frac": round(waste, 4),
+            "plan_width": int(rows.shape[1])}
+        common.emit(f"ivf-padded/nprobe={nprobe}", us,
+                    f"plan={plan_ms:.2f}ms waste={waste * 100:.1f}%")
+
+        # dispatch face: on-device router + per-cell batch occupancy
+        routing, stats = build_dispatch(probe_dev, ivf._offsets_dev)
+        t0 = time.time()
+        for _ in range(reps):
+            routing, stats = build_dispatch(probe_dev, ivf._offsets_dev)
+            jax.block_until_ready(routing.plan.qidx)
+        route_ms = (time.time() - t0) * 1e3 / reps
+        qidx = np.asarray(routing.plan.qidx)
+        routed = int((qidx >= 0).sum())
+        occupancy = routed / float((qidx.shape[0] - 1) * qidx.shape[1])
+        _, us = _timed_search(ivf, queries, k, nprobe=nprobe,
+                              use_dispatch=True)
+        results["paths"][f"ivf-dispatch/nprobe={nprobe}"] = {
+            "us_per_query": round(us, 1), "qps": round(1e6 / us, 1),
+            "route_ms": round(route_ms, 3),
+            "batch_occupancy": round(occupancy, 4),
+            "routed_cells": int(stats[0]),
+            "cap": int(qidx.shape[1])}
+        common.emit(f"ivf-dispatch/nprobe={nprobe}", us,
+                    f"route={route_ms:.2f}ms occ={occupancy * 100:.1f}% "
+                    f"E={stats[0]}")
 
 
 def run(scale: str = "quick", out_path: str | None = None) -> dict:
@@ -127,6 +195,7 @@ def run(scale: str = "quick", out_path: str | None = None) -> dict:
 
     _nprobe_sweep(ivf, "ivf", queries, gt, k, results)
     _nprobe_sweep(res, "ivf-res", queries, gt, k, results)
+    _dispatch_sweep(ivf, queries, k, results)
 
     # residual-vs-plain at matched code budget: per-nprobe recall deltas
     study = {"code_bytes_per_vector": int(np.asarray(ivf.codes).shape[1]),
@@ -154,7 +223,8 @@ def run(scale: str = "quick", out_path: str | None = None) -> dict:
     flat_row = results["paths"]["flat"]
     eligible = {
         name: p for name, p in results["paths"].items()
-        if "/" in name and p["recall@10"] >= flat_row["recall@10"] - 0.02}
+        if "/" in name and "recall@10" in p
+        and p["recall@10"] >= flat_row["recall@10"] - 0.02}
     best = max(eligible, key=lambda n: eligible[n]["qps"], default=None)
     results["headline"] = {
         "best": best,

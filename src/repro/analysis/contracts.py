@@ -360,6 +360,86 @@ def _build_stage2_vmap_control(p):
         cand, queries, table).compile()
 
 
+def _dispatch_shapes(p):
+    """Shared abstract-shape set of the cell-batched dispatch face."""
+    return (
+        _SDS((p["N"], p["M"]), jnp.uint8),          # cell-grouped codes
+        _SDS((p["N"],), jnp.int32),                 # row -> global id
+        _SDS((p["N"],), jnp.float32),               # rowbias stream
+        _SDS((p["Q"], p["M"], p["K"]), jnp.float32),
+        _SDS((p["EB"] + 1, p["CAP"]), jnp.float32),  # cellterm
+        _SDS((p["EB"] + 1, p["CAP"]), jnp.int32),    # qidx
+        _SDS((p["T"],), jnp.int32),                  # tile_e
+        _SDS((p["T"],), jnp.int32),                  # tile_block
+        _SDS((p["T"],), jnp.int32),                  # tile_first
+        _SDS((p["T"],), jnp.int32),                  # tile_lo
+        _SDS((p["T"],), jnp.int32),                  # tile_hi
+    )
+
+
+def _build_stage1_dispatch(p, impl):
+    from repro.kernels import ops
+    from repro.kernels.dispatch_topl import DispatchPlan
+
+    def f(codes, ids, rowbias, luts, cellterm, qidx, te, tb, tf, tlo, thi):
+        plan = DispatchPlan(qidx, te, tb, tf, tlo, thi)
+        return ops.adc_dispatch_topl(codes, ids, rowbias, luts, cellterm,
+                                     plan, topl=p["L"], impl=impl,
+                                     chunk=p["CHUNK"])
+
+    return jax.jit(f).lower(*_dispatch_shapes(p)).compile()
+
+
+def _build_dispatch_materialized(p):
+    from repro.kernels import ref
+    codes, ids, rowbias, luts, cellterm, qidx, *_ = _dispatch_shapes(p)
+    lo = _SDS((p["EB"] + 1,), jnp.int32)
+    hi = _SDS((p["EB"] + 1,), jnp.int32)
+
+    def f(c, i, rb, l, ct, q, a, b):
+        return ref.adc_dispatch_topl_ref(c, i, rb, l, ct, q, a, b, p["L"])
+
+    return jax.jit(f).lower(codes, ids, rowbias, luts, cellterm, qidx,
+                            lo, hi).compile()
+
+
+def _build_ivf_router(p):
+    from repro.index import dispatch
+    probe = _SDS((p["Q"], p["P"]), jnp.int32)
+    offsets = _SDS((p["NLIST"] + 1,), jnp.int32)
+
+    def f(pr, off):
+        return dispatch._route(pr, off, e_b=p["EB"], cap=p["CAP"],
+                               t_b=p["T"], chunk=p["CHUNK"])
+
+    return jax.jit(f).lower(probe, offsets).compile()
+
+
+def _build_sharded_stage1_dispatch(p):
+    from repro.parallel import search as ps
+    devices = jax.devices()[:2]
+    mesh = jax.sharding.Mesh(np.asarray(devices), ("shard",))
+    ns = p["N"] // 2
+    fn = ps._device_dispatch_fn(mesh, p["L"], "xla", False)
+    two = lambda s, dt: _SDS((2,) + s, dt)
+    args = (
+        two((ns, p["M"]), jnp.uint8),                 # codes
+        two((ns,), jnp.int32),                        # ids
+        two((ns,), jnp.float32),                      # rowbias
+        two((p["EB"] + 1, p["CAP"]), jnp.int32),      # qidx
+        two((p["T"],), jnp.int32),                    # tile_e
+        two((p["T"],), jnp.int32),                    # tile_block
+        two((p["T"],), jnp.int32),                    # tile_first
+        two((p["T"],), jnp.int32),                    # tile_lo
+        two((p["T"],), jnp.int32),                    # tile_hi
+        two((p["Q"], p["P"]), jnp.int32),             # comb_e
+        two((p["Q"], p["P"]), jnp.int32),             # comb_slot
+        two((p["EB"] + 1, p["CAP"]), jnp.float32),    # cellterm
+        _SDS((p["Q"], p["M"], p["K"]), jnp.float32),  # luts (replicated)
+    )
+    return fn.lower(*args).compile()
+
+
 def _build_sharded_stage1(p):
     from repro.parallel import search as ps
     devices = jax.devices()[:2]
@@ -483,6 +563,69 @@ register(Contract(
     build=_build_stage2_vmap_control,
     buckets=({"Q": 8, "L": 128, "M": 8, "K": 64, "D": 96},),
     require=(("f32", ("Q", "L", "D")),),
+))
+
+register(Contract(
+    path_id="stage1.dispatch.xla",
+    description="cell-batched dispatch scan (chunked lax.scan over the "
+                "routed tile work-list): no (Q, N) score matrix and no "
+                "(E+1, cap, N) materialized per-cell batch",
+    build=lambda p: _build_stage1_dispatch(p, "xla"),
+    buckets=({"Q": 8, "N": 2048, "M": 8, "K": 64, "L": 32, "EB": 8,
+              "CAP": 8, "T": 32, "CHUNK": 128},
+             {"Q": 8, "N": 1920, "M": 4, "K": 32, "L": 16, "EB": 4,
+              "CAP": 16, "T": 16, "CHUNK": 128}),
+    forbid=(("f32", ("Q", "N")), ("f32", ("EB+1", "CAP", "N"))),
+))
+
+register(Contract(
+    path_id="stage1.dispatch.pallas",
+    description="fused dispatch kernel (interpret off-TPU): no (Q, N) "
+                "score matrix and no (E+1, cap, N) per-cell batch in the "
+                "kernel HLO",
+    build=lambda p: _build_stage1_dispatch(p, "pallas"),
+    buckets=({"Q": 8, "N": 2048, "M": 8, "K": 64, "L": 32, "EB": 8,
+              "CAP": 8, "T": 32, "CHUNK": 128},),
+    forbid=(("f32", ("Q", "N")), ("f32", ("EB+1", "CAP", "N"))),
+))
+
+register(Contract(
+    path_id="stage1.dispatch.control",
+    description="DETECTOR CONTROL: the materialized dispatch oracle must "
+                "show the (E+1, cap, N) per-cell score batch the dispatch "
+                "contracts forbid",
+    build=_build_dispatch_materialized,
+    buckets=({"Q": 8, "N": 1024, "M": 4, "K": 32, "L": 16, "EB": 4,
+              "CAP": 8, "T": 16, "CHUNK": 128},),
+    require=(("f32", ("EB+1", "CAP", "N")),),
+))
+
+register(Contract(
+    path_id="ivf.router",
+    description="device-resident probe router: pure on-device jnp/lax "
+                "(no host transfers), emits the bucketed s32[E+1, cap] "
+                "query-batch table and never touches a score-sized buffer",
+    build=_build_ivf_router,
+    buckets=({"Q": 16, "P": 4, "NLIST": 32, "EB": 8, "CAP": 8, "T": 16,
+              "CHUNK": 128},
+             {"Q": 64, "P": 8, "NLIST": 64, "EB": 16, "CAP": 32, "T": 64,
+              "CHUNK": 128}),
+    require=(("s32", ("EB+1", "CAP")),),
+    # the router's entire working set is O(Q*P) index arithmetic
+    max_temp=lambda p: 64 * p["Q"] * p["P"] + 4096,
+))
+
+register(Contract(
+    path_id="sharded.stage1.dispatch",
+    description="shard_map dispatch stage 1: per-shard routed scan + "
+                "local combine, exactly one collective kind (the (D, Q, L) "
+                "pool all-gather), no (Q, N) or (Q, N/2) matrix",
+    build=_build_sharded_stage1_dispatch,
+    buckets=({"Q": 8, "P": 4, "N": 2048, "M": 4, "K": 32, "L": 16,
+              "EB": 4, "CAP": 8, "T": 16},),
+    forbid=(("f32", ("Q", "N")), ("f32", ("Q", "N//2"))),
+    collectives=frozenset({"all-gather"}),
+    min_devices=2,
 ))
 
 register(Contract(

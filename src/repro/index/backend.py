@@ -35,6 +35,12 @@ resolves against instead of branching on backend names:
     and ||q - recon||^2 reduces in place, so the (Q, L, D)
     reconstruction never exists. Streaming backends without it use the
     chunked ``lax.scan`` rerank with the same guarantee.
+  * ``dispatch_topl``  — the backend has a cell-batched IVF stage-1 face
+    (``ops.adc_dispatch_topl``): probed cells are routed MoE-style into
+    dense per-cell query batches on device and each cell's contiguous
+    code range is streamed once for all co-probing queries, replacing
+    the host-built padded plan. Backends without it (onehot — its IVF
+    formulation IS the materialized full scan) keep the gathered path.
 """
 from __future__ import annotations
 
@@ -117,11 +123,12 @@ def _on_tpu() -> bool:
 register_scan_backend(
     "xla", priority=0,
     description="pure-jnp gather oracle (always available)",
-    capabilities=("streaming_topl",))
+    capabilities=("streaming_topl", "dispatch_topl"))
 register_scan_backend(
     "onehot", priority=10, auto_select=lambda: False,
     description="one-hot matmul formulation in plain XLA (A/B target)")
 register_scan_backend(
     "pallas", priority=100, auto_select=_on_tpu,
     description="fused Pallas TPU kernel (interpret mode off-TPU)",
-    capabilities=("streaming_topl", "fused_topl", "fused_rerank"))
+    capabilities=("streaming_topl", "fused_topl", "fused_rerank",
+                  "dispatch_topl"))

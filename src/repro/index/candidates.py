@@ -31,6 +31,14 @@ instead of the whole database. Streaming backends ride
 materialized path scores the full buffer with its own formulation and
 gathers the slots — which keeps IVF-at-full-probe bit-identical to flat
 search PER BACKEND, reassociated onehot reductions included.
+
+``dispatch_topl`` is the cell-batched face of the same IVF stage 1
+(backends with the ``dispatch_topl`` capability): instead of per-query
+slot lists, the device router (``repro.index.dispatch``) batches the
+queries probing each cell and ``ops.adc_dispatch_topl`` streams every
+probed cell's contiguous code range exactly once — same scores, same tie
+semantics, no host-side plan. ``supports_dispatch`` is the capability
+gate ``IVFIndex.search`` resolves its default against.
 """
 from __future__ import annotations
 
@@ -69,6 +77,20 @@ class CandidateGenerator(abc.ABC):
         rowbias None | (Q, W) -> (scores, global ids), each
         (Q, min(topl, W)), sorted by (score asc, gid asc); +inf entries
         carry the canonical ``_IMAX`` id."""
+
+    def dispatch_topl(self, codes, gids_rows, rowbias, luts, cellterm,
+                      plan, *, topl: int, qkeep=None):
+        """Cell-batched (MoE-routed) IVF stage 1: codes (N, M)
+        cell-grouped buffer, gids_rows (N,) row -> global id, rowbias
+        None | (N,) per-row bias, luts (Q, M, K), cellterm (E+1, cap)
+        per-(routed cell, slot) bias, plan a
+        ``repro.index.dispatch.DispatchPlan``, qkeep None | (Q, N) keep
+        stream -> per-cell partial pools ((E+1, cap, L) scores / global
+        ids) for ``dispatch.combine_pools``. Only backends declaring the
+        ``dispatch_topl`` capability implement it."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no cell-batched dispatch face; "
+            "gate callers on supports_dispatch(backend)")
 
     def __repr__(self):
         return f"{type(self).__name__}(impl={self.impl!r})"
@@ -132,6 +154,12 @@ class StreamingTopL(CandidateGenerator):
         return ops.adc_gather_topl(codes, rows, gids, luts, topl=topl,
                                    rowbias=rowbias, impl=self.impl)
 
+    def dispatch_topl(self, codes, gids_rows, rowbias, luts, cellterm,
+                      plan, *, topl: int, qkeep=None):
+        return ops.adc_dispatch_topl(codes, gids_rows, rowbias, luts,
+                                     cellterm, plan, topl=topl,
+                                     qkeep=qkeep, impl=self.impl)
+
 
 def candidate_generator_for(backend: str | None = "auto") -> CandidateGenerator:
     """Resolve an index's backend request to a stage-1 generator.
@@ -148,6 +176,13 @@ def candidate_generator_for(backend: str | None = "auto") -> CandidateGenerator:
         return StreamingTopL(
             "pallas" if backend_supports(impl, "fused_topl") else "xla")
     return MaterializedTopL(impl)
+
+
+def supports_dispatch(backend: str | None = "auto") -> bool:
+    """True when the resolved backend has the cell-batched dispatch face
+    (``dispatch_topl`` capability) — what ``IVFIndex.search`` keys its
+    dispatch-vs-padded default on."""
+    return backend_supports(resolve_scan_backend(backend), "dispatch_topl")
 
 
 def merge_topl(scores, ids, topl: int):

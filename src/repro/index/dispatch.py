@@ -1,0 +1,252 @@
+"""Device-resident MoE-style probe routing for IVF (cells = experts,
+probed queries = routed tokens).
+
+The padded gathered path builds its (Q, W) ragged plan host-side in numpy
+on every search call. This module replaces that hot-path host work with
+two jitted ``jnp``/``lax`` passes over the (Q, nprobe) probe matrix and
+the CSR cell offsets — no host numpy, no per-batch plan transfer:
+
+  1. ``_route_stats`` — one segment-sort pass that measures the routing:
+     how many distinct cells are probed (E), the largest co-probing query
+     batch (cap) and the chunk-aligned tile count (T). The three scalars
+     cross to the host ONCE at the API edge and are bucketed on
+     ENCODE_BUCKETS-style power-of-two ladders, so compile count stays
+     logarithmic in traffic shape, not linear.
+  2. ``_route`` — the bucketed dispatch build (static E/cap/T): a stable
+     segment sort of the flattened probe pairs yields each distinct
+     cell's dense query batch (``qidx``), the scatter map back from
+     (cell, slot) partials to per-query pools (``comb_e``/``comb_slot``),
+     and the chunk-aligned tile work-list the kernels execute
+     (``kernels.dispatch_topl.DispatchPlan``).
+
+Capacity semantics: by default every routed (query, cell) pair keeps its
+slot — ``cap`` buckets the TRUE maximum batch, so routing is lossless and
+the dispatch face stays bit-identical to the padded path. An explicit
+``capacity_factor`` (the MoE knob: slots per cell ~ factor * Q * P / E)
+bounds the batch instead; a dropped pair cannot be proven non-top-L, so
+exceeding the bound never drops silently — ``build_dispatch`` reports the
+overflow and the caller falls back LOUDLY to the padded path.
+
+``combine_pools`` is the scatter-merge back: per-query gathers of the
+per-cell partial top-Ls, merged by the exact lexicographic
+(score, global id) ``candidates.merge_topl`` — the same merge the sharded
+paths trust, so the final pools are bit-identical to the padded plan's.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.dispatch_topl import (DispatchPlan,
+                                         DEFAULT_DISPATCH_CHUNK)
+
+_IMAX = np.iinfo(np.int32).max
+
+
+class Routing(NamedTuple):
+    """A routed probe batch: the kernel work-list plus the index-layer
+    side state (scatter-back maps, per-cell ranges, overflow count)."""
+    plan: DispatchPlan
+    cell_of: jax.Array    # (E+1,) i32 routed cell ids, -1 = unused row
+    cell_lo: jax.Array    # (E+1,) i32 buffer row range per routed cell
+    cell_hi: jax.Array
+    comb_e: jax.Array     # (Q, P) i32 routed-cell row of each probe pair
+    comb_slot: jax.Array  # (Q, P) i32 slot within the cell's query batch
+    overflow: jax.Array   # () i32 pairs dropped by the capacity bound
+
+
+def _bucket(n: int, floor: int = 8) -> int:
+    """Power-of-two shape bucket (ENCODE_BUCKETS-style compile ladder)."""
+    b = floor
+    while b < n:
+        b *= 2
+    return b
+
+
+def _segments(flat, order):
+    """Shared segment machinery over the cell-sorted probe pairs:
+    (sorted cells, first-of-segment mask, segment index, rank within
+    segment) — all (Q*P,)."""
+    sc = flat[order]
+    idx = jnp.arange(flat.shape[0], dtype=jnp.int32)
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), sc[1:] != sc[:-1]])
+    seg = jnp.cumsum(first.astype(jnp.int32)) - 1
+    start = jax.lax.cummax(jnp.where(first, idx, 0))
+    return sc, first, seg, idx - start
+
+
+def _cell_tiles(lo, hi, active, chunk: int):
+    """Chunk-ALIGNED tile counts per routed cell: tiles cover
+    [lo // chunk * chunk, hi) so a tile index is directly a block index
+    into the cell-grouped code buffer (empty active cells keep one tile —
+    uniform heap init; inactive rows get none)."""
+    a0 = lo // chunk
+    span = hi - a0 * chunk
+    ntiles = jnp.maximum(-(-span // chunk), 1)
+    return a0, jnp.where(active, ntiles, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def _route_stats(probe, offsets, *, chunk: int):
+    """(E, cap, T) routing measurements as one (3,) device vector — the
+    single host sync of the dispatch path, read at the API edge."""
+    flat = probe.reshape(-1).astype(jnp.int32)
+    order = jnp.argsort(flat, stable=True)
+    sc, first, seg, rank = _segments(flat, order)
+    e_count = seg[-1] + 1
+    cap_needed = jnp.max(rank) + 1
+    lo = jnp.take(offsets, sc)
+    hi = jnp.take(offsets, sc + 1)
+    _, ntiles = _cell_tiles(lo, hi, jnp.ones_like(lo, bool), chunk)
+    t_count = jnp.sum(jnp.where(first, ntiles, 0))
+    return jnp.stack([e_count, cap_needed, t_count])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("e_b", "cap", "t_b", "chunk"))
+def _route(probe, offsets, *, e_b: int, cap: int, t_b: int, chunk: int):
+    """The bucketed dispatch build (see module doc). Shapes are static in
+    (e_b, cap, t_b, chunk); every dynamic quantity lives in array values,
+    so one compile serves every batch that lands in the same buckets."""
+    q, p = probe.shape
+    qp = q * p
+    flat = probe.reshape(-1).astype(jnp.int32)
+    order = jnp.argsort(flat, stable=True)
+    sc, first, seg, rank = _segments(flat, order)
+    sq = (jnp.arange(qp, dtype=jnp.int32) // p)[order]
+
+    kept = (rank < cap) & (seg < e_b)
+    dest_e = jnp.where(kept, seg, e_b)            # dropped pairs -> dummy row
+    dest_c = jnp.where(kept, rank, 0)
+    qidx = jnp.full((e_b + 1, cap), -1, jnp.int32).at[dest_e, dest_c].set(sq)
+    qidx = qidx.at[e_b, :].set(-1)
+    cell_of = jnp.full((e_b + 1,), -1, jnp.int32).at[
+        jnp.where(first & (seg < e_b), seg, e_b)].set(sc)
+    cell_of = cell_of.at[e_b].set(-1)
+    safe_cell = jnp.clip(cell_of, 0, offsets.shape[0] - 2)
+    active = cell_of >= 0
+    cell_lo = jnp.where(active, jnp.take(offsets, safe_cell), 0)
+    cell_hi = jnp.where(active, jnp.take(offsets, safe_cell + 1), 0)
+
+    # scatter the routing back to probe order: where did pair (q, p) land?
+    comb_e = jnp.zeros((qp,), jnp.int32).at[order].set(
+        jnp.where(kept, seg, -1)).reshape(q, p)
+    comb_slot = jnp.zeros((qp,), jnp.int32).at[order].set(
+        dest_c).reshape(q, p)
+    overflow = qp - jnp.sum(kept.astype(jnp.int32))
+
+    # chunk-aligned tile work-list: cells in routed order, tiles of one
+    # cell consecutive (the kernels' heap-residency contract), pads last
+    a0, ntiles = _cell_tiles(cell_lo, cell_hi, active, chunk)
+    cum = jnp.cumsum(ntiles)
+    t_idx = jnp.arange(t_b, dtype=jnp.int32)
+    te = jnp.clip(jnp.searchsorted(cum, t_idx, side="right"),
+                  0, e_b).astype(jnp.int32)
+    prev = jnp.where(te > 0, jnp.take(cum, jnp.maximum(te - 1, 0)), 0)
+    within = t_idx - prev
+    valid = t_idx < cum[-1]
+    plan = DispatchPlan(
+        qidx=qidx,
+        tile_e=jnp.where(valid, te, e_b).astype(jnp.int32),
+        tile_block=jnp.where(valid, jnp.take(a0, te) + within,
+                             0).astype(jnp.int32),
+        tile_first=(valid & (within == 0)).astype(jnp.int32),
+        tile_lo=jnp.where(valid, jnp.take(cell_lo, te), 0).astype(jnp.int32),
+        tile_hi=jnp.where(valid, jnp.take(cell_hi, te), 0).astype(jnp.int32))
+    return Routing(plan, cell_of, cell_lo, cell_hi, comb_e, comb_slot,
+                   overflow.astype(jnp.int32))
+
+
+def route_stats(probe, offsets, *, chunk: int = DEFAULT_DISPATCH_CHUNK):
+    """Measure a probe batch's routing: (E, cap_needed, T) host ints."""
+    stats = np.asarray(_route_stats(jnp.asarray(probe),
+                                    jnp.asarray(offsets, jnp.int32),
+                                    chunk=chunk))
+    return int(stats[0]), int(stats[1]), int(stats[2])
+
+
+def build_dispatch(probe, offsets, *, chunk: int = DEFAULT_DISPATCH_CHUNK,
+                   capacity_factor: float | None = None):
+    """Route one probe batch. Returns (Routing | None, stats) where stats
+    is the measured (E, cap_needed, T).
+
+    With the default ``capacity_factor=None`` the slot capacity buckets
+    the TRUE maximum co-probing batch — nothing is ever dropped and the
+    dispatch face is exactly the padded path. An explicit factor bounds
+    capacity at ``ceil(factor * Q * P / E)``; a batch that exceeds it
+    returns ``None`` (the caller's loud fallback) instead of silently
+    dropping candidates that cannot be proven non-top-L.
+    """
+    probe = jnp.asarray(probe)
+    offsets = jnp.asarray(offsets, jnp.int32)
+    q, p = probe.shape
+    e_count, cap_needed, t_count = route_stats(probe, offsets, chunk=chunk)
+    if capacity_factor is not None:
+        limit = max(1, -(-int(capacity_factor * q * p) // max(e_count, 1)))
+        if cap_needed > limit:
+            return None, (e_count, cap_needed, t_count)
+    routing = _route(probe, offsets, e_b=_bucket(e_count),
+                     cap=_bucket(cap_needed), t_b=_bucket(t_count),
+                     chunk=chunk)
+    return routing, (e_count, cap_needed, t_count)
+
+
+def build_shard_dispatch(probe, offsets, bounds, *,
+                         chunk: int = DEFAULT_DISPATCH_CHUNK):
+    """Per-shard routings for the cell-sharded device face.
+
+    offsets the FULL host CSR (nlist + 1,); bounds the ``num_shards + 1``
+    monotone cell boundaries of the by-cell sharding. Each shard routes
+    the SAME global probe against its clip-restricted offsets
+    (``clip(offsets, row_lo, row_hi) - row_lo``): cells the shard does
+    not own become empty spans, so no probe masking is needed and the
+    routed slot layout stays aligned across shards. All shards share one
+    set of shape buckets (the max of the per-shard measurements, fetched
+    in a single host sync), so their plan fields stack into the (S, ...)
+    arrays one SPMD program consumes.
+
+    Returns [Routing] of length ``len(bounds) - 1``. No capacity factor
+    here: the sharded face always routes losslessly (per-shard drops
+    could not fall back shard-locally without desyncing the SPMD step).
+    """
+    probe = jnp.asarray(probe)
+    off_np = np.asarray(offsets, np.int64)
+    clipped = []
+    for s in range(len(bounds) - 1):
+        row_lo = int(off_np[bounds[s]])
+        row_hi = int(off_np[bounds[s + 1]])
+        clipped.append(np.clip(off_np, row_lo, row_hi) - row_lo)
+    offs = jnp.asarray(np.stack(clipped), jnp.int32)
+    stats = np.asarray(jax.vmap(
+        lambda o: _route_stats(probe, o, chunk=chunk))(offs))
+    e_b = _bucket(int(stats[:, 0].max()))
+    cap = _bucket(int(stats[:, 1].max()))
+    t_b = _bucket(int(stats[:, 2].max()))
+    return [_route(probe, offs[s], e_b=e_b, cap=cap, t_b=t_b, chunk=chunk)
+            for s in range(offs.shape[0])]
+
+
+@functools.partial(jax.jit, static_argnames=("topl",))
+def combine_pools(partial_s, partial_g, comb_e, comb_slot, *, topl: int):
+    """Scatter-merge per-cell partial top-Ls back to per-query pools.
+
+    partial_s/partial_g (E+1, cap, L) from ``ops.adc_dispatch_topl``,
+    comb_e/comb_slot (Q, P) from the routing (-1 = dropped pair) ->
+    (scores, gids), each (Q, min(topl, P*L)), sorted by (score asc,
+    global id asc) — the exact lexicographic merge, so the result is
+    bit-identical to the padded gathered path over the same probe.
+    """
+    from repro.index.candidates import merge_topl
+    q, p = comb_e.shape
+    l = partial_s.shape[-1]
+    safe_e = jnp.where(comb_e >= 0, comb_e, partial_s.shape[0] - 1)
+    ps = partial_s[safe_e, comb_slot]                     # (Q, P, L)
+    pg = partial_g[safe_e, comb_slot]
+    ps = jnp.where((comb_e >= 0)[..., None], ps, jnp.inf)
+    pg = jnp.where(jnp.isposinf(ps), _IMAX, pg)
+    return merge_topl(ps.reshape(q, p * l), pg.reshape(q, p * l), topl)

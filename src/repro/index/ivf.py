@@ -14,12 +14,27 @@ quantizer with ``nlist`` cells:
     list) — no per-cell Python lists, so the probed cells of a whole
     query batch concatenate into a single padded (Q, W) ragged plan;
   * ``search`` ranks centroids per query, takes the top ``nprobe``
-    cells, builds the ragged plan (slot -> buffer row + global id +
-    cell, sorted by global id, pads marked ``_IMAX``) host-side from the
-    CSR offsets, and hands it to the stage-1 engine's gathered face
-    (``CandidateGenerator.gather_topl`` -> ``ops.adc_gather_topl``):
-    fused Pallas kernel, chunked xla, or the materialized control —
-    all bit-identical.
+    cells, and feeds the stage-1 engine through one of two faces:
+
+      - **dispatch** (backends with the ``dispatch_topl`` capability,
+        the default there): the MoE-style device router
+        (``repro.index.dispatch``) turns the (Q, nprobe) probe matrix +
+        CSR offsets into dense per-cell query batches ON DEVICE — no
+        host numpy, no padded-plan transfer — ``ops.adc_dispatch_topl``
+        streams each probed cell's contiguous code range exactly once
+        for all co-probing queries, and ``dispatch.combine_pools``
+        scatter-merges the per-cell partial top-Ls back to per-query
+        pools. A ``dispatch_capacity`` factor bounds the per-cell batch;
+        overflow falls back LOUDLY to the padded path (never silent
+        candidate drops).
+      - **padded** (the retained oracle/control, and the fallback):
+        builds the ragged plan (slot -> buffer row + global id + cell,
+        sorted by global id, pads marked ``_IMAX``) host-side from the
+        CSR offsets and hands it to the gathered face
+        (``CandidateGenerator.gather_topl`` -> ``ops.adc_gather_topl``).
+
+    Fused Pallas kernel, chunked xla, or the materialized control —
+    all faces bit-identical, tie semantics included.
 
 Exactness: a slot's score is computed with the same per-point math as the
 flat scan (same left-to-right codebook chain / one-hot contraction on the
@@ -66,6 +81,7 @@ cross-query dedup) exactly like a flat index; residual indexes resolve a
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -73,7 +89,7 @@ import numpy as np
 
 from repro.core.baselines import kmeans
 from repro.index import base
-from repro.index.candidates import candidate_generator_for
+from repro.index.candidates import candidate_generator_for, supports_dispatch
 
 _IMAX = np.iinfo(np.int32).max
 
@@ -95,7 +111,8 @@ class IVFIndex(base.Index):
 
     def __init__(self, dim: int, *, inner: base.Index, nlist: int,
                  nprobe: int = 8, rerank: int = 0, backend: str = "auto",
-                 residual: bool = False):
+                 residual: bool = False,
+                 dispatch_capacity: float | None = None):
         super().__init__(dim, rerank=rerank, backend=backend)
         if nlist < 1:
             raise ValueError(f"nlist must be >= 1, got {nlist}")
@@ -106,13 +123,21 @@ class IVFIndex(base.Index):
         self.nlist = nlist
         self.nprobe = nprobe
         self.residual = bool(residual)
+        #: MoE capacity factor for the dispatch face: None = lossless
+        #: (capacity covers the true max per-cell batch); a float bounds
+        #: slots per cell at ~factor * Q * nprobe / E, with capacity
+        #: overflow falling back loudly to the padded plan
+        self.dispatch_capacity = dispatch_capacity
         self.coarse: jax.Array | None = None     # (nlist, dim) centroids
         # cell-grouped buffer state (parallel to self._codes / self._bias)
         self._ids_np: np.ndarray | None = None   # (N,) buffer row -> gid
         self._cells_np: np.ndarray | None = None  # (N,) buffer row -> cell
         self._cells_dev: jax.Array | None = None  # device copy of the above
         self._offsets: np.ndarray | None = None  # (nlist + 1,) CSR
+        self._offsets_dev: jax.Array | None = None  # device CSR (router)
+        self._ids_dev: jax.Array | None = None   # device row -> gid
         self._pos_dev: jax.Array | None = None   # (N,) gid -> buffer row
+        self._plan_cache: dict = {}              # padded-plan memo
         # residual-mode caches (dropped by _invalidate_caches)
         self._crosslut = None                    # (nlist, M, K) cross-LUT
         self._res_table = None                   # (M+1, K', D) stage-2 table
@@ -181,6 +206,7 @@ class IVFIndex(base.Index):
         self._crosslut = None
         self._res_table = None
         self._res_rerank_fn = None
+        self._plan_cache = {}
 
     # -- residual machinery --------------------------------------------------
 
@@ -273,16 +299,18 @@ class IVFIndex(base.Index):
         matrix it was ranked by — the single implementation behind
         ``probe_cells``, ``search`` and the sharded IVF stage 1 (the
         matrix doubles as the residual correction's per-(query, cell)
-        bias, so callers never recompute it)."""
+        bias, so callers never recompute it). The probe stays a DEVICE
+        array: the dispatch face routes it without a host round-trip;
+        the padded plan builder converts at its own edge."""
         cd = self._coarse_dists(jnp.asarray(queries))
         nprobe = max(1, min(int(nprobe), self.nlist))
         _, cells = jax.lax.top_k(-cd, nprobe)
-        return np.asarray(cells), cd
+        return cells, cd
 
     def probe_cells(self, queries, nprobe: int) -> np.ndarray:
         """Per-query top-``nprobe`` coarse cells, (Q, nprobe) int32
         (closest centroid first)."""
-        return self._probe_with_dists(queries, nprobe)[0]
+        return np.asarray(self._probe_with_dists(queries, nprobe)[0])
 
     def _stage1_luts(self, queries, probe: np.ndarray) -> jax.Array:
         """Per-query stage-1 score tables. Residual DECODER quantizers
@@ -302,7 +330,10 @@ class IVFIndex(base.Index):
         self._cells_np = None
         self._cells_dev = None
         self._offsets = None
+        self._offsets_dev = None
+        self._ids_dev = None
         self._pos_dev = None
+        self._plan_cache = {}
 
     def with_codes(self, codes, bias=None):
         raise NotImplementedError(
@@ -359,9 +390,12 @@ class IVFIndex(base.Index):
         counts = np.bincount(self._cells_np, minlength=self.nlist)
         self._offsets = np.concatenate(
             [[0], np.cumsum(counts)]).astype(np.int64)
+        self._offsets_dev = jnp.asarray(self._offsets, jnp.int32)
+        self._ids_dev = jnp.asarray(self._ids_np)
         pos = np.empty(self.ntotal, np.int32)
         pos[self._ids_np] = np.arange(self.ntotal, dtype=np.int32)
         self._pos_dev = jnp.asarray(pos)
+        self._plan_cache = {}
         return self
 
     # -- probing -------------------------------------------------------------
@@ -380,7 +414,18 @@ class IVFIndex(base.Index):
         cell (the residual correction's bias key), SORTED ascending by
         gid per query (pads last, gid = _IMAX, row = 0, cell = 0) — the
         plan contract of ``ops.adc_gather_topl``.
+
+        Plans are memoized on the (probe bytes, shape, cell_range,
+        row_offset) fingerprint — repeated query batches (bench loops,
+        the retained oracle path next to dispatch) stop rebuilding
+        identical numpy plans. The cache dies with any buffer mutation
+        (add / load / reset).
         """
+        probe = np.asarray(probe, np.int32)
+        key = (probe.tobytes(), probe.shape, cell_range, row_offset)
+        hit = self._plan_cache.get(key)
+        if hit is not None:
+            return hit
         off = self._offsets
         lens = (off[1:] - off[:-1]).astype(np.int64)
         q = probe.shape[0]
@@ -406,14 +451,23 @@ class IVFIndex(base.Index):
             qidx = np.repeat(np.arange(q), totals)
             col = np.arange(total, dtype=np.int64) - np.repeat(
                 np.cumsum(totals) - totals, totals)
-            rows[qidx, col] = (flat_rows - row_offset).astype(np.int32)
-            gids[qidx, col] = self._ids_np[flat_rows]
-            cells[qidx, col] = self._cells_np[flat_rows]
-            order = np.argsort(gids, axis=1, kind="stable")
-            gids = np.take_along_axis(gids, order, axis=1)
-            rows = np.take_along_axis(rows, order, axis=1)
-            cells = np.take_along_axis(cells, order, axis=1)
-        return rows, gids, cells
+            flat_gids = self._ids_np[flat_rows]
+            # ONE flat stable sort by (query, gid) replaces the old padded
+            # per-row argsort: lexsort's primary key (qidx, already
+            # nondecreasing) confines the permutation to each query's own
+            # span, so scattering through (qidx, col) lands each query's
+            # slots gid-ascending — identical plans, ~W/avg-fill less sort
+            # work and no (Q, W) take_along_axis passes
+            perm = np.lexsort((flat_gids, qidx))
+            sorted_rows = flat_rows[perm]
+            rows[qidx, col] = (sorted_rows - row_offset).astype(np.int32)
+            gids[qidx, col] = flat_gids[perm]
+            cells[qidx, col] = self._cells_np[sorted_rows]
+        plan = (rows, gids, cells)
+        if len(self._plan_cache) >= 8:          # tiny FIFO: bench/serve
+            self._plan_cache.pop(next(iter(self._plan_cache)))  # loops only
+        self._plan_cache[key] = plan
+        return plan
 
     def _plan_rowbias(self, rows, gids, shard_bias, filter_mask,
                       num_queries: int, slot_cells=None, cell_bias=None):
@@ -449,15 +503,101 @@ class IVFIndex(base.Index):
             rowbias = jnp.where(keep, rowbias, jnp.inf)
         return rowbias
 
+    # -- dispatch (cell-batched) stage 1 -------------------------------------
+
+    def _dispatch_streams(self, routing, num_queries: int, filter_mask,
+                          cell_bias, row_range=None):
+        """The dispatch face's bias streams for one routed (sub)buffer:
+        (ids, rowbias, qkeep, cellterm).
+
+        ids (n,) row -> global id for the ``row_range`` slice (the whole
+        buffer by default; a shard's rows under the sharded face);
+        rowbias (n,) the per-point stream with any (N,) filter folded to
+        +inf (keyed by GLOBAL id, like ``_plan_rowbias``); qkeep (Q, n)
+        0/1 stream for per-(query, point) filters; cellterm (E+1, cap)
+        the residual correction's per-(query, cell) term gathered at
+        each routed slot. Composition order matches ``_plan_rowbias``
+        exactly — score + (rowbias + cellterm), keep-mask applied last —
+        which is what keeps dispatch bit-identical to the padded path.
+        """
+        lo, hi = row_range if row_range is not None else (0, self.ntotal)
+        ids = self._ids_dev[lo:hi]
+        rowbias = None if self._bias is None else self._bias[lo:hi]
+        qkeep = None
+        if filter_mask is not None:
+            mask = jnp.asarray(filter_mask, bool)
+            if mask.ndim == 1:
+                if mask.shape != (self.ntotal,):
+                    raise ValueError(
+                        f"filter_mask shape {mask.shape} != "
+                        f"({self.ntotal},)")
+                keep = jnp.take(mask, ids)
+                base = rowbias if rowbias is not None \
+                    else jnp.zeros(ids.shape, jnp.float32)
+                rowbias = jnp.where(keep, base, jnp.inf)
+            else:
+                if mask.shape != (num_queries, self.ntotal):
+                    raise ValueError(
+                        f"filter_mask shape {mask.shape} != "
+                        f"({num_queries}, {self.ntotal})")
+                qkeep = jnp.take(mask, ids, axis=1).astype(jnp.float32)
+        qidx = routing.plan.qidx
+        if cell_bias is not None:
+            safe_q = jnp.clip(qidx, 0, num_queries - 1)
+            safe_c = jnp.clip(routing.cell_of, 0, self.nlist - 1)
+            cellterm = jnp.where(
+                qidx >= 0, jnp.asarray(cell_bias)[safe_q, safe_c[:, None]],
+                0.0).astype(jnp.float32)
+        else:
+            cellterm = jnp.zeros(qidx.shape, jnp.float32)
+        return ids, rowbias, qkeep, cellterm
+
+    def _dispatch_pool(self, queries, probe, cd, filter_mask, topl: int):
+        """Stage 1 through the cell-batched dispatch face: route the
+        probe on device, stream every probed cell once, scatter-merge the
+        per-cell partials. Returns the (d2, global ids) pool —
+        bit-identical to the padded gathered plan — or None when the
+        ``dispatch_capacity`` factor overflows (the caller's loud padded
+        fallback: dropped probes could hide true top-L candidates)."""
+        from repro.index import dispatch as dsp
+        routing, stats = dsp.build_dispatch(
+            probe, self._offsets_dev,
+            capacity_factor=self.dispatch_capacity)
+        if routing is None:
+            warnings.warn(
+                f"IVF dispatch capacity overflow: the busiest probed cell "
+                f"batches {stats[1]} queries, over the "
+                f"dispatch_capacity={self.dispatch_capacity} budget for "
+                f"{stats[0]} routed cells; falling back to the padded "
+                "gathered plan for this batch")
+            return None
+        q = queries.shape[0]
+        cell_bias = cd if self._exact_residual else None
+        _, rowbias, qkeep, cellterm = self._dispatch_streams(
+            routing, q, filter_mask, cell_bias)
+        luts = self._stage1_luts(queries, probe)
+        gen = candidate_generator_for(self.backend)
+        part_s, part_g = gen.dispatch_topl(
+            self._codes, self._ids_dev, rowbias, luts, cellterm,
+            routing.plan, topl=topl, qkeep=qkeep)
+        return dsp.combine_pools(part_s, part_g, routing.comb_e,
+                                 routing.comb_slot, topl=topl)
+
     # -- search --------------------------------------------------------------
 
     def search(self, queries, k: int, *, nprobe: int | None = None,
                use_rerank: bool | None = None, use_d2: bool = True,
-               filter_mask=None):
+               filter_mask=None, use_dispatch: bool | None = None):
         """Probed two-stage search (same contract as ``Index.search`` plus
         ``nprobe``). Slots the probe misses simply never enter the pool;
         when the probed pool holds fewer than k points the tail is
-        reported as (distance=+inf, index=-1)."""
+        reported as (distance=+inf, index=-1).
+
+        ``use_dispatch`` pins stage 1 to the cell-batched dispatch face
+        (True) or the padded gathered plan (False); the default resolves
+        per backend via the ``dispatch_topl`` capability. Both faces are
+        bit-identical — the knob is a perf/control choice, never a
+        quality one."""
         if self.ntotal == 0:
             raise RuntimeError("search on an empty index (call add first)")
         queries = jnp.asarray(queries)
@@ -472,7 +612,21 @@ class IVFIndex(base.Index):
                 raise ValueError(
                     "filter_mask is not supported with use_d2=False")
             return self._exhaustive_rerank_topk(queries, k)
+        if use_dispatch is None:
+            use_dispatch = supports_dispatch(self.backend)
+        elif use_dispatch and not supports_dispatch(self.backend):
+            raise ValueError(
+                f"use_dispatch=True but backend {self.backend!r} does not "
+                "declare the dispatch_topl capability; use the padded "
+                "path (use_dispatch=False) or an xla/pallas backend")
         probe, cd = self._probe_with_dists(queries, nprobe or self.nprobe)
+        if use_dispatch:
+            pool = self._dispatch_pool(
+                queries, probe, cd, filter_mask,
+                topl=self.rerank if use_rerank else k)
+            if pool is not None:
+                return self._finish_pool(queries, pool[0], pool[1], k,
+                                         use_rerank=use_rerank)
         rows_np, gids_np, cells_np = self._probe_plan(probe)
         rows = jnp.asarray(rows_np)
         gids = jnp.asarray(gids_np)
@@ -493,9 +647,12 @@ class IVFIndex(base.Index):
         """Shared tail over a gathered candidate pool (also used by
         ShardedIndex on the merged per-shard pools): optional stage-2
         rerank through the streaming engine, +inf pads reported as -1,
-        and the result padded out to the flat-search width min(k, ntotal)
-        when the probed pool is narrower (the documented (+inf, -1)
-        tail)."""
+        and the result brought to EXACTLY the flat-search width
+        min(k, ntotal) — padded with the documented (+inf, -1) tail when
+        the probed pool is narrower, truncated when a pool face over-
+        allocated (the dispatch scatter-merge can be P * L wide; every
+        global id enters a pool at most once, so columns past ntotal are
+        always pads)."""
         if not use_rerank:
             kk = min(k, d2.shape[1])
             d = d2[:, :kk]
@@ -510,10 +667,13 @@ class IVFIndex(base.Index):
             d = -neg
             i = jnp.take_along_axis(ids, order, axis=1)
             i = jnp.where(jnp.isposinf(d), -1, i)
-        pad = min(k, self.ntotal) - d.shape[1]
-        if pad > 0:
+        width = min(k, self.ntotal)
+        if d.shape[1] < width:
+            pad = width - d.shape[1]
             d = jnp.pad(d, ((0, 0), (0, pad)), constant_values=jnp.inf)
             i = jnp.pad(i, ((0, 0), (0, pad)), constant_values=-1)
+        elif d.shape[1] > width:
+            d, i = d[:, :width], i[:, :width]
         return d, i
 
     def _exhaustive_rerank_topk(self, queries, k: int):
@@ -565,6 +725,7 @@ class IVFIndex(base.Index):
         return {"dim": self.dim, "nlist": self.nlist, "nprobe": self.nprobe,
                 "rerank": self.rerank, "backend": self.backend,
                 "ntotal": self.ntotal, "residual": self.residual,
+                "dispatch_capacity": self.dispatch_capacity,
                 "has_bias": self._bias is not None,
                 "inner_kind": self.inner.kind,
                 "inner_meta": self.inner._metadata()}
@@ -577,7 +738,8 @@ class IVFIndex(base.Index):
         index = cls(meta["dim"], inner=inner, nlist=meta["nlist"],
                     nprobe=meta["nprobe"], rerank=meta["rerank"],
                     backend=meta["backend"],
-                    residual=meta.get("residual", False))
+                    residual=meta.get("residual", False),
+                    dispatch_capacity=meta.get("dispatch_capacity"))
         n = meta["ntotal"]
         m = inner._tree()["codes"].shape[1]
         index.coarse = jnp.zeros((meta["nlist"], meta["dim"]), jnp.float32)
@@ -602,9 +764,12 @@ class IVFIndex(base.Index):
             counts = np.bincount(self._cells_np, minlength=self.nlist)
             self._offsets = np.concatenate(
                 [[0], np.cumsum(counts)]).astype(np.int64)
+            self._offsets_dev = jnp.asarray(self._offsets, jnp.int32)
+            self._ids_dev = jnp.asarray(self._ids_np)
             pos = np.empty(n, np.int32)
             pos[self._ids_np] = np.arange(n, dtype=np.int32)
             self._pos_dev = jnp.asarray(pos)
+            self._plan_cache = {}
         else:
             self.reset()
         self._invalidate_caches()

@@ -178,16 +178,23 @@ class ShardedIndex:
     # -- search ------------------------------------------------------------
 
     def stage1_candidates(self, queries, topl: int | None = None, *,
-                          filter_mask=None, nprobe: int | None = None):
+                          filter_mask=None, nprobe: int | None = None,
+                          use_dispatch: bool | None = None):
         """Distributed stage 1: per-shard top-L merged into the global
         candidate pool. Returns (d2 scores, global indices), each
-        (Q, min(topl, pool width)), closest-first. ``nprobe`` only applies
-        to IVF inners (defaults to the index's own)."""
+        (Q, min(topl, pool width)), closest-first. ``nprobe`` and
+        ``use_dispatch`` only apply to IVF inners (probe width defaults
+        to the index's own; the device placement rides the cell-batched
+        dispatch face whenever the backend declares ``dispatch_topl``,
+        pinnable either way for A/B runs)."""
         if topl is None:
             topl = self.inner.rerank
         queries = jnp.asarray(queries)
         if isinstance(self.inner, IVFIndex):
-            return self._ivf_stage1(queries, topl, filter_mask, nprobe)
+            return self._ivf_stage1(queries, topl, filter_mask, nprobe,
+                                    use_dispatch)
+        if use_dispatch:
+            raise ValueError("use_dispatch applies to IVF inners only")
         luts = self.inner._build_luts(queries)
         impl = resolve_scan_backend(self.inner.backend)
         bias, qbias = self.inner._lower_filter(filter_mask,
@@ -226,12 +233,18 @@ class ShardedIndex:
         return -neg, jnp.take_along_axis(idx, order, axis=1)
 
     def _ivf_stage1(self, queries, topl: int, filter_mask,
-                    nprobe: int | None):
+                    nprobe: int | None, use_dispatch: bool | None = None):
         """By-cell sharded IVF stage 1: each shard owns a contiguous cell
         range; only shards owning a probed cell are scanned (host mode
         skips the rest outright, device mode gives them empty plans); the
         per-shard gathered pools merge lexicographically by
-        (score, global id)."""
+        (score, global id).
+
+        Device placement rides the cell-batched dispatch face by default
+        on ``dispatch_topl``-capable backends — per-shard routing over
+        clip-restricted CSR offsets, no host plan — with the gathered
+        padded-plan face retained as the pinnable control
+        (``use_dispatch=False``)."""
         ivf = self.inner
         q = queries.shape[0]
         probe, cd = ivf._probe_with_dists(queries, nprobe or ivf.nprobe)
@@ -246,6 +259,28 @@ class ShardedIndex:
                 raise ValueError(
                     "placement='device' needs a streaming_topl-capable "
                     f"scan backend, and {impl!r} does not declare it")
+            if use_dispatch is None:
+                use_dispatch = backend_supports(impl, "dispatch_topl")
+            elif use_dispatch and not backend_supports(impl,
+                                                       "dispatch_topl"):
+                raise ValueError(
+                    f"use_dispatch=True but backend {impl!r} does not "
+                    "declare the dispatch_topl capability")
+            if use_dispatch:
+                from repro.index.dispatch import build_shard_dispatch
+                from repro.parallel.search import device_dispatch_topl
+                routings = build_shard_dispatch(probe, off, bounds)
+                shards = []
+                for s, routing in enumerate(routings):
+                    row_lo = int(off[bounds[s]])
+                    row_hi = int(off[bounds[s + 1]])
+                    ids, rowbias, qkeep, cellterm = ivf._dispatch_streams(
+                        routing, q, filter_mask, cell_bias,
+                        row_range=(row_lo, row_hi))
+                    shards.append((row_lo, row_hi, routing, ids, rowbias,
+                                   qkeep, cellterm))
+                return device_dispatch_topl(ivf.codes, shards, luts,
+                                            topl=topl, impl=impl)
             from repro.parallel.search import device_gather_topl
             plans = []
             for s in range(self.num_shards):
@@ -292,7 +327,8 @@ class ShardedIndex:
                           jnp.concatenate(pool_i, axis=1), topl)
 
     def search(self, queries, k: int, *, use_rerank: bool | None = None,
-               filter_mask=None, nprobe: int | None = None):
+               filter_mask=None, nprobe: int | None = None,
+               use_dispatch: bool | None = None):
         """Full two-stage sharded search: merged stage-1 candidates, then
         ONE stage-2 rerank over the merged pool through the streaming
         rerank engine (``Index._rerank_topk`` resolves a ``Reranker`` per
@@ -306,7 +342,8 @@ class ShardedIndex:
         topl = self.inner.rerank if use_rerank else k
         d2, cand = self.stage1_candidates(queries, topl=max(topl, k),
                                           filter_mask=filter_mask,
-                                          nprobe=nprobe)
+                                          nprobe=nprobe,
+                                          use_dispatch=use_dispatch)
         if isinstance(self.inner, IVFIndex):
             return self.inner._finish_pool(queries, d2, cand, k,
                                            use_rerank=use_rerank)

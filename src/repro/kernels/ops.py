@@ -25,6 +25,10 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.adc_scan import (adc_scan_pallas, adc_scan_batch_pallas,
                                     DEFAULT_BLOCK_N, DEFAULT_BLOCK_Q)
+from repro.kernels.dispatch_topl import (adc_dispatch_topl_pallas,
+                                         adc_dispatch_topl_stream_xla,
+                                         DispatchPlan,
+                                         DEFAULT_DISPATCH_CHUNK)
 from repro.kernels.gather_topl import (adc_gather_topl_pallas,
                                        adc_gather_topl_stream_xla,
                                        DEFAULT_CHUNK_W,
@@ -230,6 +234,72 @@ def adc_gather_topl(codes: jax.Array, rows: jax.Array, gids: jax.Array,
         f"unknown impl for adc_gather_topl: {impl!r} (the gathered top-L "
         "has 'pallas' and 'xla' paths; 'onehot' routes through the "
         "materialized generator)")
+
+
+def adc_dispatch_topl(codes: jax.Array, gids_rows: jax.Array,
+                      rowbias: jax.Array | None, luts: jax.Array,
+                      cellterm: jax.Array, plan: DispatchPlan, *, topl: int,
+                      qkeep: jax.Array | None = None, impl: str = "pallas",
+                      chunk: int = DEFAULT_DISPATCH_CHUNK):
+    """Cell-batched dispatch stage 1 (MoE-routed IVF probing): each routed
+    cell's contiguous code range is scored ONCE for the dense batch of
+    queries probing it, against a per-cell VMEM top-L heap.
+
+    codes (N, M) the cell-grouped buffer, gids_rows (N,) buffer row ->
+    global id, rowbias None | (N,) per-row additive stream (per-point
+    bias with any (N,) filter already folded to +inf), luts (Q, M, K),
+    cellterm (E+1, cap) per-(routed cell, slot) additive term, plan the
+    ``DispatchPlan`` from ``repro.index.dispatch``, qkeep None | (Q, N)
+    0/1 keep stream in buffer-row column order.
+
+    Returns per-cell partial pools ((E+1, cap, L) f32, (E+1, cap, L) i32)
+    with L = min(topl, N), each slot sorted by (score asc, global id
+    asc); rows the router never filled are masked to (+inf, _IMAX), so
+    partials are fully deterministic. ``index.dispatch.combine_pools``
+    scatters them back to per-query pools — bit-identical to the padded
+    gathered path, tie semantics included.
+
+      impl="pallas"  fused kernel: scalar-prefetched tile plan drives the
+                     HBM code stream, heaps stay VMEM-resident per cell.
+      impl="xla"     chunked ``lax.scan`` over the same tile plan; the
+                     always-available fallback.
+    """
+    n = codes.shape[0]
+    topl = min(topl, n)
+    if rowbias is None:
+        rowbias = jnp.zeros((n,), jnp.float32)
+    padded_codes, _ = _pad_to(codes, chunk, axis=0)
+    n_pad = padded_codes.shape[0] - n
+    gids_p = jnp.pad(gids_rows, (0, n_pad),
+                     constant_values=jnp.iinfo(jnp.int32).max)
+    rowb_p = jnp.pad(rowbias.astype(jnp.float32), (0, n_pad))
+    luts_f = luts.astype(jnp.float32)
+    qkeep_p = None
+    if qkeep is not None:
+        qkeep_p = jnp.pad(qkeep.astype(jnp.float32), ((0, 0), (0, n_pad)))
+    if impl == "xla":
+        scores, ids = adc_dispatch_topl_stream_xla(
+            padded_codes, gids_p, rowb_p, luts_f, cellterm, plan, qkeep_p,
+            topl=topl, chunk=chunk)
+    elif impl == "pallas":
+        luts_p, _ = _pad_to(luts_f, 8, axis=0)
+        if qkeep_p is not None:
+            qkeep_p, _ = _pad_to(qkeep_p, 8, axis=0)
+        scores, ids = adc_dispatch_topl_pallas(
+            padded_codes, gids_p, rowb_p, luts_p, cellterm, plan, qkeep_p,
+            topl=topl, chunk=chunk, interpret=_interpret())
+    else:
+        raise ValueError(
+            f"unknown impl for adc_dispatch_topl: {impl!r} (the dispatch "
+            "face has 'pallas' and 'xla' paths; backends without the "
+            "dispatch_topl capability use the padded gathered path)")
+    # rows the router never routed (bucket padding past the active cells)
+    # hold whatever the kernel left there — mask them to the canonical
+    # (+inf, _IMAX) empty pool so partials are deterministic end to end
+    routed = jnp.any(plan.qidx >= 0, axis=1)[:, None, None]
+    scores = jnp.where(routed, scores, jnp.inf)
+    ids = jnp.where(routed, ids, jnp.iinfo(jnp.int32).max)
+    return scores, ids
 
 
 def rerank_gather_dist(cand_codes: jax.Array, queries: jax.Array,

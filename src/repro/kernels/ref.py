@@ -116,6 +116,70 @@ def adc_gather_topl_ref(codes: jax.Array, rows: jax.Array, gids: jax.Array,
     return -neg, jnp.take_along_axis(gids, pos, axis=1)
 
 
+def adc_dispatch_topl_ref(codes: jax.Array, gids_rows: jax.Array,
+                          rowbias: jax.Array, luts: jax.Array,
+                          cellterm: jax.Array, qidx: jax.Array,
+                          cell_lo: jax.Array, cell_hi: jax.Array,
+                          topl: int, qkeep: jax.Array | None = None):
+    """Materialized oracle for the cell-batched dispatch scan+top-L.
+
+    The MoE-routed IVF stage 1 flips the gathered face's roles: instead of
+    each query gathering the rows of its probed cells, each probed CELL
+    scores its contiguous code range once for the dense batch of queries
+    routed to it:
+
+      codes    (N, M)     the cell-grouped code buffer;
+      gids_rows (N,)      buffer row -> global id;
+      rowbias  (N,)       per-row additive stream (per-point bias, with
+                          any (N,) filter mask already folded to +inf);
+      luts     (Q, M, K)  per-query score tables;
+      cellterm (E, cap)   per-(routed cell, slot) additive term (the
+                          IVFADC per-(query, cell) residual correction);
+      qidx     (E, cap)   each routed cell's query batch, -1 = empty slot;
+      cell_lo/cell_hi (E,) each routed cell's buffer row range;
+      qkeep    None | (Q, N) 0/1 keep stream in buffer-row column order
+                          (the lowered per-query filter mask).
+
+    Scores use the same left-to-right M chain as ``adc_scan_ref`` and the
+    same bias-composition order as the padded plan
+    (``chain + (rowbias + cellterm)``, keep mask applied after), so a
+    routed slot is bit-identical to the same (query, point) score on the
+    gathered path. Rows outside [lo, hi), empty slots and filtered rows
+    score +inf with the canonical ``_IMAX`` gid.
+
+    Deliberately materializes the (E, cap, N) score tensor — ground truth
+    only. Returns (scores, gids), each (E, cap, min(topl, N)), every slot
+    sorted by (score asc, global id asc): ``lax.top_k`` over ascending
+    buffer rows IS that order, because rows within a cell ascend in
+    global id (stable cell-grouping of add order).
+    """
+    n = codes.shape[0]
+    num_q, num_books = luts.shape[0], luts.shape[1]
+    safe_q = jnp.clip(qidx, 0, num_q - 1)
+    lut_e = luts[safe_q]                                     # (E, cap, M, K)
+    m_idx = jnp.arange(num_books)[None, None, None, :]
+    picked = lut_e[
+        jnp.arange(qidx.shape[0])[:, None, None, None],
+        jnp.arange(qidx.shape[1])[None, :, None, None],
+        m_idx, codes.astype(jnp.int32)[None, None, :, :]]    # (E, cap, N, M)
+    acc = picked[..., 0]
+    for m in range(1, num_books):                            # adc_scan_ref
+        acc = acc + picked[..., m]                           # association
+    acc = acc + (rowbias[None, None, :] + cellterm[..., None])
+    if qkeep is not None:
+        keep = jnp.take(qkeep, safe_q, axis=0)               # (E, cap, N)
+        acc = jnp.where(keep > 0.5, acc, jnp.inf)
+    rows = jnp.arange(n, dtype=jnp.int32)
+    window = (rows[None, None, :] >= cell_lo[:, None, None]) & \
+        (rows[None, None, :] < cell_hi[:, None, None])
+    acc = jnp.where(window, acc, jnp.inf)
+    acc = jnp.where((qidx >= 0)[..., None], acc, jnp.inf)
+    gids = jnp.broadcast_to(gids_rows[None, None, :], acc.shape)
+    gids = jnp.where(jnp.isposinf(acc), _IMAX, gids)
+    neg, pos = jax.lax.top_k(-acc, min(topl, n))
+    return -neg, jnp.take_along_axis(gids, pos, axis=-1)
+
+
 def decode_with_table(codes: jax.Array, table: jax.Array) -> jax.Array:
     """Additive table decode: ``recon = sum_m table[m, codes[..., m]]``.
 

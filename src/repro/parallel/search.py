@@ -32,10 +32,21 @@ host — cell-grouped shards interleave global ids, so the device-major
 positional argument above does not apply and the merge is explicit
 (``candidates.merge_topl``).
 
-The memory/collective shape of this path is pinned by the
-``sharded.stage1.device`` contract in ``repro.analysis.contracts``: no
-device materializes a (Q, N) or even (Q, N/D) score matrix, and the only
-cross-device collective is the candidate-tuple all-gather.
+``device_dispatch_topl`` is the same face over the cell-batched dispatch
+engine: the router (``repro.index.dispatch.build_shard_dispatch``) routes
+the global probe against each shard's clip-restricted CSR offsets ON
+DEVICE — non-owned cells are empty spans, so shards need no probe
+masking and the host never builds a ragged plan — each device streams
+its owned cells once through ``ops.adc_dispatch_topl``, scatter-merges
+its own per-cell partials to a per-query pool (``combine_pools``), and
+the all-gathered pools merge lexicographically exactly like the gathered
+face. Cell-sharded serving never touches host numpy on the hot path.
+
+The memory/collective shape of these paths is pinned by the
+``sharded.stage1.device`` / ``sharded.stage1.dispatch`` contracts in
+``repro.analysis.contracts``: no device materializes a (Q, N) or even
+(Q, N/D) score matrix, and the only cross-device collective is the
+candidate-tuple all-gather.
 """
 from __future__ import annotations
 
@@ -202,4 +213,111 @@ def device_gather_topl(codes, bias, plans, luts, rowbias_fn, *, topl: int,
 
     pool_s = jnp.swapaxes(s_all, 0, 1).reshape(q, d * topl_local)
     pool_i = jnp.swapaxes(i_all, 0, 1).reshape(q, d * topl_local)
+    return merge_topl(pool_s, pool_i, topl)
+
+
+@functools.lru_cache(maxsize=16)
+def _device_dispatch_fn(mesh, topl_local: int, impl: str, has_qkeep: bool):
+    """Compiled per-device routed dispatch + pool combine + all-gather."""
+    from jax.sharding import PartitionSpec as P
+    from repro.index.dispatch import combine_pools
+    from repro.kernels.dispatch_topl import DispatchPlan
+
+    def per_device(codes, ids, rowbias, qidx, te, tb, tf, tlo, thi,
+                   comb_e, comb_slot, cellterm, luts, *qkeep):
+        plan = DispatchPlan(qidx[0], te[0], tb[0], tf[0], tlo[0], thi[0])
+        part_s, part_g = ops.adc_dispatch_topl(
+            codes[0], ids[0], rowbias[0], luts, cellterm[0], plan,
+            topl=topl_local, qkeep=qkeep[0][0] if has_qkeep else None,
+            impl=impl)
+        s, g = combine_pools(part_s, part_g, comb_e[0], comb_slot[0],
+                             topl=topl_local)
+        return (jax.lax.all_gather(s, "shard"),
+                jax.lax.all_gather(g, "shard"))
+
+    in_specs = [P("shard")] * 12 + [P()]
+    if has_qkeep:
+        in_specs.append(P("shard"))
+    f = compat.shard_map(
+        per_device, mesh=mesh,
+        in_specs=tuple(in_specs),
+        out_specs=(P(), P()),
+        check_vma=False)
+    return jax.jit(f)
+
+
+def device_dispatch_topl(codes, shards, luts, *, topl: int, impl: str,
+                         devices=None):
+    """Device-resident IVF stage 1 over the cell-batched dispatch engine:
+    one cell-range shard per device, routed on device against its own
+    clip-restricted CSR offsets.
+
+    codes (N, M) the cell-grouped buffer; shards: per device
+    ``(row_lo, row_hi, routing, ids, rowbias, qkeep, cellterm)`` — the
+    shard's buffer row range, its ``repro.index.dispatch.Routing`` from
+    ``build_shard_dispatch`` (common shape buckets across shards), and
+    the shard-local bias streams from ``IVFIndex._dispatch_streams``
+    (ids (n_s,) row -> GLOBAL id; rowbias None | (n_s,) with (N,)
+    filters folded to +inf; qkeep None | (Q, n_s); cellterm (E+1, cap)).
+
+    Every shard's buffer slice / id / bias streams pad to a common row
+    count so one SPMD program serves the ragged shards; pad rows sit
+    beyond every owned cell's ``[lo, hi)`` window and can never surface.
+    Each device combines its own partial pools before the all-gather, so
+    the collective ships (Q, L) tuples — same shape as the gathered
+    face — and the host merge is the same exact lexicographic
+    (score, global id) ``merge_topl``.
+
+    Returns (scores, global ids), each (Q, min(topl, pool width)).
+    """
+    from repro.index.candidates import merge_topl
+
+    devices = list(devices if devices is not None else jax.devices())
+    d = len(devices)
+    if len(shards) != d:
+        raise ValueError(f"{len(shards)} shard specs for {d} devices")
+    q = luts.shape[0]
+    rmax = max(max(hi - lo for lo, hi, *_ in shards), 1)
+    has_qkeep = any(s[5] is not None for s in shards)
+
+    codes_sh, ids_sh, rb_sh, qk_sh, ct_sh = [], [], [], [], []
+    plan_sh = {f: [] for f in ("qidx", "tile_e", "tile_block",
+                               "tile_first", "tile_lo", "tile_hi")}
+    ce_sh, cs_sh = [], []
+    for row_lo, row_hi, routing, ids, rowbias, qkeep, cellterm in shards:
+        n_s = row_hi - row_lo
+        pad = rmax - n_s
+        codes_sh.append(jnp.pad(codes[row_lo:row_hi],
+                                ((0, pad), (0, 0))))
+        ids_sh.append(jnp.pad(ids, (0, pad), constant_values=_IMAX))
+        rb = rowbias if rowbias is not None \
+            else jnp.zeros((n_s,), jnp.float32)
+        rb_sh.append(jnp.pad(rb.astype(jnp.float32), (0, pad)))
+        if has_qkeep:
+            qk = qkeep if qkeep is not None \
+                else jnp.ones((q, n_s), jnp.float32)
+            qk_sh.append(jnp.pad(qk.astype(jnp.float32),
+                                 ((0, 0), (0, pad))))
+        for field in plan_sh:
+            plan_sh[field].append(getattr(routing.plan, field))
+        ce_sh.append(routing.comb_e)
+        cs_sh.append(routing.comb_slot)
+        ct_sh.append(cellterm)
+
+    mesh = jax.sharding.Mesh(np.asarray(devices), ("shard",))
+    topl_local = min(topl, rmax)
+    fn = _device_dispatch_fn(mesh, topl_local, impl, has_qkeep)
+    args = [jnp.stack(codes_sh), jnp.stack(ids_sh), jnp.stack(rb_sh)]
+    args += [jnp.stack(plan_sh[f]) for f in ("qidx", "tile_e", "tile_block",
+                                             "tile_first", "tile_lo",
+                                             "tile_hi")]
+    args += [jnp.stack(ce_sh), jnp.stack(cs_sh), jnp.stack(ct_sh),
+             luts.astype(jnp.float32)]
+    if has_qkeep:
+        args.append(jnp.stack(qk_sh))
+    s_all, i_all = fn(*args)
+
+    l = s_all.shape[-1]
+    pool_s = jnp.swapaxes(s_all, 0, 1).reshape(q, d * l)
+    pool_i = jnp.swapaxes(i_all, 0, 1).reshape(q, d * l)
     return merge_topl(pool_s, pool_i, topl)

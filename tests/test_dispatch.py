@@ -1,0 +1,416 @@
+"""MoE-style IVF probe dispatch: the acceptance properties.
+
+  * the device router's dense per-cell batches + the cell-batched scan
+    (``ops.adc_dispatch_topl``: fused pallas kernel in interpret mode /
+    chunked xla) agree bit-for-bit with the materialized
+    ``adc_dispatch_topl_ref`` oracle on random cell-grouped buffers —
+    ties, biases, (Q, N) keep streams and empty cells included;
+  * the scatter-merged per-query pools are bit-identical to the padded
+    gathered plan over the same probe, and ``IVFIndex.search`` with
+    ``use_dispatch=True`` reproduces the padded path (and flat search at
+    ``nprobe == nlist``) exactly — filters, residual correction, rerank;
+  * degenerate inputs agree across faces: empty cells, nprobe > nlist,
+    all-masked queries, pools smaller than k;
+  * the capacity factor is respected under skew (per-cell batches never
+    exceed the budget) and overflow falls back LOUDLY to the padded
+    plan — never a silent candidate drop;
+  * the memoized flat-lexsort ``_probe_plan`` reproduces the original
+    per-row-argsort construction and caches repeated probes.
+"""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_shim import given, settings, st
+
+from repro.index import index_factory
+from repro.index.candidates import supports_dispatch
+from repro.index.dispatch import (build_dispatch, build_shard_dispatch,
+                                  combine_pools, route_stats)
+from repro.kernels import ops, ref
+
+_IMAX = np.iinfo(np.int32).max
+
+
+def _cell_grouped_case(rng, nlist, q, p, m=4, k=16, max_cell=40):
+    """Random cell-grouped buffer (empty cells included, gids ascending
+    within cells — the CSR invariant), tie-heavy integer LUTs, and a
+    per-query probe of distinct cells."""
+    sizes = rng.integers(0, max_cell, size=nlist)
+    if nlist > 2:
+        sizes[rng.integers(0, nlist)] = 0          # force an empty cell
+    offsets = np.zeros(nlist + 1, np.int64)
+    offsets[1:] = np.cumsum(sizes)
+    n = int(offsets[-1])
+    codes = rng.integers(0, k, size=(max(n, 1), m)).astype(np.uint8)[:n]
+    gids = np.sort(rng.choice(4 * max(n, 1), size=max(n, 1),
+                              replace=False))[:n].astype(np.int32)
+    luts = rng.integers(0, 3, size=(q, m, k)).astype(np.float32)
+    p = min(p, nlist)
+    probe = np.stack([rng.choice(nlist, size=p, replace=False)
+                      for _ in range(q)]).astype(np.int32)
+    return offsets, codes, gids, luts, probe
+
+
+def _padded_pool(codes, gids, offsets, probe, luts, rowbias_n, qkeep, topl):
+    """The padded gathered plan over the same probe — the control the
+    dispatch partial pools must reproduce after the scatter-merge."""
+    q, _ = probe.shape
+    per = []
+    w = 1
+    for qi in range(q):
+        rows = np.concatenate(
+            [np.arange(offsets[c], offsets[c + 1]) for c in probe[qi]]
+        ).astype(np.int64)
+        g = gids[rows]
+        o = np.argsort(g, kind="stable")
+        per.append((rows[o], g[o]))
+        w = max(w, rows.size)
+    rows_a = np.zeros((q, w), np.int32)
+    gids_a = np.full((q, w), _IMAX, np.int32)
+    for qi, (r, g) in enumerate(per):
+        rows_a[qi, :r.size] = r
+        gids_a[qi, :g.size] = g
+    rb = None
+    if rowbias_n is not None or qkeep is not None:
+        base = rowbias_n if rowbias_n is not None \
+            else np.zeros(codes.shape[0], np.float32)
+        rb = jnp.asarray(base)[jnp.asarray(rows_a)]
+        if qkeep is not None:
+            keep = jnp.take_along_axis(jnp.asarray(qkeep),
+                                       jnp.asarray(rows_a), axis=1)
+            rb = jnp.where(keep > 0.5, rb, jnp.inf)
+    return ops.adc_gather_topl(
+        jnp.asarray(codes), jnp.asarray(rows_a), jnp.asarray(gids_a),
+        jnp.asarray(luts), topl=min(topl, w), rowbias=rb, impl="xla")
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    nlist=st.integers(1, 12),
+    q=st.integers(1, 7),
+    p=st.integers(1, 6),
+    topl=st.integers(1, 30),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dispatch_topl_matches_ref_oracle_and_padded(nlist, q, p, topl,
+                                                     seed):
+    """Property: per-cell partial pools from the chunked xla path and the
+    fused pallas kernel (interpret mode) are bit-identical to the
+    materialized ``adc_dispatch_topl_ref`` oracle, and the scatter-merged
+    per-query pools are bit-identical to the padded gathered plan —
+    random biases, (Q, N) keep streams and tie-heavy scores included."""
+    rng = np.random.default_rng(seed)
+    offsets, codes, gids, luts, probe = _cell_grouped_case(rng, nlist, q, p)
+    n = codes.shape[0]
+    if n == 0:
+        return
+    chunk = 8
+    routing, _ = build_dispatch(probe, offsets, chunk=chunk)
+    assert routing is not None and int(routing.overflow) == 0
+    plan = routing.plan
+
+    rowbias = rng.integers(0, 2, size=(n,)).astype(np.float32) \
+        if rng.integers(0, 2) else None
+    qkeep = (rng.random((q, n)) > 0.3).astype(np.float32) \
+        if rng.integers(0, 2) else None
+    cap = plan.qidx.shape[1]
+    cellterm = np.where(np.asarray(plan.qidx) >= 0,
+                        rng.integers(0, 2, size=(routing.cell_of.shape[0],
+                                                 cap)),
+                        0.0).astype(np.float32)
+
+    rb_ref = jnp.zeros(n, jnp.float32) if rowbias is None \
+        else jnp.asarray(rowbias)
+    want_s, want_g = ref.adc_dispatch_topl_ref(
+        jnp.asarray(codes), jnp.asarray(gids), rb_ref,
+        jnp.asarray(luts), jnp.asarray(cellterm), plan.qidx,
+        routing.cell_lo, routing.cell_hi, topl,
+        qkeep=None if qkeep is None else jnp.asarray(qkeep))
+    routed = np.asarray(jnp.any(plan.qidx >= 0, axis=1))[:, None, None]
+    want_s = np.where(routed, np.asarray(want_s), np.inf)
+    want_g = np.where(routed, np.asarray(want_g), _IMAX)
+
+    for impl in ("xla", "pallas"):
+        got_s, got_g = ops.adc_dispatch_topl(
+            jnp.asarray(codes), jnp.asarray(gids),
+            None if rowbias is None else jnp.asarray(rowbias),
+            jnp.asarray(luts), jnp.asarray(cellterm), plan, topl=topl,
+            qkeep=None if qkeep is None else jnp.asarray(qkeep),
+            impl=impl, chunk=chunk)
+        np.testing.assert_array_equal(np.asarray(got_s), want_s,
+                                      err_msg=f"{impl} scores")
+        np.testing.assert_array_equal(np.asarray(got_g), want_g,
+                                      err_msg=f"{impl} gids")
+
+    # scatter-merge vs the padded gathered plan (cellterm excluded: the
+    # padded control composes it per slot-cell, exercised end-to-end by
+    # the residual index tests below — here zero it for a direct match)
+    zero_ct = jnp.zeros_like(jnp.asarray(cellterm))
+    part_s, part_g = ops.adc_dispatch_topl(
+        jnp.asarray(codes), jnp.asarray(gids),
+        None if rowbias is None else jnp.asarray(rowbias),
+        jnp.asarray(luts), zero_ct, plan, topl=topl,
+        qkeep=None if qkeep is None else jnp.asarray(qkeep), impl="xla",
+        chunk=chunk)
+    got = combine_pools(part_s, part_g, routing.comb_e, routing.comb_slot,
+                        topl=topl)
+    want = _padded_pool(codes, gids, offsets, probe, luts, rowbias, qkeep,
+                        topl)
+    width = min(got[0].shape[1], want[0].shape[1])
+    np.testing.assert_array_equal(np.asarray(got[0])[:, :width],
+                                  np.asarray(want[0])[:, :width])
+    np.testing.assert_array_equal(np.asarray(got[1])[:, :width],
+                                  np.asarray(want[1])[:, :width])
+    # any extra columns on either side are canonical (+inf, _IMAX) pads
+    for arr, pad in ((got[0], np.inf), (want[0], np.inf),
+                     (got[1], _IMAX), (want[1], _IMAX)):
+        tail = np.asarray(arr)[:, width:]
+        assert (tail == pad).all()
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("spec", ["IVF8,PQ4x16", "IVF8,Residual,PQ4x16",
+                                  "IVF8,RVQ2x16"])
+def test_search_dispatch_equals_padded(backend, spec):
+    """``use_dispatch=True`` reproduces the padded path bit-for-bit on
+    every dispatch-capable backend — nprobe sweeps (> nlist included),
+    per-point and per-query filters, all-masked queries, rerank on/off,
+    residual correction and RVQ bias streams."""
+    rng = np.random.default_rng(3)
+    d, n, q = 16, 500, 8
+    xs = rng.integers(0, 3, size=(n, d)).astype(np.float32)
+    queries = rng.integers(0, 3, size=(q, d)).astype(np.float32)
+    ivf = index_factory(spec, d, backend=backend)
+    ivf.rerank = 20
+    ivf.train(xs, iters=4)
+    ivf.add(xs)
+    masks = [None, rng.random(n) > 0.4, rng.random((q, n)) > 0.4]
+    masks[2][0, :] = False                         # an all-masked query
+    for nprobe in (1, 3, 8, 99):
+        for mask in masks:
+            for use_rerank in (False, True):
+                d_pad, i_pad = ivf.search(
+                    queries, 10, nprobe=nprobe, filter_mask=mask,
+                    use_rerank=use_rerank, use_dispatch=False)
+                d_dis, i_dis = ivf.search(
+                    queries, 10, nprobe=nprobe, filter_mask=mask,
+                    use_rerank=use_rerank, use_dispatch=True)
+                tag = f"nprobe={nprobe} rerank={use_rerank}"
+                np.testing.assert_array_equal(np.asarray(d_pad),
+                                              np.asarray(d_dis),
+                                              err_msg=tag)
+                np.testing.assert_array_equal(np.asarray(i_pad),
+                                              np.asarray(i_dis),
+                                              err_msg=tag)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_search_dispatch_full_probe_equals_flat(ivf_flat_pair, backend,
+                                                tiny_dataset):
+    """At ``nprobe == nlist`` the dispatch face lands exactly on flat
+    search — the cells partition the database and every face shares one
+    tie-break (rerank on and off)."""
+    ivf, flat = ivf_flat_pair("PQ4x32", 8, rerank=50, iters=4)
+    flat.backend = backend
+    ivf.backend = backend
+    queries = tiny_dataset.queries[:12]
+    for kw in (dict(), dict(use_rerank=False)):
+        d_f, i_f = flat.search(queries, 10, **kw)
+        d_d, i_d = ivf.search(queries, 10, nprobe=ivf.nlist,
+                              use_dispatch=True, **kw)
+        np.testing.assert_array_equal(np.asarray(i_f), np.asarray(i_d))
+        np.testing.assert_array_equal(np.asarray(d_f), np.asarray(d_d))
+
+
+def test_dispatch_capability_gating():
+    """onehot has no dispatch face: the default quietly stays padded, an
+    explicit ``use_dispatch=True`` is a loud error, and the capability
+    helper reports all three backends correctly."""
+    assert supports_dispatch("xla") and supports_dispatch("pallas")
+    assert not supports_dispatch("onehot")
+    rng = np.random.default_rng(0)
+    xs = rng.standard_normal((200, 8)).astype(np.float32)
+    ivf = index_factory("IVF4,PQ2x16", 8, backend="onehot")
+    ivf.train(xs, iters=3)
+    ivf.add(xs)
+    d, i = ivf.search(xs[:5], 4)                   # default: padded, works
+    assert d.shape == (5, 4)
+    with pytest.raises(ValueError, match="dispatch_topl"):
+        ivf.search(xs[:5], 4, use_dispatch=True)
+
+
+def test_dispatch_degenerate_tiny_index():
+    """Degenerate shapes agree across faces: nlist far above ntotal (most
+    cells empty), k above the pool width, single query, nprobe > nlist."""
+    rng = np.random.default_rng(1)
+    xs = rng.standard_normal((9, 8)).astype(np.float32)
+    ivf = index_factory("IVF16,PQ2x16", 8, backend="xla")
+    ivf.train(rng.standard_normal((64, 8)).astype(np.float32), iters=3)
+    ivf.add(xs)
+    for q, nprobe, k in ((1, 1, 5), (3, 2, 20), (2, 40, 9)):
+        queries = rng.standard_normal((q, 8)).astype(np.float32)
+        d_pad, i_pad = ivf.search(queries, k, nprobe=nprobe,
+                                  use_dispatch=False)
+        d_dis, i_dis = ivf.search(queries, k, nprobe=nprobe,
+                                  use_dispatch=True)
+        np.testing.assert_array_equal(np.asarray(d_pad), np.asarray(d_dis))
+        np.testing.assert_array_equal(np.asarray(i_pad), np.asarray(i_dis))
+        assert ((np.asarray(i_dis) >= -1)
+                & (np.asarray(i_dis) < ivf.ntotal)).all()
+
+
+def test_capacity_factor_respected_under_skew():
+    """Load balance: with a capacity factor set and a heavily skewed
+    probe (every query hammers the same cells), routed per-cell batches
+    never exceed the ceil(factor * Q * P / E) budget."""
+    rng = np.random.default_rng(2)
+    nlist, q = 16, 32
+    sizes = rng.integers(1, 20, size=nlist)
+    offsets = np.zeros(nlist + 1, np.int64)
+    offsets[1:] = np.cumsum(sizes)
+    # skew: everyone probes cell 0; second slot spreads over 4 cells
+    probe = np.stack([np.array([0, 1 + int(rng.integers(0, 4))])
+                      for _ in range(q)]).astype(np.int32)
+    factor = 2.0
+    routing, stats = build_dispatch(probe, offsets, chunk=8,
+                                    capacity_factor=factor)
+    e_count, cap_needed, _ = stats
+    limit = max(1, -(-int(factor * q * probe.shape[1]) // e_count))
+    if routing is None:
+        assert cap_needed > limit  # refused exactly when over budget
+    else:
+        per_cell = (np.asarray(routing.plan.qidx) >= 0).sum(axis=1)
+        assert per_cell.max() <= limit
+        assert int(routing.overflow) == 0
+
+    # a factor too small for the skew must refuse (loud fallback), and
+    # the search-level fallback must stay bit-identical to padded
+    tight, stats2 = build_dispatch(probe, offsets, chunk=8,
+                                   capacity_factor=0.05)
+    assert tight is None and stats2[1] > 0
+
+
+def test_capacity_overflow_falls_back_loudly():
+    """Search with an overflowing capacity factor warns and returns the
+    padded path's exact results — dropped probes are never silent."""
+    rng = np.random.default_rng(4)
+    xs = rng.standard_normal((300, 8)).astype(np.float32)
+    queries = np.repeat(xs[:1], 16, axis=0)        # maximal probe skew
+    ivf = index_factory("IVF8,PQ2x16", 8, backend="xla")
+    ivf.train(xs, iters=3)
+    ivf.add(xs)
+    want_d, want_i = ivf.search(queries, 5, use_dispatch=False)
+    ivf.dispatch_capacity = 0.01
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        got_d, got_i = ivf.search(queries, 5, use_dispatch=True)
+    assert any("capacity overflow" in str(w.message) for w in caught)
+    np.testing.assert_array_equal(np.asarray(want_d), np.asarray(got_d))
+    np.testing.assert_array_equal(np.asarray(want_i), np.asarray(got_i))
+
+
+def test_route_stats_and_bucketing():
+    """The router's measurements are exact (distinct cells, true max
+    co-probe batch, chunk-aligned tile count) and the compiled shapes
+    bucket on powers of two."""
+    offsets = np.array([0, 10, 10, 25, 100], np.int64)
+    probe = np.array([[0, 2], [0, 3], [2, 3]], np.int32)
+    e, cap, t = route_stats(probe, offsets, chunk=8)
+    assert e == 3                                  # cells {0, 2, 3}
+    assert cap == 2                                # cells 0/2/3 twice max
+    # chunk-ALIGNED tiles: cell0 [0,10) -> 2; cell2 [10,25) starts at
+    # block 1 so spans 17 rows -> 3; cell3 [25,100) starts at block 3,
+    # spans 76 rows -> 10
+    assert t == 2 + 3 + 10
+    routing, _ = build_dispatch(probe, offsets, chunk=8)
+    assert routing.plan.qidx.shape[0] - 1 in (4, 8)     # pow2 bucket
+    assert routing.plan.qidx.shape[1] in (8,)           # floor bucket
+
+
+def test_probe_plan_flat_sort_matches_per_row_argsort():
+    """Satellite regression: the single flat lexsort plan builder emits
+    exactly what the original per-row ``np.argsort(gids, axis=1)``
+    construction produced, and repeated probes hit the memo."""
+    rng = np.random.default_rng(5)
+    xs = rng.standard_normal((400, 8)).astype(np.float32)
+    ivf = index_factory("IVF8,PQ2x16", 8, backend="xla")
+    ivf.train(xs, iters=3)
+    ivf.add(xs)
+    probe = ivf.probe_cells(xs[:7], 3)
+    rows, gids, cells = ivf._probe_plan(probe)
+    # reference: scatter unsorted, then the old padded per-row argsort
+    off, ids_np, cells_np = ivf._offsets, ivf._ids_np, ivf._cells_np
+    for qi in range(probe.shape[0]):
+        r = np.concatenate([np.arange(off[c], off[c + 1])
+                            for c in probe[qi]]).astype(np.int64)
+        g = ids_np[r]
+        o = np.argsort(g, kind="stable")
+        np.testing.assert_array_equal(rows[qi, :r.size], r[o])
+        np.testing.assert_array_equal(gids[qi, :r.size], g[o])
+        np.testing.assert_array_equal(cells[qi, :r.size], cells_np[r[o]])
+        assert (gids[qi, r.size:] == _IMAX).all()
+    assert ivf._probe_plan(probe) is (rows, gids, cells) \
+        or ivf._probe_plan(probe)[0] is rows       # memo hit
+    ivf.add(xs[:5])                                # mutation drops the memo
+    assert not ivf._plan_cache
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    nlist=st.integers(2, 10),
+    nprobe=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_search_dispatch_padded_agree_property(nlist, nprobe, seed):
+    """Hypothesis property (alongside the test_ivf partition/filter
+    properties): for random tie-heavy indexes, probe widths and filters,
+    the dispatch and padded faces agree bit-for-bit."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(30, 300))
+    q = int(rng.integers(1, 6))
+    xs = rng.integers(0, 3, size=(n, 8)).astype(np.float32)
+    queries = rng.integers(0, 3, size=(q, 8)).astype(np.float32)
+    ivf = index_factory(f"IVF{nlist},PQ2x16", 8, backend="xla")
+    ivf.train(xs, iters=3)
+    ivf.add(xs)
+    mask = rng.random(n) > 0.5 if rng.integers(0, 2) else None
+    k = int(rng.integers(1, 15))
+    d_pad, i_pad = ivf.search(queries, k, nprobe=nprobe, filter_mask=mask,
+                              use_dispatch=False)
+    d_dis, i_dis = ivf.search(queries, k, nprobe=nprobe, filter_mask=mask,
+                              use_dispatch=True)
+    np.testing.assert_array_equal(np.asarray(d_pad), np.asarray(d_dis))
+    np.testing.assert_array_equal(np.asarray(i_pad), np.asarray(i_dis))
+
+
+def test_build_shard_dispatch_clip_offsets():
+    """The sharded router's clip-restricted offsets make non-owned cells
+    empty spans (no probe masking), keep global cell alignment, and share
+    one set of shape buckets across shards."""
+    rng = np.random.default_rng(6)
+    nlist = 8
+    sizes = rng.integers(1, 30, size=nlist)
+    offsets = np.zeros(nlist + 1, np.int64)
+    offsets[1:] = np.cumsum(sizes)
+    bounds = [0, 3, 6, 8]
+    probe = np.stack([rng.choice(nlist, size=3, replace=False)
+                      for _ in range(5)]).astype(np.int32)
+    routings = build_shard_dispatch(probe, offsets, bounds, chunk=8)
+    assert len(routings) == 3
+    shapes = {(r.plan.qidx.shape, r.plan.tile_e.shape) for r in routings}
+    assert len(shapes) == 1                        # common buckets
+    for s, routing in enumerate(routings):
+        lo_cell, hi_cell = bounds[s], bounds[s + 1]
+        cell_of = np.asarray(routing.cell_of)
+        lo = np.asarray(routing.cell_lo)
+        hi = np.asarray(routing.cell_hi)
+        for e in range(cell_of.shape[0]):
+            c = cell_of[e]
+            if c < 0:
+                continue
+            if lo_cell <= c < hi_cell:             # owned: true local span
+                assert hi[e] - lo[e] == sizes[c]
+            else:                                  # foreign: empty span
+                assert hi[e] == lo[e]
