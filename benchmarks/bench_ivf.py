@@ -6,6 +6,14 @@ Writes ``BENCH_ivf.json`` (repo root by default):
 
   * ``flat``            — the linear streaming scan baseline over the
                           same quantizer: us/query, qps, recall@1/@10;
+  * ``flat[default]``   — the same search with the autotuner DISABLED
+                          (hand-pinned block params); ``tuned_vs_default``
+                          compares the two;
+  * ``flat/f16`` and ``flat/i8`` — the quantized-LUT fast path through
+                          ``search(lut_dtype=..., overfetch=2)``
+                          end-to-end (reduced-precision stage-1 scan,
+                          exact f32 re-score) with the SAME recall
+                          metrics, summarized in ``quantized_study``;
   * ``ivf/nprobe=P``    for P in {1, 8, 32} — probed search: us/query,
                           qps, recall@1/@10, plus ``probed_frac`` (the
                           average fraction of the database the probe
@@ -55,9 +63,11 @@ import numpy as np
 from benchmarks import common
 from repro.core.search import recall_at_k
 from repro.index import index_factory
+from repro.kernels import tune
 
 _NLIST = {"quick": 64, "default": 256, "full": 1024}
 _NPROBES = (1, 8, 32)
+_OVERFETCH = 2
 
 
 def _timed_search(index, queries, k, **kw):
@@ -101,7 +111,10 @@ def _nprobe_sweep(ivf, tag, queries, gt, k, results):
             "recall@1": round(rec["recall@1"], 4),
             "recall@10": round(rec["recall@10"], 4),
             "probed_frac": round(probed, 4),
-            "plan_width": width}
+            "plan_width": width,
+            "tuner_bucket": tune.bucket_key(
+                tune.KERNELS["adc_gather_topl.xla"],
+                {"w": width, "q": queries.shape[0], "topl": 100})}
         common.emit(f"{tag}/nprobe={nprobe}", us,
                     f"R@1={rec['recall@1']:.3f} "
                     f"R@10={rec['recall@10']:.3f} "
@@ -135,7 +148,10 @@ def _dispatch_sweep(ivf, queries, k, results):
             "us_per_query": round(us, 1), "qps": round(1e6 / us, 1),
             "plan_build_ms": round(plan_ms, 3),
             "padding_waste_frac": round(waste, 4),
-            "plan_width": int(rows.shape[1])}
+            "plan_width": int(rows.shape[1]),
+            "tuner_bucket": tune.bucket_key(
+                tune.KERNELS["adc_gather_topl.xla"],
+                {"w": int(rows.shape[1]), "q": q, "topl": 100})}
         common.emit(f"ivf-padded/nprobe={nprobe}", us,
                     f"plan={plan_ms:.2f}ms waste={waste * 100:.1f}%")
 
@@ -156,7 +172,10 @@ def _dispatch_sweep(ivf, queries, k, results):
             "route_ms": round(route_ms, 3),
             "batch_occupancy": round(occupancy, 4),
             "routed_cells": int(stats[0]),
-            "cap": int(qidx.shape[1])}
+            "cap": int(qidx.shape[1]),
+            "tuner_bucket": tune.bucket_key(
+                tune.KERNELS["adc_dispatch_topl"],
+                {"n": ivf.ntotal, "q": q})}
         common.emit(f"ivf-dispatch/nprobe={nprobe}", us,
                     f"route={route_ms:.2f}ms occ={occupancy * 100:.1f}% "
                     f"E={stats[0]}")
@@ -182,16 +201,61 @@ def run(scale: str = "quick", out_path: str | None = None) -> dict:
 
     results = {"n": int(flat.ntotal), "q": int(queries.shape[0]),
                "nlist": nlist, "backend": jax.default_backend(),
-               "paths": {}}
+               "tuning": tune.cache_fingerprint(), "paths": {}}
 
-    got, us = _timed_search(flat, queries, k)
-    rec = recall_at_k(got, gt, ks=(1, 10))
-    results["paths"]["flat"] = {
-        "us_per_query": round(us, 1), "qps": round(1e6 / us, 1),
-        "recall@1": round(rec["recall@1"], 4),
-        "recall@10": round(rec["recall@10"], 4)}
-    common.emit("ivf/flat", us,
-                f"R@1={rec['recall@1']:.3f} R@10={rec['recall@10']:.3f}")
+    # flat search stage 1 is the xla streaming scan over the whole base:
+    # the tuner bucket its block params resolve in (rerank pool = 100)
+    spec = tune.KERNELS["adc_scan_topl.xla"]
+    nq = int(queries.shape[0])
+    bucket = tune.bucket_key(spec, {"n": int(flat.ntotal), "q": nq,
+                                    "topl": 100})
+
+    # the four flat comparison rows are timed INTERLEAVED (tuned vs
+    # default vs f16 vs i8): sequential end-to-end timings on a shared
+    # CPU drift more than the deltas being measured
+    qbucket = tune.bucket_key(spec, {"n": int(flat.ntotal), "q": nq,
+                                     "topl": 100 * _OVERFETCH})
+    flat_fns = {
+        "flat": lambda: flat.search(queries, k)[1],
+        "flat[default]": common.with_defaults(
+            lambda: flat.search(queries, k)[1]),
+        "flat/f16": lambda: flat.search(
+            queries, k, lut_dtype="float16", overfetch=_OVERFETCH)[1],
+        "flat/i8": lambda: flat.search(
+            queries, k, lut_dtype="int8", overfetch=_OVERFETCH)[1],
+    }
+    timed = common.timed_group(flat_fns, repeats=10)
+    flat_us = {name: us / nq for name, (_out, us) in timed.items()}
+    for name in flat_fns:
+        rec = recall_at_k(timed[name][0], gt, ks=(1, 10))
+        row = {"us_per_query": round(flat_us[name], 1),
+               "qps": round(1e6 / flat_us[name], 1),
+               "recall@1": round(rec["recall@1"], 4),
+               "recall@10": round(rec["recall@10"], 4),
+               "tuner_bucket": qbucket if "/" in name else bucket}
+        extra = f"R@1={rec['recall@1']:.3f} R@10={rec['recall@10']:.3f}"
+        if "/" in name:
+            row["overfetch"] = _OVERFETCH
+            extra += f" overfetch={_OVERFETCH}"
+        results["paths"][name] = row
+        common.emit(f"ivf/{name}", flat_us[name], extra)
+    results["tuned_vs_default"] = {
+        "path": "flat", "tuner_bucket": bucket,
+        # when the sweep kept the default at this bucket both rows run
+        # the SAME config and |speedup - 1| is pure timing noise
+        "identical_config": tune.best_config(
+            "adc_scan_topl", "xla", n=int(flat.ntotal), q=nq,
+            topl=100) == dict(spec.params),
+        "tuned_us": round(flat_us["flat"], 1),
+        "default_us": round(flat_us["flat[default]"], 1),
+        "speedup": round(flat_us["flat[default]"] / flat_us["flat"], 3)}
+    results["quantized_study"] = {
+        "overfetch": _OVERFETCH, "vs": "flat",
+        **{tag: {"us_per_query": round(flat_us[f"flat/{tag}"], 1),
+                 "speedup_vs_f32": round(
+                     flat_us["flat"] / flat_us[f"flat/{tag}"], 3),
+                 "recall@10": results["paths"][f"flat/{tag}"]["recall@10"]}
+           for tag in ("f16", "i8")}}
 
     _nprobe_sweep(ivf, "ivf", queries, gt, k, results)
     _nprobe_sweep(res, "ivf-res", queries, gt, k, results)
@@ -223,7 +287,8 @@ def run(scale: str = "quick", out_path: str | None = None) -> dict:
     flat_row = results["paths"]["flat"]
     eligible = {
         name: p for name, p in results["paths"].items()
-        if "/" in name and "recall@10" in p
+        if "/" in name and not name.startswith("flat")
+        and "recall@10" in p
         and p["recall@10"] >= flat_row["recall@10"] - 0.02}
     best = max(eligible, key=lambda n: eligible[n]["qps"], default=None)
     results["headline"] = {

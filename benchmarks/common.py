@@ -11,6 +11,8 @@ The synthetic Deep/BigANN stand-ins come from repro.data.descriptors.
 from __future__ import annotations
 
 import functools
+import os
+import random
 import time
 
 import jax
@@ -51,6 +53,57 @@ def timed(fn, *args, repeats: int = 1, **kw):
         out = fn(*args, **kw)
     jax.block_until_ready(out)
     return out, (time.time() - t0) / repeats * 1e6
+
+
+def timed_group(fns: dict, *, repeats: int = 6) -> dict:
+    """Time a set of comparison rows INTERLEAVED (one warmup each, then
+    ``repeats`` rounds visiting every fn) and return {name: (out, us)}
+    with min-of-rounds us. Sequential timing on a shared/virtualized CPU
+    drifts ±30% between calls, which is enough to flip a comparison row;
+    interleaving exposes every fn to the same ambient conditions, so the
+    RELATIVE numbers (the whole point of tuned-vs-default and
+    f32-vs-f16-vs-i8 rows) are stable.
+
+    The visit order is SHUFFLED each round (fixed seed, deterministic):
+    any static order hands some row a systematically better context — a
+    fixed cyclic order gives every fn a fixed predecessor (a row right
+    after its identical twin runs warm), and forward/reversed
+    alternation gives the first/last rows back-to-back self-repeats at
+    the round boundaries that middle rows never get (a measured ~6%
+    edge for an edge row over its identical middle twin). Shuffling
+    spreads predecessors evenly; min-of-rounds then keeps each fn's
+    best context."""
+    outs = {name: fn() for name, fn in fns.items()}      # warmup/compile
+    jax.block_until_ready(list(outs.values()))
+    best = {name: float("inf") for name in fns}
+    order = list(fns)
+    shuffle = random.Random(0x5eed).shuffle
+    for _ in range(max(repeats, 1)):
+        shuffle(order)
+        for name in order:
+            t0 = time.perf_counter()
+            jax.block_until_ready(fns[name]())
+            best[name] = min(best[name],
+                             (time.perf_counter() - t0) * 1e6)
+    return {name: (outs[name], best[name]) for name in fns}
+
+
+def with_defaults(fn):
+    """Run ``fn`` with the autotuner disabled (``REPRO_TUNE_DISABLE=1``),
+    so every block param resolves to the hand-pinned ``DEFAULT_*``
+    registry fallback — the baseline side of the tuned-vs-default rows."""
+    def wrapped(*args, **kw):
+        from repro.kernels import tune
+        prev = os.environ.get(tune.DISABLE_ENV)
+        os.environ[tune.DISABLE_ENV] = "1"
+        try:
+            return fn(*args, **kw)
+        finally:
+            if prev is None:
+                os.environ.pop(tune.DISABLE_ENV, None)
+            else:
+                os.environ[tune.DISABLE_ENV] = prev
+    return wrapped
 
 
 # ---------------------------------------------------------------------------

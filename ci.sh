@@ -35,6 +35,12 @@ python -m pytest -x -q --ignore=tests/test_docs.py
 echo "== docs gate (snippet tests + dead intra-repo links) =="
 python -m pytest -q tests/test_docs.py
 
+echo "== autotuner quick sweep (self-checks + cache roundtrip, tmp cache) =="
+# --quick sweeps one small bucket per engine kernel into a THROWAWAY cache
+# path: proves the sweep driver, the determinism/schema self-checks and the
+# cache I/O on every PR without touching the committed TUNE_CACHE.json
+REPRO_TUNE_CACHE="$(mktemp -d)/tune_cache.json" python -m repro.tune --quick
+
 echo "== backend-parity smoke (all scan backends vs xla oracle) =="
 python -m benchmarks.run --smoke
 

@@ -87,7 +87,7 @@ def run_seeded_violations() -> tuple[list[str], int]:
     lines.extend(f"    {f}" for f in findings)
     found += len(findings)
     seeded_rules = {"kernel-oracle", "capability-consumed",
-                    "recompile-hazard", "host-sync"}
+                    "recompile-hazard", "host-sync", "tuned-block-params"}
     missing = seeded_rules - {f.rule for f in findings}
     if missing:
         lines.append(f"  MISSED seeded lint rules: {sorted(missing)}")

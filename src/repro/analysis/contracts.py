@@ -270,6 +270,21 @@ def _build_stage1_materialized(p):
     return jax.jit(f).lower(codes, luts, bias).compile()
 
 
+def _build_stage1_quantized(p, impl, lut_dtype):
+    from repro.kernels import ops
+    codes = _SDS((p["N"], p["M"]), jnp.uint8)
+    luts = _SDS((p["Q"], p["M"], p["K"]), jnp.float32)
+    bias = _SDS((p["N"],), jnp.float32)
+
+    def f(c, l, b):
+        return ops.adc_scan_topl(c, l, topl=p["L"], bias=b, impl=impl,
+                                 block_n=p.get("BN"), block_q=8,
+                                 chunk_n=p.get("CHUNK"),
+                                 lut_dtype=lut_dtype, overfetch=p["OF"])
+
+    return jax.jit(f).lower(codes, luts, bias).compile()
+
+
 def _build_stage1_gathered_xla(p):
     from repro.kernels.gather_topl import adc_gather_topl_stream_xla
     codes = _SDS((p["N"], p["M"]), jnp.uint8)
@@ -476,6 +491,53 @@ register(Contract(
     buckets=({"Q": 8, "N": 2048, "M": 8, "K": 64, "L": 32, "BN": 256},
              {"Q": 8, "N": 1024, "M": 4, "K": 32, "L": 16, "BN": 128}),
     forbid=(("f32", ("Q", "N")),),
+))
+
+register(Contract(
+    path_id="stage1.quantized.f16.xla",
+    description="quantized-LUT stage 1 (fp16 tables, over-fetched pool + "
+                "exact f32 re-score): still no (Q, N) score matrix, and "
+                "the f16 table the scan consumes must actually exist",
+    build=lambda p: _build_stage1_quantized(p, "xla", "float16"),
+    buckets=({"Q": 8, "N": 4096, "M": 8, "K": 64, "L": 32, "CHUNK": 512,
+              "OF": 2},),
+    forbid=(("f32", ("Q", "N")),),
+    require=(("f16", ("Q", "M", "K")),),
+))
+
+register(Contract(
+    path_id="stage1.quantized.i8.xla",
+    description="quantized-LUT stage 1 (int8 tables + pow2 scales): no "
+                "(Q, N) score matrix, and the s8 table must actually "
+                "exist (the scan is not silently falling back to f32)",
+    build=lambda p: _build_stage1_quantized(p, "xla", "int8"),
+    buckets=({"Q": 8, "N": 4096, "M": 8, "K": 64, "L": 32, "CHUNK": 512,
+              "OF": 2},),
+    forbid=(("f32", ("Q", "N")),),
+    require=(("s8", ("Q", "M", "K")),),
+))
+
+register(Contract(
+    path_id="stage1.quantized.f16.pallas",
+    description="quantized-LUT fused kernel (interpret off-TPU): f16 "
+                "tables reach the kernel, no (Q, N) matrix in its HLO",
+    build=lambda p: _build_stage1_quantized(p, "pallas", "float16"),
+    buckets=({"Q": 8, "N": 2048, "M": 8, "K": 64, "L": 32, "BN": 256,
+              "OF": 2},),
+    forbid=(("f32", ("Q", "N")),),
+    require=(("f16", ("Q", "M", "K")),),
+))
+
+register(Contract(
+    path_id="stage1.quantized.i8.pallas",
+    description="quantized-LUT fused kernel (int8 + pow2 scales, "
+                "interpret off-TPU): s8 tables reach the kernel, no "
+                "(Q, N) matrix in its HLO",
+    build=lambda p: _build_stage1_quantized(p, "pallas", "int8"),
+    buckets=({"Q": 8, "N": 2048, "M": 8, "K": 64, "L": 32, "BN": 256,
+              "OF": 2},),
+    forbid=(("f32", ("Q", "N")),),
+    require=(("s8", ("Q", "M", "K")),),
 ))
 
 register(Contract(

@@ -1,6 +1,6 @@
 """Repo-specific AST lint rules for the compressed-domain search engine.
 
-Four rules, each guarding an invariant the test suite cannot see locally
+Five rules, each guarding an invariant the test suite cannot see locally
 (they are properties of the whole tree, not of one function):
 
   kernel-oracle        every ``pallas_call`` kernel under ``kernels/`` is
@@ -25,6 +25,16 @@ Four rules, each guarding an invariant the test suite cannot see locally
                        ``parallel/``) — synchronization belongs to
                        benchmarks and the API edge, never inside the
                        engine.
+  tuned-block-params   kernel-facing call sites in ``kernels/ops.py`` must
+                       resolve block/chunk parameters through the
+                       autotuner registry (``repro.kernels.tune``), never
+                       hand-pin them: no integer-literal ``block_*`` /
+                       ``chunk*`` keyword at a ``*_pallas`` /
+                       ``*_stream_xla`` / ``*_chunked_xla`` call, no
+                       integer-literal default on ops' own block/chunk
+                       parameters, and at least one ``tune.best_config``
+                       resolution in the module. A pinned literal silently
+                       forks engine speed away from the tuner cache.
 
 "Traced" for recompile-hazard means: decorated with ``jax.jit`` (including
 ``functools.partial(jax.jit, ...)``), passed by name into ``jit`` / ``scan``
@@ -45,7 +55,7 @@ import pathlib
 import re
 
 ALL_RULES = ("kernel-oracle", "capability-consumed", "recompile-hazard",
-             "host-sync")
+             "host-sync", "tuned-block-params")
 
 #: directories (relative to the src root) whose compiled functions are the
 #: search hot path
@@ -378,11 +388,77 @@ def _rule_host_sync(tree: LintTree) -> list[Finding]:
     return findings
 
 
+# ---------------------------------------------------------------------------
+# rule: tuned-block-params
+# ---------------------------------------------------------------------------
+
+#: call-name suffixes that dispatch into a concrete kernel implementation
+_KERNEL_CALL_SUFFIXES = ("_pallas", "_stream_xla", "_chunked_xla")
+
+_BLOCK_PARAM_RE = re.compile(r"^(block_\w+|chunk(_\w+)?)$")
+
+
+def _rule_tuned_block_params(tree: LintTree) -> list[Finding]:
+    """ops.py (the kernel dispatch layer) must route every block/chunk
+    decision through ``tune.best_config`` — see module docstring."""
+    findings = []
+    for path in _iter_py(tree.src / "kernels"):
+        if path.name != "ops.py":
+            continue
+        fl = _FileLint(path)
+        kernel_calls = 0
+        resolves = False
+
+        def emit(node, msg):
+            if not fl.suppressed("tuned-block-params", node.lineno):
+                findings.append(Finding("tuned-block-params", str(path),
+                                        node.lineno, msg))
+
+        for node in ast.walk(fl.tree):
+            if isinstance(node, ast.Call):
+                name = _dotted(node.func)
+                if name.split(".")[-1] == "best_config":
+                    resolves = True
+                tail = name.split(".")[-1]
+                if tail.endswith(_KERNEL_CALL_SUFFIXES):
+                    kernel_calls += 1
+                    for kw in node.keywords:
+                        if (kw.arg and _BLOCK_PARAM_RE.match(kw.arg)
+                                and isinstance(kw.value, ast.Constant)
+                                and isinstance(kw.value.value, int)):
+                            emit(kw.value,
+                                 f"hand-pinned {kw.arg}={kw.value.value} at "
+                                 f"kernel call {tail!r}; resolve block "
+                                 "parameters via repro.tune "
+                                 "(tune.best_config)")
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                a = node.args
+                pos = list(zip(reversed(a.posonlyargs + a.args),
+                               reversed(a.defaults)))
+                kwo = [(arg, d) for arg, d in zip(a.kwonlyargs, a.kw_defaults)
+                       if d is not None]
+                for arg, default in pos + kwo:
+                    if (_BLOCK_PARAM_RE.match(arg.arg)
+                            and isinstance(default, ast.Constant)
+                            and isinstance(default.value, int)):
+                        emit(default,
+                             f"integer-literal default {arg.arg}="
+                             f"{default.value} on {node.name!r}; default to "
+                             "None and resolve via repro.tune")
+        if kernel_calls and not resolves:
+            findings.append(Finding(
+                "tuned-block-params", str(path), 1,
+                "ops.py dispatches kernels but never resolves "
+                "tune.best_config(...) — block parameters cannot be tuned"))
+    return findings
+
+
 _RULE_FNS = {
     "kernel-oracle": _rule_kernel_oracle,
     "capability-consumed": _rule_capability_consumed,
     "recompile-hazard": _rule_recompile_hazard,
     "host-sync": _rule_host_sync,
+    "tuned-block-params": _rule_tuned_block_params,
 }
 
 

@@ -41,6 +41,19 @@ resolves against instead of branching on backend names:
     code range is streamed once for all co-probing queries, replacing
     the host-built padded plan. Backends without it (onehot — its IVF
     formulation IS the materialized full scan) keep the gathered path.
+  * ``tuned``          — the backend's kernel block/chunk parameters
+    resolve through the autotuner registry (``repro.kernels.tune``):
+    per-(device kind, kernel, shape bucket) winners from a persisted
+    sweep cache, hand-pinned defaults as the zero-cache fallback.
+    ``Index.save`` records the active tuning fingerprint for such
+    backends so saved-index provenance includes how it was timed.
+  * ``quantized_lut``  — the backend's stage-1 faces accept reduced-
+    precision score tables (``lut_dtype='float16' | 'int8'``): the scan
+    selects an over-fetched candidate pool under quantized scores and
+    the pool is re-scored with the exact f32 chain before the final
+    top-L (``repro.kernels.lut_quant``). ``Index.search`` gates its
+    ``lut_dtype=`` argument on this flag — backends without it (onehot's
+    materialized matrix) reject quantized requests loudly.
 """
 from __future__ import annotations
 
@@ -123,7 +136,8 @@ def _on_tpu() -> bool:
 register_scan_backend(
     "xla", priority=0,
     description="pure-jnp gather oracle (always available)",
-    capabilities=("streaming_topl", "dispatch_topl"))
+    capabilities=("streaming_topl", "dispatch_topl", "tuned",
+                  "quantized_lut"))
 register_scan_backend(
     "onehot", priority=10, auto_select=lambda: False,
     description="one-hot matmul formulation in plain XLA (A/B target)")
@@ -131,4 +145,4 @@ register_scan_backend(
     "pallas", priority=100, auto_select=_on_tpu,
     description="fused Pallas TPU kernel (interpret mode off-TPU)",
     capabilities=("streaming_topl", "fused_topl", "fused_rerank",
-                  "dispatch_topl"))
+                  "dispatch_topl", "tuned", "quantized_lut"))

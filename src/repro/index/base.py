@@ -43,7 +43,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint.manager import load_pytree, save_pytree
+from repro.index.backend import backend_supports, resolve_scan_backend
 from repro.index.candidates import candidate_generator_for
+from repro.kernels import tune
 
 # kind -> Index subclass, populated by __init_subclass__
 _KINDS: dict[str, type["Index"]] = {}
@@ -259,8 +261,21 @@ class Index(abc.ABC):
                 f"({num_queries}, {self.ntotal})")
         return self._bias, jnp.where(mask, 0.0, jnp.inf).astype(jnp.float32)
 
+    def _check_quantized_request(self, lut_dtype: str, overfetch: int):
+        """Gate a ``lut_dtype``/``overfetch`` request on the resolved
+        backend's ``quantized_lut`` capability (loud, not silent f32)."""
+        if lut_dtype == "float32" and overfetch == 1:
+            return
+        impl = resolve_scan_backend(self.backend)
+        if not backend_supports(impl, "quantized_lut"):
+            raise ValueError(
+                f"backend {impl!r} does not declare the 'quantized_lut' "
+                f"capability; lut_dtype={lut_dtype!r} / "
+                f"overfetch={overfetch} need a streaming backend")
+
     def search(self, queries, k: int, *, use_rerank: bool | None = None,
-               use_d2: bool = True, filter_mask=None):
+               use_d2: bool = True, filter_mask=None,
+               lut_dtype: str = "float32", overfetch: int = 1):
         """Two-stage search: (Q, dim) queries -> (distances, indices), each
         (Q, k), sorted closest-first.
 
@@ -277,9 +292,18 @@ class Index(abc.ABC):
         over the kept points are bit-identical to searching an index that
         only contains them; when fewer than k points survive, the tail is
         reported as (distance=+inf, index=-1).
+
+        ``lut_dtype`` in {'float16', 'int8'} (with ``overfetch`` >= 1)
+        opts stage 1 into the reduced-precision fast path: the scan
+        selects ``overfetch * L`` candidates under quantized tables and
+        re-scores the pool with the exact f32 chain before the final
+        top-L (``repro.kernels.lut_quant``). Only backends with the
+        ``quantized_lut`` capability accept it; the default is the
+        bit-exact f32 path, unchanged.
         """
         if self.ntotal == 0:
             raise RuntimeError("search on an empty index (call add first)")
+        self._check_quantized_request(lut_dtype, overfetch)
         queries = jnp.asarray(queries)
         if use_rerank is None:
             use_rerank = self.rerank > 0
@@ -297,7 +321,8 @@ class Index(abc.ABC):
         luts = self._build_luts(queries)
         gen = candidate_generator_for(self.backend)
         bias, qbias = self._lower_filter(filter_mask, queries.shape[0])
-        d2, cand = gen.topl(self._codes, luts, bias, topl=topl, qbias=qbias)
+        d2, cand = gen.topl(self._codes, luts, bias, topl=topl, qbias=qbias,
+                            lut_dtype=lut_dtype, overfetch=overfetch)
         if not use_rerank:
             d, i = d2[:, :k], cand[:, :k]
             if filter_mask is not None:
@@ -405,10 +430,18 @@ class Index(abc.ABC):
         """Install a restored ``_tree``."""
 
     def save(self, path) -> None:
-        """Atomic save to a checkpoint directory (manager.save_pytree)."""
-        save_pytree(pathlib.Path(path), self._tree(),
-                    metadata={"index_kind": self.kind,
-                              "index_meta": self._metadata()})
+        """Atomic save to a checkpoint directory (manager.save_pytree).
+
+        For backends with the ``tuned`` capability the manifest also
+        records the active autotuner fingerprint (schema version, device
+        kind, tuned bucket count) — provenance for any timing attached to
+        the checkpoint; ``load`` ignores it.
+        """
+        metadata = {"index_kind": self.kind,
+                    "index_meta": self._metadata()}
+        if backend_supports(resolve_scan_backend(self.backend), "tuned"):
+            metadata["tuning"] = tune.cache_fingerprint()
+        save_pytree(pathlib.Path(path), self._tree(), metadata=metadata)
 
     @staticmethod
     def load(path) -> "Index":

@@ -64,14 +64,18 @@ class CandidateGenerator(abc.ABC):
         self.impl = impl                # concrete kernels.ops impl string
 
     @abc.abstractmethod
-    def topl(self, codes, luts, bias, *, topl: int, qbias=None):
+    def topl(self, codes, luts, bias, *, topl: int, qbias=None,
+             lut_dtype: str = "float32", overfetch: int = 1):
         """codes (N, M), luts (Q, M, K), bias None | (N,), qbias
         None | (Q, N) -> (scores, indices), each (Q, min(topl, N)),
         sorted closest-first with ties broken toward the smaller
-        database index."""
+        database index. ``lut_dtype``/``overfetch`` select the
+        reduced-precision pool scan + exact re-score (streaming engines
+        only — gate on the backend's ``quantized_lut`` capability)."""
 
     @abc.abstractmethod
-    def gather_topl(self, codes, rows, gids, luts, rowbias, *, topl: int):
+    def gather_topl(self, codes, rows, gids, luts, rowbias, *, topl: int,
+                    lut_dtype: str = "float32", overfetch: int = 1):
         """Gathered (IVF) stage 1: codes (N, M) buffer, rows/gids (Q, W)
         per-query slot plan (gids ascending per row, ``_IMAX`` pads),
         rowbias None | (Q, W) -> (scores, global ids), each
@@ -79,7 +83,8 @@ class CandidateGenerator(abc.ABC):
         carry the canonical ``_IMAX`` id."""
 
     def dispatch_topl(self, codes, gids_rows, rowbias, luts, cellterm,
-                      plan, *, topl: int, qkeep=None):
+                      plan, *, topl: int, qkeep=None, chunk=None, pos=None,
+                      lut_dtype: str = "float32", overfetch: int = 1):
         """Cell-batched (MoE-routed) IVF stage 1: codes (N, M)
         cell-grouped buffer, gids_rows (N,) row -> global id, rowbias
         None | (N,) per-row bias, luts (Q, M, K), cellterm (E+1, cap)
@@ -87,7 +92,10 @@ class CandidateGenerator(abc.ABC):
         ``repro.index.dispatch.DispatchPlan``, qkeep None | (Q, N) keep
         stream -> per-cell partial pools ((E+1, cap, L) scores / global
         ids) for ``dispatch.combine_pools``. Only backends declaring the
-        ``dispatch_topl`` capability implement it."""
+        ``dispatch_topl`` capability implement it. ``chunk`` must be the
+        tile width the plan was routed with (``Routing.chunk``; None
+        re-resolves the shared tuner entry); ``pos`` is the (n_ids,)
+        global id -> buffer row inverse the quantized re-score needs."""
         raise NotImplementedError(
             f"{type(self).__name__} has no cell-batched dispatch face; "
             "gate callers on supports_dispatch(backend)")
@@ -129,12 +137,23 @@ class MaterializedTopL(CandidateGenerator):
 
     materializes_scores = True
 
-    def topl(self, codes, luts, bias, *, topl: int, qbias=None):
+    def _check_exact(self, lut_dtype: str, overfetch: int):
+        if lut_dtype != "float32" or overfetch != 1:
+            raise ValueError(
+                f"{type(self).__name__} ({self.impl!r}) has no quantized-"
+                "LUT path — its formulation IS the materialized f32 "
+                "matrix; gate callers on the 'quantized_lut' capability")
+
+    def topl(self, codes, luts, bias, *, topl: int, qbias=None,
+             lut_dtype: str = "float32", overfetch: int = 1):
+        self._check_exact(lut_dtype, overfetch)
         return _materialized_topl(codes, luts, bias, qbias,
                                   topl=min(topl, codes.shape[0]),
                                   impl=self.impl)
 
-    def gather_topl(self, codes, rows, gids, luts, rowbias, *, topl: int):
+    def gather_topl(self, codes, rows, gids, luts, rowbias, *, topl: int,
+                    lut_dtype: str = "float32", overfetch: int = 1):
+        self._check_exact(lut_dtype, overfetch)
         return _materialized_gather_topl(
             codes, rows, gids, luts, rowbias,
             topl=min(topl, rows.shape[1]), impl=self.impl)
@@ -146,19 +165,27 @@ class StreamingTopL(CandidateGenerator):
 
     materializes_scores = False
 
-    def topl(self, codes, luts, bias, *, topl: int, qbias=None):
+    def topl(self, codes, luts, bias, *, topl: int, qbias=None,
+             lut_dtype: str = "float32", overfetch: int = 1):
         return ops.adc_scan_topl(codes, luts, topl=topl, bias=bias,
-                                 qbias=qbias, impl=self.impl)
+                                 qbias=qbias, impl=self.impl,
+                                 lut_dtype=lut_dtype, overfetch=overfetch)
 
-    def gather_topl(self, codes, rows, gids, luts, rowbias, *, topl: int):
+    def gather_topl(self, codes, rows, gids, luts, rowbias, *, topl: int,
+                    lut_dtype: str = "float32", overfetch: int = 1):
         return ops.adc_gather_topl(codes, rows, gids, luts, topl=topl,
-                                   rowbias=rowbias, impl=self.impl)
+                                   rowbias=rowbias, impl=self.impl,
+                                   lut_dtype=lut_dtype, overfetch=overfetch)
 
     def dispatch_topl(self, codes, gids_rows, rowbias, luts, cellterm,
-                      plan, *, topl: int, qkeep=None):
+                      plan, *, topl: int, qkeep=None, chunk=None, pos=None,
+                      lut_dtype: str = "float32", overfetch: int = 1):
         return ops.adc_dispatch_topl(codes, gids_rows, rowbias, luts,
                                      cellterm, plan, topl=topl,
-                                     qkeep=qkeep, impl=self.impl)
+                                     qkeep=qkeep, impl=self.impl,
+                                     chunk=chunk, pos=pos,
+                                     lut_dtype=lut_dtype,
+                                     overfetch=overfetch)
 
 
 def candidate_generator_for(backend: str | None = "auto") -> CandidateGenerator:

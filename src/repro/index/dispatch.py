@@ -41,8 +41,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.dispatch_topl import (DispatchPlan,
-                                         DEFAULT_DISPATCH_CHUNK)
+from repro.kernels import tune
+from repro.kernels.dispatch_topl import DispatchPlan
 
 _IMAX = np.iinfo(np.int32).max
 
@@ -57,6 +57,21 @@ class Routing(NamedTuple):
     comb_e: jax.Array     # (Q, P) i32 routed-cell row of each probe pair
     comb_slot: jax.Array  # (Q, P) i32 slot within the cell's query batch
     overflow: jax.Array   # () i32 pairs dropped by the capacity bound
+    chunk: int = 0        # tile width the plan was built with — pass it
+                          # to the scan so router and kernel agree
+
+
+def _resolve_chunk(probe, offsets, chunk: int | None) -> int:
+    """Tile width for a probe batch: the caller's explicit value, else the
+    autotuner winner for the IMPL-AGNOSTIC ``adc_dispatch_topl`` registry
+    entry at this batch's (n, q) bucket — one shared entry, so the router
+    here and ``ops.adc_dispatch_topl`` resolve the SAME width by
+    construction (a mismatch would silently mis-tile the plan)."""
+    if chunk is not None:
+        return chunk
+    n = int(np.asarray(offsets).reshape(-1)[-1])
+    q = int(np.asarray(probe).shape[0])
+    return tune.best_config("adc_dispatch_topl", n=max(n, 1), q=q)["chunk"]
 
 
 def _bucket(n: int, floor: int = 8) -> int:
@@ -162,18 +177,24 @@ def _route(probe, offsets, *, e_b: int, cap: int, t_b: int, chunk: int):
                    overflow.astype(jnp.int32))
 
 
-def route_stats(probe, offsets, *, chunk: int = DEFAULT_DISPATCH_CHUNK):
-    """Measure a probe batch's routing: (E, cap_needed, T) host ints."""
+def route_stats(probe, offsets, *, chunk: int | None = None):
+    """Measure a probe batch's routing: (E, cap_needed, T) host ints.
+    ``chunk=None`` resolves the tuned tile width (``_resolve_chunk``)."""
+    chunk = _resolve_chunk(probe, offsets, chunk)
     stats = np.asarray(_route_stats(jnp.asarray(probe),
                                     jnp.asarray(offsets, jnp.int32),
                                     chunk=chunk))
     return int(stats[0]), int(stats[1]), int(stats[2])
 
 
-def build_dispatch(probe, offsets, *, chunk: int = DEFAULT_DISPATCH_CHUNK,
+def build_dispatch(probe, offsets, *, chunk: int | None = None,
                    capacity_factor: float | None = None):
     """Route one probe batch. Returns (Routing | None, stats) where stats
     is the measured (E, cap_needed, T).
+
+    ``chunk=None`` resolves the tuned tile width for this batch's shape
+    bucket (``_resolve_chunk``); the width used is recorded on
+    ``Routing.chunk`` so the scan call can reuse it verbatim.
 
     With the default ``capacity_factor=None`` the slot capacity buckets
     the TRUE maximum co-probing batch — nothing is ever dropped and the
@@ -182,6 +203,7 @@ def build_dispatch(probe, offsets, *, chunk: int = DEFAULT_DISPATCH_CHUNK,
     returns ``None`` (the caller's loud fallback) instead of silently
     dropping candidates that cannot be proven non-top-L.
     """
+    chunk = _resolve_chunk(probe, offsets, chunk)
     probe = jnp.asarray(probe)
     offsets = jnp.asarray(offsets, jnp.int32)
     q, p = probe.shape
@@ -193,11 +215,11 @@ def build_dispatch(probe, offsets, *, chunk: int = DEFAULT_DISPATCH_CHUNK,
     routing = _route(probe, offsets, e_b=_bucket(e_count),
                      cap=_bucket(cap_needed), t_b=_bucket(t_count),
                      chunk=chunk)
-    return routing, (e_count, cap_needed, t_count)
+    return routing._replace(chunk=chunk), (e_count, cap_needed, t_count)
 
 
 def build_shard_dispatch(probe, offsets, bounds, *,
-                         chunk: int = DEFAULT_DISPATCH_CHUNK):
+                         chunk: int | None = None):
     """Per-shard routings for the cell-sharded device face.
 
     offsets the FULL host CSR (nlist + 1,); bounds the ``num_shards + 1``
@@ -214,6 +236,7 @@ def build_shard_dispatch(probe, offsets, bounds, *,
     here: the sharded face always routes losslessly (per-shard drops
     could not fall back shard-locally without desyncing the SPMD step).
     """
+    chunk = _resolve_chunk(probe, offsets, chunk)
     probe = jnp.asarray(probe)
     off_np = np.asarray(offsets, np.int64)
     clipped = []
@@ -227,7 +250,8 @@ def build_shard_dispatch(probe, offsets, bounds, *,
     e_b = _bucket(int(stats[:, 0].max()))
     cap = _bucket(int(stats[:, 1].max()))
     t_b = _bucket(int(stats[:, 2].max()))
-    return [_route(probe, offs[s], e_b=e_b, cap=cap, t_b=t_b, chunk=chunk)
+    return [_route(probe, offs[s], e_b=e_b, cap=cap, t_b=t_b,
+                   chunk=chunk)._replace(chunk=chunk)
             for s in range(offs.shape[0])]
 
 

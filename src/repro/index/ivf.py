@@ -552,7 +552,8 @@ class IVFIndex(base.Index):
             cellterm = jnp.zeros(qidx.shape, jnp.float32)
         return ids, rowbias, qkeep, cellterm
 
-    def _dispatch_pool(self, queries, probe, cd, filter_mask, topl: int):
+    def _dispatch_pool(self, queries, probe, cd, filter_mask, topl: int,
+                       lut_dtype: str = "float32", overfetch: int = 1):
         """Stage 1 through the cell-batched dispatch face: route the
         probe on device, stream every probed cell once, scatter-merge the
         per-cell partials. Returns the (d2, global ids) pool —
@@ -579,7 +580,8 @@ class IVFIndex(base.Index):
         gen = candidate_generator_for(self.backend)
         part_s, part_g = gen.dispatch_topl(
             self._codes, self._ids_dev, rowbias, luts, cellterm,
-            routing.plan, topl=topl, qkeep=qkeep)
+            routing.plan, topl=topl, qkeep=qkeep, chunk=routing.chunk,
+            pos=self._pos_dev, lut_dtype=lut_dtype, overfetch=overfetch)
         return dsp.combine_pools(part_s, part_g, routing.comb_e,
                                  routing.comb_slot, topl=topl)
 
@@ -587,7 +589,8 @@ class IVFIndex(base.Index):
 
     def search(self, queries, k: int, *, nprobe: int | None = None,
                use_rerank: bool | None = None, use_d2: bool = True,
-               filter_mask=None, use_dispatch: bool | None = None):
+               filter_mask=None, use_dispatch: bool | None = None,
+               lut_dtype: str = "float32", overfetch: int = 1):
         """Probed two-stage search (same contract as ``Index.search`` plus
         ``nprobe``). Slots the probe misses simply never enter the pool;
         when the probed pool holds fewer than k points the tail is
@@ -597,9 +600,15 @@ class IVFIndex(base.Index):
         (True) or the padded gathered plan (False); the default resolves
         per backend via the ``dispatch_topl`` capability. Both faces are
         bit-identical — the knob is a perf/control choice, never a
-        quality one."""
+        quality one.
+
+        ``lut_dtype``/``overfetch`` opt stage 1 into the reduced-precision
+        pool scan + exact f32 re-score (``Index.search`` docstring) on
+        either face; backends without the ``quantized_lut`` capability
+        reject the request."""
         if self.ntotal == 0:
             raise RuntimeError("search on an empty index (call add first)")
+        self._check_quantized_request(lut_dtype, overfetch)
         queries = jnp.asarray(queries)
         if use_rerank is None:
             use_rerank = self.rerank > 0
@@ -623,7 +632,8 @@ class IVFIndex(base.Index):
         if use_dispatch:
             pool = self._dispatch_pool(
                 queries, probe, cd, filter_mask,
-                topl=self.rerank if use_rerank else k)
+                topl=self.rerank if use_rerank else k,
+                lut_dtype=lut_dtype, overfetch=overfetch)
             if pool is not None:
                 return self._finish_pool(queries, pool[0], pool[1], k,
                                          use_rerank=use_rerank)
@@ -639,7 +649,8 @@ class IVFIndex(base.Index):
         topl = min(self.rerank if use_rerank else k, rows.shape[1])
         gen = candidate_generator_for(self.backend)
         d2, ids = gen.gather_topl(self._codes, rows, gids, luts, rowbias,
-                                  topl=topl)
+                                  topl=topl, lut_dtype=lut_dtype,
+                                  overfetch=overfetch)
         return self._finish_pool(queries, d2, ids, k,
                                  use_rerank=use_rerank)
 

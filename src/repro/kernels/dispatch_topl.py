@@ -38,8 +38,9 @@ cell consecutive):
     gid ``_IMAX`` — identical bits to the gathered kernels' pad handling.
 
 Tie semantics are EXACTLY those of flat search: the in-kernel merge is the
-same lexicographic (score asc, global id asc) select loop as
-``gather_topl``, so per-cell partial top-Ls merged across cells
+same shared bitonic (score asc, global id asc) pre-top-L merge
+(``kernels/merge.py``) as ``gather_topl``, so per-cell partial top-Ls
+merged across cells
 (``index.dispatch.combine_pools`` -> ``candidates.merge_topl``) reproduce
 the padded-plan results bit-for-bit, scores AND ids.
 
@@ -59,6 +60,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import merge
 
 DEFAULT_DISPATCH_CHUNK = 128
 
@@ -91,11 +94,11 @@ def _adc_dispatch_topl_kernel(tile_e_ref, tile_block_ref, tile_first_ref,
                               rowb_ref, qidx_ref, cellterm_ref, luts_ref,
                               *rest, topl: int, chunk: int, cap: int,
                               num_q: int, num_books: int, book_size: int,
-                              has_qkeep: bool):
-    if has_qkeep:
-        qkeep_ref, scores_ref, idx_ref = rest
-    else:
-        (scores_ref, idx_ref), qkeep_ref = rest, None
+                              has_qkeep: bool, has_scale: bool):
+    rest = list(rest)
+    qkeep_ref = rest.pop(0) if has_qkeep else None
+    scale_ref = rest.pop(0) if has_scale else None
+    scores_ref, idx_ref = rest
     t = pl.program_id(0)
 
     @pl.when(tile_first_ref[t] == 1)
@@ -108,20 +111,32 @@ def _adc_dispatch_topl_kernel(tile_e_ref, tile_block_ref, tile_first_ref,
     qidx = qidx_ref[...][0]                                    # (cap,)
     iota_q = jax.lax.broadcasted_iota(jnp.int32, (cap, num_q), 1)
     onehot_q = (qidx[:, None] == iota_q).astype(jnp.float32)   # (cap, Q)
-    luts = luts_ref[...].reshape(num_q, num_books * book_size)
+    # quantized tables are f32-cast for the routing dot (an exact copy of
+    # the f32-cast entries — one nonzero per row), so scoring below sees
+    # exactly f32(qlut); a no-op for the default f32 tables
+    luts = luts_ref[...].astype(jnp.float32).reshape(
+        num_q, num_books * book_size)
     lut_e = jax.lax.dot(onehot_q, luts,
                         preferred_element_type=jnp.float32)
     lut_e = lut_e.reshape(cap, num_books, book_size)
+    scale_e = None
+    if has_scale:                      # routed copy of the int8 scales
+        scale_e = jax.lax.dot(onehot_q, scale_ref[...],
+                              preferred_element_type=jnp.float32)  # (cap, M)
 
     # --- score the code tile once for the whole query batch: per-m one-hot
-    # contraction, left-to-right m accumulation (adc_scan_ref chain) ---
+    # contraction, left-to-right m accumulation (adc_scan_ref chain); int8
+    # scales multiply each per-m part BEFORE the chain (q_ref's order) ---
     codes = codes_ref[...].astype(jnp.int32)                   # (chunk, M)
     iota_k = jax.lax.broadcasted_iota(jnp.int32, (book_size, chunk), 0)
     acc = jnp.zeros((cap, chunk), jnp.float32)
     for m in range(num_books):                                 # M is static
         onehot_c = (codes[:, m][None, :] == iota_k).astype(jnp.float32)
-        acc = acc + jax.lax.dot(lut_e[:, m, :], onehot_c,
-                                preferred_element_type=jnp.float32)
+        part = jax.lax.dot(lut_e[:, m, :], onehot_c,
+                           preferred_element_type=jnp.float32)
+        if has_scale:
+            part = part * scale_e[:, m][:, None]
+        acc = acc + part
 
     # bias composition order is the padded path's _plan_rowbias order:
     # (row stream + per-(query, cell) term) added as ONE slot value, the
@@ -145,27 +160,11 @@ def _adc_dispatch_topl_kernel(tile_e_ref, tile_block_ref, tile_first_ref,
     gids = jnp.broadcast_to(gid_ref[...][0][None, :], (cap, chunk))
     gids = jnp.where(acc == jnp.inf, _IMAX, gids)
 
-    # --- merge the tile into the cell's running heap: L lexicographic
-    # (score, global id) minima of [heap | tile] — same loop as
+    # --- merge the tile into the cell's running heap: shared bitonic
+    # pre-top-L + merge (kernels/merge.py) — same tie semantics as
     # gather_topl, so tie resolution is identical everywhere ---
-    cand_s = jnp.concatenate([scores_ref[...][0], acc], axis=1)
-    cand_g = jnp.concatenate([idx_ref[...][0], gids], axis=1)
-
-    def select(l, carry):
-        cs, cg, out_s, out_g = carry
-        best = jnp.min(cs, axis=1)                             # (cap,)
-        at_best = cs == best[:, None]
-        sel = jnp.min(jnp.where(at_best, cg, _IMAX), axis=1)
-        out_s = jax.lax.dynamic_update_slice(out_s, best[:, None], (0, l))
-        out_g = jax.lax.dynamic_update_slice(out_g, sel[:, None], (0, l))
-        knocked = at_best & (cg == sel[:, None])
-        return (jnp.where(knocked, jnp.inf, cs),
-                jnp.where(knocked, _IMAX, cg), out_s, out_g)
-
-    init = (cand_s, cand_g,
-            jnp.full((cap, topl), jnp.inf, jnp.float32),
-            jnp.full((cap, topl), _IMAX, jnp.int32))
-    _, _, out_s, out_g = jax.lax.fori_loop(0, topl, select, init)
+    out_s, out_g = merge.merge_block_topl(
+        scores_ref[...][0], idx_ref[...][0], acc, gids, topl)
     scores_ref[...] = out_s[None]
     idx_ref[...] = out_g[None]
 
@@ -174,7 +173,8 @@ def _adc_dispatch_topl_kernel(tile_e_ref, tile_block_ref, tile_first_ref,
 def adc_dispatch_topl_pallas(codes: jax.Array, gids_rows: jax.Array,
                              rowbias: jax.Array, luts: jax.Array,
                              cellterm: jax.Array, plan: DispatchPlan,
-                             qkeep: jax.Array | None = None, *, topl: int,
+                             qkeep: jax.Array | None = None,
+                             scale: jax.Array | None = None, *, topl: int,
                              chunk: int = DEFAULT_DISPATCH_CHUNK,
                              interpret: bool = False):
     """Fused cell-batched scan+top-L over a routed tile plan.
@@ -190,6 +190,8 @@ def adc_dispatch_topl_pallas(codes: jax.Array, gids_rows: jax.Array,
     plan:      the DispatchPlan tile work-list (see class doc).
     qkeep:     None | (Q, NP) float32 0/1 keep stream in BUFFER-ROW column
                order (the lowered per-query filter mask).
+    scale:     None | (Q, M) float32 int8 affine scales (``luts`` may be
+               the float16/int8 quantized tables of ``lut_quant``).
 
     Returns (scores, ids): ((E+1, cap, topl) f32, (E+1, cap, topl) i32) —
     per-cell partial pools, each slot's top-L sorted by (score asc, global
@@ -204,7 +206,7 @@ def adc_dispatch_topl_pallas(codes: jax.Array, gids_rows: jax.Array,
     kernel = functools.partial(
         _adc_dispatch_topl_kernel, topl=topl, chunk=chunk, cap=cap,
         num_q=num_q, num_books=num_books, book_size=book_size,
-        has_qkeep=qkeep is not None)
+        has_qkeep=qkeep is not None, has_scale=scale is not None)
     in_specs = [
         pl.BlockSpec((chunk, num_books),
                      lambda t, te, tb, tf, tlo, thi: (tb[t], 0)),
@@ -221,6 +223,10 @@ def adc_dispatch_topl_pallas(codes: jax.Array, gids_rows: jax.Array,
         in_specs.append(pl.BlockSpec(
             (num_q, chunk), lambda t, te, tb, tf, tlo, thi: (0, tb[t])))
         args.append(qkeep)
+    if scale is not None:
+        in_specs.append(pl.BlockSpec(
+            (num_q, num_books), lambda t, te, tb, tf, tlo, thi: (0, 0)))
+        args.append(scale)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=5,
         grid=(t_b,),
@@ -248,7 +254,8 @@ def adc_dispatch_topl_pallas(codes: jax.Array, gids_rows: jax.Array,
 def adc_dispatch_topl_stream_xla(codes: jax.Array, gids_rows: jax.Array,
                                  rowbias: jax.Array, luts: jax.Array,
                                  cellterm: jax.Array, plan: DispatchPlan,
-                                 qkeep: jax.Array | None = None, *,
+                                 qkeep: jax.Array | None = None,
+                                 scale: jax.Array | None = None, *,
                                  topl: int,
                                  chunk: int = DEFAULT_DISPATCH_CHUNK):
     """XLA fallback with the same streaming semantics: a ``lax.scan`` over
@@ -262,6 +269,12 @@ def adc_dispatch_topl_stream_xla(codes: jax.Array, gids_rows: jax.Array,
     num_books = codes.shape[1]
     e1, cap = plan.qidx.shape
     num_q = luts.shape[0]
+    if luts.dtype != jnp.float32:      # dequantize ONCE, outside the scan
+        # bitwise-identical and faster than the narrow gather+convert —
+        # same argument as topl_scan.adc_scan_topl_stream_xla
+        luts = luts.astype(jnp.float32)
+        if scale is not None:
+            luts = luts * scale[:, :, None]
 
     def step(carry, inp):
         hs, hg = carry                                     # (E+1, cap, L)

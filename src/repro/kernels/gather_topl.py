@@ -46,6 +46,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import merge
+
 DEFAULT_GATHER_BLOCK_W = 512
 DEFAULT_GATHER_BLOCK_Q = 8
 DEFAULT_CHUNK_W = 2048
@@ -54,8 +56,12 @@ _IMAX = jnp.iinfo(jnp.int32).max
 
 
 def _adc_gather_topl_kernel(codes_ref, gids_ref, bias_ref, luts_ref,
-                            scores_ref, idx_ref, *, topl: int, block_w: int,
-                            block_q: int, num_books: int, book_size: int):
+                            *refs, topl: int, block_w: int,
+                            block_q: int, num_books: int, book_size: int,
+                            has_scale: bool):
+    refs = list(refs)
+    scale_ref = refs.pop(0) if has_scale else None
+    scores_ref, idx_ref = refs
     wi = pl.program_id(1)
 
     @pl.when(wi == 0)
@@ -69,14 +75,18 @@ def _adc_gather_topl_kernel(codes_ref, gids_ref, bias_ref, luts_ref,
     # slot's score is bit-identical to the same point's flat score ---
     codes = codes_ref[...].astype(jnp.int32)           # (Bq, Bw, M)
     luts = luts_ref[...]                               # (Bq, M, K)
+    scale = scale_ref[...] if has_scale else None      # (Bq, M)
     acc = jnp.zeros((block_q, block_w), jnp.float32)
     iota_k = jax.lax.broadcasted_iota(jnp.int32, (1, 1, book_size), 2)
     for m in range(num_books):                         # M is static (8 or 16)
         onehot = (codes[:, :, m:m + 1] == iota_k).astype(jnp.float32)
-        acc = acc + jax.lax.dot_general(
+        part = jax.lax.dot_general(
             luts[:, m, :].astype(jnp.float32), onehot,
             dimension_numbers=(((1,), (2,)), ((0,), (0,))),
             preferred_element_type=jnp.float32)
+        if has_scale:                  # int8: per-(query, book) scale on
+            part = part * scale[:, m][:, None]   # each part BEFORE the chain
+        acc = acc + part
     acc = acc + bias_ref[...]
 
     # pad slots (gid == _IMAX) score +inf; +inf slots (filtered) get the
@@ -85,26 +95,10 @@ def _adc_gather_topl_kernel(codes_ref, gids_ref, bias_ref, luts_ref,
     acc = jnp.where(gids == _IMAX, jnp.inf, acc)
     gids = jnp.where(acc == jnp.inf, _IMAX, gids)
 
-    # --- merge tile into the running heap: L lexicographic minima of
-    # [heap | tile] by (score, global id) — identical to topl_scan ---
-    cand_s = jnp.concatenate([scores_ref[...], acc], axis=1)
-    cand_g = jnp.concatenate([idx_ref[...], gids], axis=1)
-
-    def select(l, carry):
-        cs, cg, out_s, out_g = carry
-        best = jnp.min(cs, axis=1)                     # (Bq,)
-        at_best = cs == best[:, None]
-        sel = jnp.min(jnp.where(at_best, cg, _IMAX), axis=1)
-        out_s = jax.lax.dynamic_update_slice(out_s, best[:, None], (0, l))
-        out_g = jax.lax.dynamic_update_slice(out_g, sel[:, None], (0, l))
-        knocked = at_best & (cg == sel[:, None])
-        return (jnp.where(knocked, jnp.inf, cs),
-                jnp.where(knocked, _IMAX, cg), out_s, out_g)
-
-    init = (cand_s, cand_g,
-            jnp.full((block_q, topl), jnp.inf, jnp.float32),
-            jnp.full((block_q, topl), _IMAX, jnp.int32))
-    _, _, out_s, out_g = jax.lax.fori_loop(0, topl, select, init)
+    # --- merge tile into the running heap: shared bitonic pre-top-L +
+    # merge (kernels/merge.py) — identical tie semantics to topl_scan ---
+    out_s, out_g = merge.merge_block_topl(
+        scores_ref[...], idx_ref[...], acc, gids, topl)
     scores_ref[...] = out_s
     idx_ref[...] = out_g
 
@@ -112,7 +106,8 @@ def _adc_gather_topl_kernel(codes_ref, gids_ref, bias_ref, luts_ref,
 @functools.partial(jax.jit, static_argnames=("topl", "block_w", "block_q",
                                              "interpret"))
 def adc_gather_topl_pallas(gathered_codes: jax.Array, gids: jax.Array,
-                           rowbias: jax.Array, luts: jax.Array, *, topl: int,
+                           rowbias: jax.Array, luts: jax.Array,
+                           scale: jax.Array | None = None, *, topl: int,
                            block_w: int = DEFAULT_GATHER_BLOCK_W,
                            block_q: int = DEFAULT_GATHER_BLOCK_Q,
                            interpret: bool = False):
@@ -121,7 +116,10 @@ def adc_gather_topl_pallas(gathered_codes: jax.Array, gids: jax.Array,
     gathered_codes: (Q, W, M) uint8/int32, W % block_w == 0 (ops.py pads).
     gids:           (Q, W) int32 global ids; _IMAX marks pad slots.
     rowbias:        (Q, W) float32 additive per-slot term (+inf filters).
-    luts:           (Q, M, K) float32, Q % block_q == 0 (ops.py pads).
+    luts:           (Q, M, K) float32, Q % block_q == 0 (ops.py pads) —
+                    or the float16/int8 quantized tables of ``lut_quant``.
+    scale:          optional (Q, M) float32 int8 affine scales (None for
+                    f32/f16 tables).
     Returns (scores, ids): ((Q, topl) f32, (Q, topl) i32), sorted by
     (score asc, global id asc).
     """
@@ -133,18 +131,24 @@ def adc_gather_topl_pallas(gathered_codes: jax.Array, gids: jax.Array,
     grid = (q // block_q, w // block_w)
     kernel = functools.partial(
         _adc_gather_topl_kernel, topl=topl, block_w=block_w, block_q=block_q,
-        num_books=num_books, book_size=book_size)
+        num_books=num_books, book_size=book_size, has_scale=scale is not None)
+    in_specs = [
+        pl.BlockSpec((block_q, block_w, num_books),
+                     lambda qi, wi: (qi, wi, 0)),
+        pl.BlockSpec((block_q, block_w), lambda qi, wi: (qi, wi)),
+        pl.BlockSpec((block_q, block_w), lambda qi, wi: (qi, wi)),
+        pl.BlockSpec((block_q, num_books, book_size),
+                     lambda qi, wi: (qi, 0, 0)),
+    ]
+    operands = [gathered_codes, gids, rowbias, luts]
+    if scale is not None:
+        in_specs.append(pl.BlockSpec((block_q, num_books),
+                                     lambda qi, wi: (qi, 0)))
+        operands.append(scale)
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_q, block_w, num_books),
-                         lambda qi, wi: (qi, wi, 0)),
-            pl.BlockSpec((block_q, block_w), lambda qi, wi: (qi, wi)),
-            pl.BlockSpec((block_q, block_w), lambda qi, wi: (qi, wi)),
-            pl.BlockSpec((block_q, num_books, book_size),
-                         lambda qi, wi: (qi, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((block_q, topl), lambda qi, wi: (qi, 0)),
             pl.BlockSpec((block_q, topl), lambda qi, wi: (qi, 0)),
@@ -154,13 +158,14 @@ def adc_gather_topl_pallas(gathered_codes: jax.Array, gids: jax.Array,
             jax.ShapeDtypeStruct((q, topl), jnp.int32),
         ],
         interpret=interpret,
-    )(gathered_codes, gids, rowbias, luts)
+    )(*operands)
 
 
 @functools.partial(jax.jit, static_argnames=("topl", "chunk_w"))
 def adc_gather_topl_stream_xla(codes: jax.Array, rows: jax.Array,
                                gids: jax.Array, rowbias: jax.Array,
-                               luts: jax.Array, *, topl: int,
+                               luts: jax.Array,
+                               scale: jax.Array | None = None, *, topl: int,
                                chunk_w: int = DEFAULT_CHUNK_W):
     """XLA fallback with the same streaming semantics: a ``lax.scan`` over
     (Q, chunk_w) slot chunks carrying the (Q, L) heap. The gather happens
@@ -174,6 +179,15 @@ def adc_gather_topl_stream_xla(codes: jax.Array, rows: jax.Array,
     """
     q, w = rows.shape
     num_books = codes.shape[1]
+    if luts.dtype != jnp.float32:      # dequantize ONCE, outside the scan
+        # bitwise-identical to gathering in the reduced dtype and
+        # converting/scaling per part (f32 widening is exact; the int8
+        # scale multiply is the same IEEE op either side of the gather),
+        # and ~2x faster: CPU XLA's narrow gather+convert lowering loses
+        # to the plain f32 gather (see topl_scan.adc_scan_topl_stream_xla)
+        luts = luts.astype(jnp.float32)
+        if scale is not None:
+            luts = luts * scale[:, :, None]
     pad = (-w) % chunk_w
     rows_c = jnp.moveaxis(
         jnp.pad(rows, ((0, 0), (0, pad))).reshape(q, -1, chunk_w), 1, 0)

@@ -1,0 +1,122 @@
+"""Reduced-precision stage-1 LUT quantization (the opt-in fast path).
+
+Stage 1's inner loop is LUT traffic: every scored point gathers M table
+entries. Halving (fp16) or quartering (int8) the bytes behind that gather
+buys bandwidth at the cost of rounded scores — so the engine treats the
+quantized scan as a POOL SELECTOR only: it over-fetches ``L' =
+overfetch * L`` candidates under the quantized order, then re-scores the
+surviving pool with the exact f32 chain and takes the exact
+lexicographic top-L. With ``overfetch = 1`` and ``lut_dtype='float32'``
+the quantized machinery is bypassed entirely (bit-identical to the
+default path); quantized modes trade a bounded recall loss (measured
+>= 0.999 at overfetch 2 in ``tests/test_quantized.py``) for scan speed.
+
+Quantization schemes (per query q, book m — one (scale, zero-point) pair
+per (q, m) row of the (Q, M, K) table):
+
+  float16  the table is cast to f16; kernels gather f16 and accumulate
+           in f32, so the quantized score is ``sum_m f32(f16(lut))``.
+  int8     affine: ``zp = (max + min) / 2``, ``scale`` the smallest POWER
+           OF TWO >= ``(max - min) / 254``,
+           ``q8 = clip(round((lut - zp) / scale), -127, 127)``; kernels
+           gather i8 and accumulate ``sum_m f32(q8) * scale[q, m]`` in
+           f32. The per-query offset ``sum_m zp[q, m]`` is deliberately
+           DROPPED: it is constant across all candidates of a query, so
+           the selected pool is invariant to it, and pool survivors are
+           re-scored exactly anyway — dropping it keeps the kernels
+           scale-only.
+
+           The power-of-two scale costs at most one quantization bit
+           (>= 7 effective bits) and buys bit-exactness across compilers:
+           ``f32(q8) * scale`` is then EXACT (no rounding), so XLA's
+           mul+add -> FMA contraction — which it applies or skips
+           depending on fusion context — cannot change a single bit of
+           the accumulation chain (an FMA over an exact product rounds
+           in exactly the same place as the separate add). With a
+           free-form scale the same chain differs by 1 ulp between the
+           eager oracle and the jitted scan.
+
+The quantized ranking semantics are pinned by the ``*_q_ref`` oracles in
+``ref.py``; every impl (pallas, xla) must match them bit-for-bit so the
+selected pools — and therefore the final exact results — are
+implementation-independent.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_IMAX = jnp.iinfo(jnp.int32).max
+
+#: lut_dtype values accepted by the search/ops APIs
+LUT_DTYPES = ("float32", "float16", "int8")
+
+
+def check_lut_dtype(lut_dtype: str) -> str:
+    if lut_dtype not in LUT_DTYPES:
+        raise ValueError(f"unknown lut_dtype {lut_dtype!r} "
+                         f"(choose from {LUT_DTYPES})")
+    return lut_dtype
+
+
+def quantize_luts(luts: jax.Array, lut_dtype: str):
+    """Quantize f32 (Q, M, K) score tables for the reduced-precision scan.
+
+    Returns ``(qluts, scale)``: for 'float16' ``(f16 tables, None)``; for
+    'int8' ``(i8 tables, (Q, M) f32 per-(query, book) scales)`` — the
+    affine zero-point is folded away (see module doc). The 'float32'
+    passthrough stays eager (no copy); the quantizing branches are
+    jitted (tables are small; per-op eager dispatch would dominate).
+    """
+    check_lut_dtype(lut_dtype)
+    if lut_dtype == "float32":
+        return luts.astype(jnp.float32), None
+    return _quantize_luts_jit(luts, lut_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("lut_dtype",))
+def _quantize_luts_jit(luts: jax.Array, lut_dtype: str):
+    if lut_dtype == "float16":
+        return luts.astype(jnp.float16), None
+    hi = jnp.max(luts, axis=2)                              # (Q, M)
+    lo = jnp.min(luts, axis=2)
+    zp = (hi + lo) * 0.5
+    raw = jnp.maximum(hi - lo, jnp.float32(1e-30)) / 254.0
+    # smallest power of two >= raw: keeps f32(q8) * scale exact (module doc)
+    scale = jnp.exp2(jnp.ceil(jnp.log2(raw)))
+    q8 = jnp.clip(jnp.round((luts - zp[..., None]) / scale[..., None]),
+                  -127, 127).astype(jnp.int8)
+    return q8, scale.astype(jnp.float32)
+
+
+def pool_width(topl: int, overfetch: int, limit: int) -> int:
+    """The over-fetched pool width L' = overfetch * L, clamped to the
+    scannable population."""
+    if overfetch < 1:
+        raise ValueError(f"overfetch must be >= 1, got {overfetch}")
+    return min(limit, max(topl, int(overfetch) * topl))
+
+
+def exact_topl(scores: jax.Array, gids: jax.Array, topl: int):
+    """Exact lexicographic (score asc, gid asc) top-``topl`` over an
+    UNORDERED candidate pool (…, P) — the final selection after the exact
+    f32 re-score, tie contract identical to every exact kernel path.
+
+    ``lexsort``'s last key is primary, so sorting by (gid, score) ranks
+    equal scores by ascending gid: the tie contract of every exact
+    kernel path.
+
+    Perf note (CPU XLA, measured at the (32, 200) pool shape): this
+    two-key lexsort costs ~1.2ms/call, which dominates the re-score
+    stage — but every exact alternative lands in the same band, because
+    the selection PRIMITIVES are the floor, not the algorithm:
+    ``lax.top_k`` alone is ~350us at k=L and k-linear (k=P' costs
+    ~950us), an O(P^2) vectorized rank-select is ~1.3-1.9ms, and a
+    bitcast-keyed gid-presort + positional top_k is ~1.3ms. Keep the
+    lexsort: it is the simplest exact formulation and within noise of
+    the fastest measured variant."""
+    order = jnp.lexsort((gids, scores), axis=-1)[..., :topl]
+    return (jnp.take_along_axis(scores, order, axis=-1),
+            jnp.take_along_axis(gids, order, axis=-1))

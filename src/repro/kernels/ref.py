@@ -180,6 +180,121 @@ def adc_dispatch_topl_ref(codes: jax.Array, gids_rows: jax.Array,
     return -neg, jnp.take_along_axis(gids, pos, axis=-1)
 
 
+def adc_scan_batch_q_ref(codes: jax.Array, qluts: jax.Array,
+                         scale: jax.Array | None = None) -> jax.Array:
+    """Quantized-LUT multi-query scan oracle (the reduced-precision pool
+    selector of ``kernels/lut_quant.py``).
+
+    codes (N, M) integer; qluts (Q, M, K) float16 (scale None) or int8
+    with scale (Q, M) f32 per-(query, book) affine scales -> (Q, N) f32.
+
+    The quantized score is ``sum_m f32(qlut[m, code_m])`` (fp16) or
+    ``sum_m f32(q8[m, code_m]) * scale[m]`` (int8), accumulated with the
+    same left-to-right chain as ``adc_scan_ref`` — each per-m part is
+    converted/scaled elementwise BEFORE the chain, which is the exact op
+    order of both kernel impls, so pools match bit-for-bit. The int8
+    zero-point offset is per-query constant and deliberately omitted
+    (rank-invariant; see lut_quant module doc).
+    """
+    m_idx = jnp.arange(qluts.shape[1])[None, :]              # (1, M)
+
+    def one(lut_q, sc_q):
+        g = lut_q[m_idx, codes.astype(jnp.int32)].astype(jnp.float32)
+        parts = g if sc_q is None else g * sc_q[None, :]     # (N, M)
+        acc = parts[:, 0]
+        for m in range(1, qluts.shape[1]):
+            acc = acc + parts[:, m]
+        return acc
+
+    if scale is None:
+        return jax.vmap(lambda l: one(l, None))(qluts)
+    return jax.vmap(one)(qluts, scale)
+
+
+def adc_scan_topl_q_ref(codes: jax.Array, qluts: jax.Array,
+                        scale: jax.Array | None,
+                        bias: jax.Array | None, topl: int,
+                        qbias: jax.Array | None = None):
+    """Materialized oracle for the quantized streaming scan+top-L': the
+    full quantized (Q, N) matrix (``adc_scan_batch_q_ref``), the SAME f32
+    bias streams as the exact path, then ``lax.top_k``. Defines the pool
+    the quantized kernels must select bit-for-bit."""
+    s = adc_scan_batch_q_ref(codes, qluts, scale)
+    if bias is not None:
+        s = s + bias[None, :]
+    if qbias is not None:
+        s = s + qbias
+    neg, idx = jax.lax.top_k(-s, min(topl, codes.shape[0]))
+    return -neg, idx
+
+
+def adc_gather_topl_q_ref(codes: jax.Array, rows: jax.Array,
+                          gids: jax.Array, qluts: jax.Array,
+                          scale: jax.Array | None,
+                          rowbias: jax.Array | None, topl: int):
+    """Materialized oracle for the quantized gathered scan+top-L': the
+    quantized per-slot chain (fp16 gather->f32 or i8 gather->f32*scale,
+    parts converted before the chain), the exact f32 rowbias stream, pad
+    and +inf canonicalization exactly as ``adc_gather_topl_ref``."""
+    q, w = rows.shape
+    gathered_codes = jnp.take(codes, rows, axis=0).astype(jnp.int32)
+    picked = jnp.take_along_axis(
+        qluts[:, None, :, :],
+        gathered_codes[:, :, :, None], axis=3)[..., 0]       # (Q, W, M)
+    picked = picked.astype(jnp.float32)
+    if scale is not None:
+        picked = picked * scale[:, None, :]
+    acc = picked[:, :, 0]
+    for m in range(1, qluts.shape[1]):
+        acc = acc + picked[:, :, m]
+    if rowbias is not None:
+        acc = acc + rowbias
+    acc = jnp.where(gids == _IMAX, jnp.inf, acc)
+    gids = jnp.where(jnp.isposinf(acc), _IMAX, gids)
+    neg, pos = jax.lax.top_k(-acc, min(topl, w))
+    return -neg, jnp.take_along_axis(gids, pos, axis=1)
+
+
+def adc_dispatch_topl_q_ref(codes: jax.Array, gids_rows: jax.Array,
+                            rowbias: jax.Array, qluts: jax.Array,
+                            scale: jax.Array | None, cellterm: jax.Array,
+                            qidx: jax.Array, cell_lo: jax.Array,
+                            cell_hi: jax.Array, topl: int,
+                            qkeep: jax.Array | None = None):
+    """Materialized oracle for the quantized dispatch scan+top-L': the
+    quantized chain per routed slot with the exact f32 bias composition
+    ``chain + (rowbias + cellterm)`` and masks of
+    ``adc_dispatch_topl_ref``."""
+    n = codes.shape[0]
+    num_q, num_books = qluts.shape[0], qluts.shape[1]
+    safe_q = jnp.clip(qidx, 0, num_q - 1)
+    lut_e = qluts[safe_q]                                    # (E, cap, M, K)
+    m_idx = jnp.arange(num_books)[None, None, None, :]
+    picked = lut_e[
+        jnp.arange(qidx.shape[0])[:, None, None, None],
+        jnp.arange(qidx.shape[1])[None, :, None, None],
+        m_idx, codes.astype(jnp.int32)[None, None, :, :]]    # (E, cap, N, M)
+    picked = picked.astype(jnp.float32)
+    if scale is not None:
+        picked = picked * scale[safe_q][:, :, None, :]
+    acc = picked[..., 0]
+    for m in range(1, num_books):
+        acc = acc + picked[..., m]
+    acc = acc + (rowbias[None, None, :] + cellterm[..., None])
+    if qkeep is not None:
+        keep = jnp.take(qkeep, safe_q, axis=0)               # (E, cap, N)
+        acc = jnp.where(keep > 0.5, acc, jnp.inf)
+    rows = jnp.arange(n, dtype=jnp.int32)
+    window = (rows[None, None, :] >= cell_lo[:, None, None]) & \
+        (rows[None, None, :] < cell_hi[:, None, None])
+    acc = jnp.where(window, acc, jnp.inf)
+    acc = jnp.where((qidx >= 0)[..., None], acc, jnp.inf)
+    gids = jnp.broadcast_to(gids_rows[None, None, :], acc.shape)
+    gids = jnp.where(jnp.isposinf(acc), _IMAX, gids)
+    neg, pos = jax.lax.top_k(-acc, min(topl, n))
+    return -neg, jnp.take_along_axis(gids, pos, axis=-1)
+
+
 def decode_with_table(codes: jax.Array, table: jax.Array) -> jax.Array:
     """Additive table decode: ``recon = sum_m table[m, codes[..., m]]``.
 

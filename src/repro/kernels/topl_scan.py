@@ -18,9 +18,10 @@ Memory model per grid step (grid = (Q/block_q, N/block_n), n innermost):
     multiple) are masked to +inf score so they can never surface.
 
 Tie semantics are EXACTLY those of ``lax.top_k`` over the full matrix:
-candidates are ordered by (score asc, global index asc). The merge selects
-lexicographic minima directly — min score, then min global index among the
-tied — so the streaming result is bit-identical to the materialized oracle
+candidates are ordered by (score asc, global index asc). The merge is the
+shared bitonic pre-top-L of ``kernels/merge.py`` — block-local sort under
+the total lexicographic order, then one bitonic merge with the sorted
+heap — so the streaming result is bit-identical to the materialized oracle
 (``ref.adc_scan_topl_ref``), not merely set-equal. The same argument makes
 the chunked ``lax.scan`` fallback below exact: within the concatenated
 [heap | chunk] array, positions are always in ascending-global-index order
@@ -34,7 +35,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels import ref
+from repro.kernels import merge, ref
 
 DEFAULT_TOPL_BLOCK_N = 1024
 DEFAULT_TOPL_BLOCK_Q = 8
@@ -46,11 +47,11 @@ _IMAX = jnp.iinfo(jnp.int32).max
 def _adc_scan_topl_kernel(codes_ref, luts_ref, bias_ref, *refs,
                           topl: int, block_n: int, block_q: int,
                           num_books: int, book_size: int, n_valid: int,
-                          has_qbias: bool):
-    if has_qbias:
-        qbias_ref, scores_ref, idx_ref = refs
-    else:
-        qbias_ref, (scores_ref, idx_ref) = None, refs
+                          has_qbias: bool, has_scale: bool):
+    refs = list(refs)
+    qbias_ref = refs.pop(0) if has_qbias else None
+    scale_ref = refs.pop(0) if has_scale else None
+    scores_ref, idx_ref = refs
     ni = pl.program_id(1)
 
     @pl.when(ni == 0)
@@ -59,17 +60,25 @@ def _adc_scan_topl_kernel(codes_ref, luts_ref, bias_ref, *refs,
         idx_ref[...] = jnp.full((block_q, topl), _IMAX, jnp.int32)
 
     # --- score the streamed block: same one-hot MXU contraction as
-    # adc_scan_batch (bit-identical scores, so ties resolve identically) ---
+    # adc_scan_batch (bit-identical scores, so ties resolve identically).
+    # Quantized tables ride the same contraction: the one-hot dot copies
+    # the f32-cast entry exactly (one nonzero per column), and the int8
+    # per-(query, book) scale multiplies each per-m part BEFORE the
+    # chain — the op order of ``ref.adc_scan_batch_q_ref`` ---
     codes = codes_ref[...].astype(jnp.int32)           # (Bn, M)
     luts = luts_ref[...]                               # (Bq, M, K)
+    scale = scale_ref[...] if has_scale else None      # (Bq, M)
     acc = jnp.zeros((block_q, block_n), jnp.float32)
     iota_k = jax.lax.broadcasted_iota(jnp.int32, (1, book_size), 1)
     for m in range(num_books):                         # M is static (8 or 16)
         onehot = (codes[:, m:m + 1] == iota_k).astype(jnp.float32)
-        acc = acc + jax.lax.dot_general(
+        part = jax.lax.dot_general(
             luts[:, m, :].astype(jnp.float32), onehot,
             dimension_numbers=(((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)
+        if has_scale:
+            part = part * scale[:, m][:, None]
+        acc = acc + part
     acc = acc + bias_ref[...][None, :]
     if has_qbias:
         # the per-query bias stream: lowered filter masks (0 = keep,
@@ -82,27 +91,12 @@ def _adc_scan_topl_kernel(codes_ref, luts_ref, bias_ref, *refs,
     acc = jnp.where(gids < n_valid, acc, jnp.inf)
     gids = jnp.broadcast_to(gids, (block_q, block_n))
 
-    # --- merge block into the running heap: L lexicographic minima of
-    # [heap | block] by (score, global id). Only min/where/compare ops, so
-    # the merge maps onto the VPU without gathers or sorts. ---
-    cand_s = jnp.concatenate([scores_ref[...], acc], axis=1)
-    cand_g = jnp.concatenate([idx_ref[...], gids], axis=1)
-
-    def select(l, carry):
-        cs, cg, out_s, out_g = carry
-        best = jnp.min(cs, axis=1)                     # (Bq,)
-        at_best = cs == best[:, None]
-        sel = jnp.min(jnp.where(at_best, cg, _IMAX), axis=1)
-        out_s = jax.lax.dynamic_update_slice(out_s, best[:, None], (0, l))
-        out_g = jax.lax.dynamic_update_slice(out_g, sel[:, None], (0, l))
-        knocked = at_best & (cg == sel[:, None])
-        return (jnp.where(knocked, jnp.inf, cs),
-                jnp.where(knocked, _IMAX, cg), out_s, out_g)
-
-    init = (cand_s, cand_g,
-            jnp.full((block_q, topl), jnp.inf, jnp.float32),
-            jnp.full((block_q, topl), _IMAX, jnp.int32))
-    _, _, out_s, out_g = jax.lax.fori_loop(0, topl, select, init)
+    # --- merge block into the running heap: block-local bitonic pre-top-L
+    # then one bitonic merge with the sorted heap (kernels/merge.py) —
+    # compare/where ops only, bit-identical to the lexicographic
+    # (score asc, global id asc) select it replaced ---
+    out_s, out_g = merge.merge_block_topl(
+        scores_ref[...], idx_ref[...], acc, gids, topl)
     scores_ref[...] = out_s
     idx_ref[...] = out_g
 
@@ -110,7 +104,8 @@ def _adc_scan_topl_kernel(codes_ref, luts_ref, bias_ref, *refs,
 @functools.partial(jax.jit, static_argnames=("topl", "n_valid", "block_n",
                                              "block_q", "interpret"))
 def adc_scan_topl_pallas(codes: jax.Array, luts: jax.Array, bias: jax.Array,
-                         qbias: jax.Array | None = None, *, topl: int,
+                         qbias: jax.Array | None = None,
+                         scale: jax.Array | None = None, *, topl: int,
                          n_valid: int,
                          block_n: int = DEFAULT_TOPL_BLOCK_N,
                          block_q: int = DEFAULT_TOPL_BLOCK_Q,
@@ -119,15 +114,20 @@ def adc_scan_topl_pallas(codes: jax.Array, luts: jax.Array, bias: jax.Array,
 
     codes: (N, M) uint8/int32, N % block_n == 0 (ops.py pads; rows at or
            past ``n_valid`` are the pad and are masked out).
-    luts:  (Q, M, K) float32, Q % block_q == 0 (ops.py pads).
+    luts:  (Q, M, K) float32, Q % block_q == 0 (ops.py pads) — or the
+           float16/int8 quantized tables of ``lut_quant`` for the
+           reduced-precision pool scan.
     bias:  (N,) float32 per-point additive score term (zeros when unused).
     qbias: optional (Q, N) float32 per-(query, point) additive stream —
            the lowering target of the filtered-search API (+inf drops a
            point for one query). Streamed in (block_q, block_n) tiles, so
            the filter rides the fused path with no extra peak memory.
+    scale: optional (Q, M) float32 per-(query, book) affine scales —
+           REQUIRED with int8 ``luts``, None otherwise.
     Returns (scores, indices): ((Q, topl) f32, (Q, topl) i32), sorted by
     (score asc, index asc) — bit-identical to ``lax.top_k`` over the full
-    score matrix.
+    score matrix (``ref.adc_scan_topl_ref`` for f32 tables,
+    ``ref.adc_scan_topl_q_ref`` for quantized ones).
     """
     n, num_books = codes.shape
     q, _, book_size = luts.shape
@@ -138,7 +138,7 @@ def adc_scan_topl_pallas(codes: jax.Array, luts: jax.Array, bias: jax.Array,
     kernel = functools.partial(
         _adc_scan_topl_kernel, topl=topl, block_n=block_n, block_q=block_q,
         num_books=num_books, book_size=book_size, n_valid=n_valid,
-        has_qbias=qbias is not None)
+        has_qbias=qbias is not None, has_scale=scale is not None)
     in_specs = [
         pl.BlockSpec((block_n, num_books), lambda qi, ni: (ni, 0)),
         pl.BlockSpec((block_q, num_books, book_size),
@@ -150,6 +150,10 @@ def adc_scan_topl_pallas(codes: jax.Array, luts: jax.Array, bias: jax.Array,
         in_specs.append(pl.BlockSpec((block_q, block_n),
                                      lambda qi, ni: (qi, ni)))
         operands.append(qbias)
+    if scale is not None:
+        in_specs.append(pl.BlockSpec((block_q, num_books),
+                                     lambda qi, ni: (qi, 0)))
+        operands.append(scale)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -169,7 +173,8 @@ def adc_scan_topl_pallas(codes: jax.Array, luts: jax.Array, bias: jax.Array,
 @functools.partial(jax.jit, static_argnames=("topl", "n_valid", "chunk_n"))
 def adc_scan_topl_stream_xla(codes: jax.Array, luts: jax.Array,
                              bias: jax.Array,
-                             qbias: jax.Array | None = None, *, topl: int,
+                             qbias: jax.Array | None = None,
+                             scale: jax.Array | None = None, *, topl: int,
                              n_valid: int, chunk_n: int = DEFAULT_CHUNK_N):
     """XLA fallback with the SAME streaming semantics as the Pallas kernel:
     a ``lax.scan`` over (Q, chunk_n) code chunks carrying the (Q, L) heap,
@@ -179,7 +184,19 @@ def adc_scan_topl_stream_xla(codes: jax.Array, luts: jax.Array,
 
     ``qbias`` is the optional (Q, N) per-(query, point) bias stream (the
     lowered filter mask), consumed in (Q, chunk_n) slices alongside the
-    code chunks.
+    code chunks. Quantized (f16/i8) ``luts`` ride the same scan after a
+    one-time up-front dequantization of the (Q, M, K) tables to f32
+    (``scale`` is the int8 per-(query, book) scale): per-chunk scoring is
+    then EXACTLY the f32 path's, so the fallback pays zero per-row
+    quantization cost — CPU XLA's reduced-dtype gather+convert lowering
+    is ~2x slower than the f32 gather, and the tables are a few hundred
+    KB while the codes stream is the real traffic. Bit-exactness vs
+    ``ref.adc_scan_batch_q_ref`` is preserved: f32(f16)[idx] ==
+    f32(f16[idx]) (widening is exact), and pre-multiplying the int8
+    table entry by its scale is the same IEEE multiply as scaling the
+    gathered part. The Pallas kernel, by contrast, keeps the tiles in
+    the reduced dtype inside VMEM — there the 2-4x tile shrink is the
+    point (see ``_adc_scan_topl_q`` variants).
 
     Exactness: the carry is sorted by (score, index) and every chunk entry
     has a larger global index than every carried entry, so ``lax.top_k``'s
@@ -188,6 +205,10 @@ def adc_scan_topl_stream_xla(codes: jax.Array, luts: jax.Array,
     """
     n, m = codes.shape
     q = luts.shape[0]
+    if luts.dtype != jnp.float32:      # dequantize ONCE, outside the scan
+        luts = luts.astype(jnp.float32)
+        if scale is not None:
+            luts = luts * scale[:, :, None]
     pad = (-n) % chunk_n
     codes_c = jnp.pad(codes, ((0, pad), (0, 0))).reshape(-1, chunk_n, m)
     bias_c = jnp.pad(bias, (0, pad)).reshape(-1, chunk_n)

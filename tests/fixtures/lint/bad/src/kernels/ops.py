@@ -1,0 +1,21 @@
+"""Known-bad fixture: kernel dispatch with hand-pinned block parameters
+(tuned-block-params rule) — literal block_n at the call site, literal
+chunk_l default, and no tune.best_config resolution anywhere."""
+
+
+def toy_scan_pallas(codes, *, block_n, interpret=True):
+    return codes
+
+
+def toy_rerank_chunked_xla(codes, *, chunk_l):
+    return codes
+
+
+def toy_scan(codes):
+    # BAD: hand-pinned literal instead of a tuner resolution
+    return toy_scan_pallas(codes, block_n=1024)
+
+
+def toy_rerank(codes, *, chunk_l=256):
+    # BAD: integer-literal default on a block/chunk parameter
+    return toy_rerank_chunked_xla(codes, chunk_l=chunk_l)

@@ -1,0 +1,14 @@
+"""Known-good fixture: kernel dispatch resolving block parameters through
+the autotuner registry (tuned-block-params rule must stay silent)."""
+
+from repro.kernels import tune  # noqa: F401  (fixture import shape only)
+
+
+def toy_scan_pallas(codes, *, block_n, interpret=True):
+    return codes
+
+
+def toy_scan(codes, *, block_n=None):
+    cfg = tune.best_config("toy_scan", "pallas", n=codes.shape[0])
+    bn = cfg["block_n"] if block_n is None else block_n
+    return toy_scan_pallas(codes, block_n=bn)

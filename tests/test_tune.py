@@ -1,0 +1,187 @@
+"""Autotuner registry + winner cache (``kernels/tune.py``) and the sweep
+driver package (``repro.tune``): bucket math, the shared rounding
+helpers, cache roundtrip + loud schema drift, ``best_config``
+resolution precedence (cache winner > defaults; REPRO_TUNE_DISABLE
+forces defaults), and registry/driver agreement."""
+import json
+
+import pytest
+
+from repro.kernels import tune
+
+
+@pytest.fixture
+def cache(monkeypatch, tmp_path):
+    """Fresh cache path + pinned device kind, isolated from the repo's
+    real TUNE_CACHE.json."""
+    p = tmp_path / "cache.json"
+    monkeypatch.setenv(tune.CACHE_ENV, str(p))
+    monkeypatch.delenv(tune.DISABLE_ENV, raising=False)
+    monkeypatch.setattr(tune, "device_kind", lambda: "testdev")
+    return p
+
+
+def _doc(entries):
+    return {"schema_version": tune.SCHEMA_VERSION, "entries": entries}
+
+
+# ---------------------------------------------------------------------------
+# bucket math + the ONE home of the rounding helpers
+# ---------------------------------------------------------------------------
+
+def test_shape_bucket_is_pow2_ceiling():
+    assert tune.shape_bucket(1) == 8
+    assert tune.shape_bucket(8) == 8
+    assert tune.shape_bucket(9) == 16
+    assert tune.shape_bucket(65536) == 65536
+    assert tune.shape_bucket(65537) == 131072
+
+
+def test_bucket_key_orders_registered_dims_and_rejects_missing():
+    spec = tune.KERNELS["adc_scan_topl.xla"]
+    assert tune.bucket_key(spec, {"topl": 100, "q": 20, "n": 60000}) == \
+        "n=65536,q=32,topl=128"
+    with pytest.raises(KeyError):
+        tune.bucket_key(spec, {"n": 100, "q": 20})
+
+
+def test_align_and_clamp_chunk():
+    # align: round the dim up to the tile multiple, capped by the block
+    assert tune.align(5, cap=256) == 8
+    assert tune.align(9, cap=256) == 16
+    assert tune.align(100, cap=64) == 64
+    assert tune.align(3, cap=4, multiple=4) == 4
+    # clamp_chunk: at most the request, at least the heap width, at most
+    # ~dim/8 so short scans keep several steps
+    assert tune.clamp_chunk(65536, cap=4096, floor=128) == 4096
+    assert tune.clamp_chunk(100, cap=4096, floor=128) == 128
+    assert tune.clamp_chunk(10_000, cap=4096, floor=128) == 1250
+
+
+# ---------------------------------------------------------------------------
+# cache I/O: roundtrip + loud drift
+# ---------------------------------------------------------------------------
+
+def test_save_load_roundtrip(cache):
+    doc = _doc({"testdev": {"adc_scan_topl.xla": {
+        "n=65536,q=32,topl=128": {"config": {"chunk_n": 8192},
+                                  "us": 10.0, "default_us": 20.0}}}})
+    tune.save_cache(doc)
+    assert tune.load_cache(refresh=True) == doc
+    assert cache.exists()
+
+
+def test_missing_cache_is_empty_not_error(cache):
+    doc = tune.load_cache(refresh=True)
+    assert doc["entries"] == {}
+
+
+@pytest.mark.parametrize("mutate,err", [
+    (lambda d: d.update(schema_version=tune.SCHEMA_VERSION + 1),
+     "schema_version"),
+    (lambda d: d["entries"].update({"testdev": {"no_such_kernel": {}}}),
+     "unknown kernel"),
+    (lambda d: d["entries"]["testdev"]["adc_scan_topl.xla"]
+        ["n=65536,q=32,topl=128"]["config"].update(bogus_param=4),
+     "unknown param"),
+    (lambda d: d["entries"]["testdev"]["adc_scan_topl.xla"]
+        ["n=65536,q=32,topl=128"]["config"].update(chunk_n=1.5),
+     "non-integer"),
+])
+def test_schema_drift_raises(cache, mutate, err):
+    """A cache from a different build must fail LOUDLY at load, never
+    silently mis-tune."""
+    doc = _doc({"testdev": {"adc_scan_topl.xla": {
+        "n=65536,q=32,topl=128": {"config": {"chunk_n": 8192}}}}})
+    mutate(doc)
+    cache.write_text(json.dumps(doc))
+    with pytest.raises(tune.TuneCacheError, match=err):
+        tune.load_cache(refresh=True)
+
+
+def test_unparseable_cache_raises(cache):
+    cache.write_text("{not json")
+    with pytest.raises(tune.TuneCacheError, match="unparseable"):
+        tune.load_cache(refresh=True)
+
+
+# ---------------------------------------------------------------------------
+# best_config resolution
+# ---------------------------------------------------------------------------
+
+def test_best_config_defaults_without_cache(cache):
+    for key, spec in tune.KERNELS.items():
+        dims = {d: 100 for d in spec.dims}
+        kernel, _, impl = key.partition(".")
+        assert tune.best_config(kernel, impl or None, **dims) == spec.params
+
+
+def test_best_config_prefers_cached_winner_via_bucketing(cache):
+    tune.save_cache(_doc({"testdev": {"adc_scan_topl.xla": {
+        "n=65536,q=32,topl=128": {"config": {"chunk_n": 12345},
+                                  "us": 1.0, "default_us": 2.0}}}}))
+    # any shape landing in the bucket resolves the winner...
+    got = tune.best_config("adc_scan_topl", "xla", n=60000, q=20, topl=100)
+    assert got == {"chunk_n": 12345}
+    # ...other buckets and devices fall back to the defaults
+    other = tune.best_config("adc_scan_topl", "xla", n=70000, q=20, topl=100)
+    assert other == tune.KERNELS["adc_scan_topl.xla"].params
+
+
+def test_disable_env_forces_defaults(cache, monkeypatch):
+    tune.save_cache(_doc({"testdev": {"adc_scan_topl.xla": {
+        "n=65536,q=32,topl=128": {"config": {"chunk_n": 12345},
+                                  "us": 1.0, "default_us": 2.0}}}}))
+    monkeypatch.setenv(tune.DISABLE_ENV, "1")
+    got = tune.best_config("adc_scan_topl", "xla", n=60000, q=20, topl=100)
+    assert got == tune.KERNELS["adc_scan_topl.xla"].params
+
+
+def test_registry_key_impl_agnostic_fallback_and_unknown():
+    # the dispatch entry is shared across impls BY DESIGN: the router
+    # bakes the tile width into the plan, so both must resolve one key
+    assert tune.registry_key("adc_dispatch_topl", "xla") == \
+        "adc_dispatch_topl"
+    assert tune.registry_key("adc_dispatch_topl", "pallas") == \
+        "adc_dispatch_topl"
+    assert tune.registry_key("adc_scan_topl", "xla") == "adc_scan_topl.xla"
+    with pytest.raises(KeyError):
+        tune.registry_key("no_such_kernel", "xla")
+
+
+def test_cache_fingerprint_counts_tuned_buckets(cache):
+    assert tune.cache_fingerprint() == {
+        "schema_version": tune.SCHEMA_VERSION, "device_kind": "testdev",
+        "tuned_buckets": 0}
+    tune.save_cache(_doc({"testdev": {
+        "adc_scan_topl.xla": {
+            "n=65536,q=32,topl=128": {"config": {"chunk_n": 8192}},
+            "n=131072,q=32,topl=128": {"config": {"chunk_n": 8192}}},
+        "adc_dispatch_topl": {
+            "n=65536,q=32": {"config": {"chunk": 256}}}}}))
+    assert tune.cache_fingerprint()["tuned_buckets"] == 3
+
+
+# ---------------------------------------------------------------------------
+# sweep driver <-> registry agreement
+# ---------------------------------------------------------------------------
+
+def test_sweep_driver_covers_every_sweepable_kernel():
+    """Every registry entry with a candidate ladder must have a runner
+    and buckets in the driver (a ladder nobody sweeps is dead config),
+    and every driver bucket must carry the registered dims."""
+    from repro import tune as driver
+    sweepable = {k for k, s in tune.KERNELS.items() if s.candidates}
+    assert sweepable == set(driver.RUNNERS)
+    for table in (driver.QUICK_BUCKETS, driver.FULL_BUCKETS):
+        assert set(table) == sweepable
+        for key, buckets in table.items():
+            for dims in buckets:
+                tune.bucket_key(tune.KERNELS[key], dims)   # must not raise
+
+
+def test_candidate_ladders_only_name_registered_params():
+    for key, spec in tune.KERNELS.items():
+        assert set(spec.candidates) <= set(spec.params), key
+        for values in spec.candidates.values():
+            assert all(isinstance(v, int) for v in values), key
