@@ -88,6 +88,17 @@ def timed_group(fns: dict, *, repeats: int = 6) -> dict:
     return {name: (outs[name], best[name]) for name in fns}
 
 
+def latency_summary(latencies_ms) -> dict:
+    """p50/p95/p99 rows for a serving latency sample (ms). One shared
+    helper so every latency reporter (bench_serve, the example driver)
+    quotes the same percentile math — and none of them ever folds the
+    first batch's jit compile into the distribution: callers warm up per
+    shape bucket first (``ServeEngine.warmup``) and report cold-compile
+    as its own line."""
+    from repro.serve.metrics import latency_percentiles
+    return latency_percentiles(latencies_ms)
+
+
 def with_defaults(fn):
     """Run ``fn`` with the autotuner disabled (``REPRO_TUNE_DISABLE=1``),
     so every block param resolves to the hand-pinned ``DEFAULT_*``

@@ -1,7 +1,8 @@
 """Benchmark harness: one module per paper table + roofline readout.
 
     PYTHONPATH=src python -m benchmarks.run [--scale quick|default|full]
-        [--only recall,scale,ablation,timings,roofline,stage1,stage2,ivf]
+        [--only recall,scale,ablation,timings,roofline,stage1,stage2,ivf,
+               serve]
     PYTHONPATH=src python -m benchmarks.run --smoke [--specs PQ8x64,...]
 
 Prints ``name,us_per_call,derived`` CSV rows. ``--smoke`` is the CI path:
@@ -16,8 +17,9 @@ pair), onehot through the materialized full-matrix scan — and all three
 stage-2 rerankers: xla/pallas resolve the streaming rerank engine
 (chunked/fused table decode for PQ, cross-query dedup for UNQ), onehot
 the materialized vmap reranker. ``--only stage1`` / ``--only stage2`` /
-``--only ivf`` write ``BENCH_stage1.json`` / ``BENCH_stage2.json`` /
-``BENCH_ivf.json`` (throughput + peak-memory / recall trajectories).
+``--only ivf`` / ``--only serve`` write ``BENCH_stage1.json`` /
+``BENCH_stage2.json`` / ``BENCH_ivf.json`` / ``BENCH_serve.json``
+(throughput + peak-memory / recall / serving-latency trajectories).
 
 Failures in the ``--only``/full bench loop are reported per bench and
 the process exits non-zero at the end if any bench failed — CI can no
@@ -128,8 +130,8 @@ def main(argv=None) -> None:
         return
 
     from benchmarks import (bench_ablation, bench_ivf, bench_recall,
-                            bench_roofline, bench_scale, bench_stage1,
-                            bench_stage2, bench_timings)
+                            bench_roofline, bench_scale, bench_serve,
+                            bench_stage1, bench_stage2, bench_timings)
 
     benches = {
         "timings": lambda: bench_timings.run(args.scale),
@@ -140,6 +142,7 @@ def main(argv=None) -> None:
         "stage1": lambda: bench_stage1.run(args.scale),
         "stage2": lambda: bench_stage2.run(args.scale),
         "ivf": lambda: bench_ivf.run(args.scale),
+        "serve": lambda: bench_serve.run(args.scale),
     }
     selected = (args.only.split(",") if args.only else list(benches))
 

@@ -53,4 +53,13 @@ python -m benchmarks.run --only stage2 --scale quick
 echo "== IVF trajectory: nprobe dial + residual study (writes BENCH_ivf.json) =="
 python -m benchmarks.run --only ivf --scale quick
 
+echo "== serving smoke (batched-vs-solo parity + zero deadline misses) =="
+# deterministic trace through repro.serve on flat + IVF indexes; exits
+# non-zero if any batched request drifts bit-wise from searching it
+# alone, or if any generously-deadlined request misses
+python -m repro.serve --smoke
+
+echo "== serving trajectory: latency under load (writes BENCH_serve.json) =="
+python -m benchmarks.run --only serve --scale quick
+
 echo "CI OK"

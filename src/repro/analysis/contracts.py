@@ -455,6 +455,26 @@ def _build_sharded_stage1_dispatch(p):
     return fn.lower(*args).compile()
 
 
+def _build_serving_batched(p):
+    """The shape the serving engine compiles per query bucket: streaming
+    scan+top-L at a QUERY_BUCKETS-padded Q with a (Q, N) qbias stream
+    entering as a PARAMETER (the coalesced filter-mask lowering — pad
+    rows and per-request masks ride it). The contract pins that batching
+    never re-materializes the (Q, N) score matrix the streaming engine
+    exists to avoid: only the input mask may be (Q, N)-shaped."""
+    from repro.kernels import ops
+    codes = _SDS((p["N"], p["M"]), jnp.uint8)
+    luts = _SDS((p["Q"], p["M"], p["K"]), jnp.float32)
+    bias = _SDS((p["N"],), jnp.float32)
+    qbias = _SDS((p["Q"], p["N"]), jnp.float32)
+
+    def f(c, l, b, qb):
+        return ops.adc_scan_topl(c, l, topl=p["L"], bias=b, qbias=qb,
+                                 impl="xla", chunk_n=p["CHUNK"])
+
+    return jax.jit(f).lower(codes, luts, bias, qbias).compile()
+
+
 def _build_sharded_stage1(p):
     from repro.parallel import search as ps
     devices = jax.devices()[:2]
@@ -675,6 +695,21 @@ register(Contract(
     require=(("s32", ("EB+1", "CAP")),),
     # the router's entire working set is O(Q*P) index arithmetic
     max_temp=lambda p: 64 * p["Q"] * p["P"] + 4096,
+))
+
+register(Contract(
+    path_id="serving.batched",
+    description="batched serving entry (QUERY_BUCKETS-padded Q, coalesced "
+                "(Q, N) filter-mask stream entering as a parameter): the "
+                "batched path stays on the streaming scan — no fresh "
+                "(Q, N) score matrix under batching; temp memory admits "
+                "only the mask parameter's chunk-major restage (<= 2 "
+                "input-sized copies), never a score matrix on top",
+    build=_build_serving_batched,
+    buckets=({"Q": 64, "N": 8192, "M": 8, "K": 64, "L": 128, "CHUNK": 1024},
+             {"Q": 16, "N": 4096, "M": 8, "K": 64, "L": 100, "CHUNK": 512}),
+    forbid=(("f32", ("Q", "N")),),
+    max_temp=lambda p: 2 * p["Q"] * p["N"] * 4 + 4096,
 ))
 
 register(Contract(

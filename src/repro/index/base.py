@@ -88,6 +88,15 @@ class Index(abc.ABC):
         """The compressed database, (ntotal, M) uint8."""
         return self._codes
 
+    def result_width(self, k: int) -> int:
+        """Number of result columns ``search(queries, k)`` returns:
+        ``min(k, ntotal)``. The serving fan-in slices a coalesced
+        k_max-wide batch back to each request's own width with this, so
+        a request's rows are bit-identical to searching it alone — the
+        exact sorted top-k is prefix-stable (its first j columns never
+        depend on how many more were asked for)."""
+        return min(k, self.ntotal)
+
     @property
     def bias(self) -> jax.Array | None:
         """Per-point additive d2 score term, (ntotal,) f32, or None.

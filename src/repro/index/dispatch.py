@@ -35,6 +35,8 @@ paths trust, so the final pools are bit-identical to the padded plan's.
 from __future__ import annotations
 
 import functools
+import threading
+import warnings
 from typing import NamedTuple
 
 import jax
@@ -45,6 +47,61 @@ from repro.kernels import tune
 from repro.kernels.dispatch_topl import DispatchPlan
 
 _IMAX = np.iinfo(np.int32).max
+
+
+class OverflowMeter:
+    """Rate-limited accounting for capacity overflows (the loud padded
+    fallback).
+
+    Under a serving loop a hot cell can overflow the ``dispatch_capacity``
+    budget on EVERY batch; one ``warnings.warn`` per batch is an unbounded
+    warn stream that drowns real signal. The meter warns on the FIRST
+    occurrence with full detail, then only every ``warn_every`` further
+    occurrences with a since-last summary — and keeps an exact counter so
+    load shedding is observable through the serve metrics
+    (``repro.serve.metrics``) instead of through log volume.
+    """
+
+    def __init__(self, warn_every: int = 100):
+        self.warn_every = warn_every
+        self._lock = threading.Lock()
+        self._count = 0
+        self._last_warned = 0
+
+    @property
+    def count(self) -> int:
+        """Total overflows recorded since process start (or ``reset``)."""
+        return self._count
+
+    def reset(self) -> None:
+        with self._lock:
+            self._count = 0
+            self._last_warned = 0
+
+    def record(self, detail: str) -> None:
+        """Count one overflow; warn on the first and then one summary per
+        ``warn_every`` further occurrences."""
+        with self._lock:
+            self._count += 1
+            since = self._count - self._last_warned
+            if self._last_warned and since < self.warn_every:
+                return
+            self._last_warned = self._count
+            if self._count == since:          # first occurrence: full detail
+                msg = (f"{detail} (further capacity overflows are "
+                       f"rate-limited: one summary per {self.warn_every} "
+                       "occurrences; exact count on "
+                       "dispatch.OVERFLOWS.count / the serve metrics)")
+            else:
+                msg = (f"{since} dispatch capacity overflows since the "
+                       f"last warning ({self._count} total); latest: "
+                       f"{detail}")
+        warnings.warn(msg, stacklevel=3)
+
+
+#: process-wide overflow counter — ``IVFIndex._dispatch_pool`` records
+#: here, ``repro.serve`` metrics read ``OVERFLOWS.count`` deltas
+OVERFLOWS = OverflowMeter()
 
 
 class Routing(NamedTuple):

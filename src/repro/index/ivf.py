@@ -81,7 +81,6 @@ cross-query dedup) exactly like a flat index; residual indexes resolve a
 from __future__ import annotations
 
 import functools
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -92,6 +91,10 @@ from repro.index import base
 from repro.index.candidates import candidate_generator_for, supports_dispatch
 
 _IMAX = np.iinfo(np.int32).max
+
+#: "use the index's own dispatch_capacity" sentinel for the per-call
+#: override (None is meaningful: it means lossless routing)
+_INDEX_CAPACITY = object()
 
 
 def _plan_width(w: int) -> int:
@@ -312,6 +315,34 @@ class IVFIndex(base.Index):
         (closest centroid first)."""
         return np.asarray(self._probe_with_dists(queries, nprobe)[0])
 
+    def _resolve_nprobe(self, nprobe, num_queries: int):
+        """Normalize a ``search`` nprobe request to (probe width,
+        per-query probe lengths).
+
+        ``None`` -> the index default; an int -> that width (lengths
+        ``None``); a (Q,) int vector — the serving fan-in, where each
+        coalesced request carries its own probe budget — probes at the
+        MAX width and returns the clipped lengths so each query's excess
+        probe slots are masked out of its plan/pool. Because
+        ``lax.top_k`` prefixes are exact, query i's first ``nprobe_i``
+        probed cells at width P are exactly its solo top-``nprobe_i`` —
+        the per-query results stay bit-identical to searching alone. A
+        uniform vector collapses to its scalar (no masking needed)."""
+        if nprobe is None:
+            return max(1, min(int(self.nprobe), self.nlist)), None
+        if np.ndim(nprobe) == 0:
+            return max(1, min(int(nprobe), self.nlist)), None
+        lens = np.asarray(nprobe)
+        if lens.ndim != 1 or lens.shape[0] != num_queries:
+            raise ValueError(
+                f"per-query nprobe must be a ({num_queries},) int vector, "
+                f"got shape {lens.shape}")
+        lens = np.clip(lens.astype(np.int32), 1, self.nlist)
+        width = int(lens.max())
+        if int(lens.min()) == width:
+            return width, None
+        return width, lens
+
     def _stage1_luts(self, queries, probe: np.ndarray) -> jax.Array:
         """Per-query stage-1 score tables. Residual DECODER quantizers
         (no decode table, so no exact correction) residualize the query
@@ -401,13 +432,17 @@ class IVFIndex(base.Index):
     # -- probing -------------------------------------------------------------
 
     def _probe_plan(self, probe: np.ndarray, cell_range=None,
-                    row_offset: int = 0):
+                    row_offset: int = 0, probe_lens=None):
         """Concatenate the CSR inverted lists of each query's probed cells
         into one padded ragged plan.
 
         probe (Q, P) int32 cell ids; ``cell_range=(lo, hi)`` restricts to
         a shard's owned cells (rows shifted by ``row_offset`` so they
-        index the shard-local buffer slice).
+        index the shard-local buffer slice); ``probe_lens`` (Q,) int32
+        keeps only each query's first ``probe_lens[q]`` probe columns —
+        the per-query nprobe fan-in (``_resolve_nprobe``), masked exactly
+        like unowned cells so a query's plan is identical to probing at
+        its own width alone.
 
         Returns (rows, gids, cells): np.int32 (Q, W) each — buffer rows
         to score, the global id behind each slot, and the slot's coarse
@@ -416,13 +451,14 @@ class IVFIndex(base.Index):
         plan contract of ``ops.adc_gather_topl``.
 
         Plans are memoized on the (probe bytes, shape, cell_range,
-        row_offset) fingerprint — repeated query batches (bench loops,
-        the retained oracle path next to dispatch) stop rebuilding
-        identical numpy plans. The cache dies with any buffer mutation
-        (add / load / reset).
+        row_offset, probe_lens bytes) fingerprint — repeated query
+        batches (bench loops, the retained oracle path next to dispatch)
+        stop rebuilding identical numpy plans. The cache dies with any
+        buffer mutation (add / load / reset).
         """
         probe = np.asarray(probe, np.int32)
-        key = (probe.tobytes(), probe.shape, cell_range, row_offset)
+        key = (probe.tobytes(), probe.shape, cell_range, row_offset,
+               None if probe_lens is None else probe_lens.tobytes())
         hit = self._plan_cache.get(key)
         if hit is not None:
             return hit
@@ -433,6 +469,10 @@ class IVFIndex(base.Index):
         if cell_range is not None:
             owned = (probe >= cell_range[0]) & (probe < cell_range[1])
             cell_lens = np.where(owned, cell_lens, 0)
+        if probe_lens is not None:
+            within = np.arange(probe.shape[1])[None, :] < \
+                np.asarray(probe_lens)[:, None]
+            cell_lens = np.where(within, cell_lens, 0)
         starts = off[probe]                           # (Q, P)
         totals = cell_lens.sum(axis=1)                # (Q,)
         w = _plan_width(int(max(totals.max(initial=0), 1)))
@@ -553,22 +593,32 @@ class IVFIndex(base.Index):
         return ids, rowbias, qkeep, cellterm
 
     def _dispatch_pool(self, queries, probe, cd, filter_mask, topl: int,
-                       lut_dtype: str = "float32", overfetch: int = 1):
+                       lut_dtype: str = "float32", overfetch: int = 1,
+                       probe_lens=None, capacity=_INDEX_CAPACITY):
         """Stage 1 through the cell-batched dispatch face: route the
         probe on device, stream every probed cell once, scatter-merge the
         per-cell partials. Returns the (d2, global ids) pool —
         bit-identical to the padded gathered plan — or None when the
-        ``dispatch_capacity`` factor overflows (the caller's loud padded
-        fallback: dropped probes could hide true top-L candidates)."""
+        capacity factor overflows (the caller's padded fallback: dropped
+        probes could hide true top-L candidates; the overflow is counted
+        and rate-limit-warned through ``dispatch.OVERFLOWS``).
+
+        ``probe_lens`` (Q,) masks each query's probe columns past its own
+        nprobe out of the scatter-merge (``comb_e = -1`` is the router's
+        dropped-pair sentinel, so the excess cells never enter that
+        query's pool) — the dispatch half of the per-query nprobe
+        fan-in. ``capacity`` overrides the index's ``dispatch_capacity``
+        for this call (the serving load-shed knob)."""
         from repro.index import dispatch as dsp
+        if capacity is _INDEX_CAPACITY:
+            capacity = self.dispatch_capacity
         routing, stats = dsp.build_dispatch(
-            probe, self._offsets_dev,
-            capacity_factor=self.dispatch_capacity)
+            probe, self._offsets_dev, capacity_factor=capacity)
         if routing is None:
-            warnings.warn(
+            dsp.OVERFLOWS.record(
                 f"IVF dispatch capacity overflow: the busiest probed cell "
                 f"batches {stats[1]} queries, over the "
-                f"dispatch_capacity={self.dispatch_capacity} budget for "
+                f"dispatch_capacity={capacity} budget for "
                 f"{stats[0]} routed cells; falling back to the padded "
                 "gathered plan for this batch")
             return None
@@ -582,25 +632,40 @@ class IVFIndex(base.Index):
             self._codes, self._ids_dev, rowbias, luts, cellterm,
             routing.plan, topl=topl, qkeep=qkeep, chunk=routing.chunk,
             pos=self._pos_dev, lut_dtype=lut_dtype, overfetch=overfetch)
-        return dsp.combine_pools(part_s, part_g, routing.comb_e,
+        comb_e = routing.comb_e
+        if probe_lens is not None:
+            within = jnp.arange(probe.shape[1])[None, :] < \
+                jnp.asarray(probe_lens)[:, None]
+            comb_e = jnp.where(within, comb_e, -1)
+        return dsp.combine_pools(part_s, part_g, comb_e,
                                  routing.comb_slot, topl=topl)
 
     # -- search --------------------------------------------------------------
 
-    def search(self, queries, k: int, *, nprobe: int | None = None,
+    def search(self, queries, k: int, *, nprobe=None,
                use_rerank: bool | None = None, use_d2: bool = True,
                filter_mask=None, use_dispatch: bool | None = None,
+               dispatch_capacity=_INDEX_CAPACITY,
                lut_dtype: str = "float32", overfetch: int = 1):
         """Probed two-stage search (same contract as ``Index.search`` plus
         ``nprobe``). Slots the probe misses simply never enter the pool;
         when the probed pool holds fewer than k points the tail is
         reported as (distance=+inf, index=-1).
 
+        ``nprobe`` may be a scalar or a (Q,) int vector — one probe width
+        per query, the serving fan-in for coalesced requests with
+        different accuracy budgets. Per-query widths probe at the batch
+        max and mask each query's excess cells out of its pool, so row i
+        is bit-identical to searching that query alone with nprobe[i].
+
         ``use_dispatch`` pins stage 1 to the cell-batched dispatch face
         (True) or the padded gathered plan (False); the default resolves
         per backend via the ``dispatch_topl`` capability. Both faces are
         bit-identical — the knob is a perf/control choice, never a
-        quality one.
+        quality one. ``dispatch_capacity`` overrides the index's own
+        capacity factor for this call (None = lossless routing): the
+        load-shed knob a serving loop can tighten under pressure without
+        mutating the shared index.
 
         ``lut_dtype``/``overfetch`` opt stage 1 into the reduced-precision
         pool scan + exact f32 re-score (``Index.search`` docstring) on
@@ -628,16 +693,19 @@ class IVFIndex(base.Index):
                 f"use_dispatch=True but backend {self.backend!r} does not "
                 "declare the dispatch_topl capability; use the padded "
                 "path (use_dispatch=False) or an xla/pallas backend")
-        probe, cd = self._probe_with_dists(queries, nprobe or self.nprobe)
+        nprobe_w, probe_lens = self._resolve_nprobe(nprobe, queries.shape[0])
+        probe, cd = self._probe_with_dists(queries, nprobe_w)
         if use_dispatch:
             pool = self._dispatch_pool(
                 queries, probe, cd, filter_mask,
                 topl=self.rerank if use_rerank else k,
-                lut_dtype=lut_dtype, overfetch=overfetch)
+                lut_dtype=lut_dtype, overfetch=overfetch,
+                probe_lens=probe_lens, capacity=dispatch_capacity)
             if pool is not None:
                 return self._finish_pool(queries, pool[0], pool[1], k,
                                          use_rerank=use_rerank)
-        rows_np, gids_np, cells_np = self._probe_plan(probe)
+        rows_np, gids_np, cells_np = self._probe_plan(
+            probe, probe_lens=probe_lens)
         rows = jnp.asarray(rows_np)
         gids = jnp.asarray(gids_np)
         exact = self._exact_residual

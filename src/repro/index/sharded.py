@@ -117,6 +117,10 @@ class ShardedIndex:
     def is_trained(self) -> bool:
         return self.inner.is_trained
 
+    def result_width(self, k: int) -> int:
+        """See ``Index.result_width`` (against this wrapper's ntotal)."""
+        return min(k, self.ntotal)
+
     def train(self, xs, **kw) -> "ShardedIndex":
         self.inner.train(xs, **kw)
         return self
@@ -178,13 +182,14 @@ class ShardedIndex:
     # -- search ------------------------------------------------------------
 
     def stage1_candidates(self, queries, topl: int | None = None, *,
-                          filter_mask=None, nprobe: int | None = None,
+                          filter_mask=None, nprobe=None,
                           use_dispatch: bool | None = None):
         """Distributed stage 1: per-shard top-L merged into the global
         candidate pool. Returns (d2 scores, global indices), each
         (Q, min(topl, pool width)), closest-first. ``nprobe`` and
         ``use_dispatch`` only apply to IVF inners (probe width defaults
-        to the index's own; the device placement rides the cell-batched
+        to the index's own; a (Q,) per-query nprobe vector works in host
+        placement only; the device placement rides the cell-batched
         dispatch face whenever the backend declares ``dispatch_topl``,
         pinnable either way for A/B runs)."""
         if topl is None:
@@ -233,7 +238,7 @@ class ShardedIndex:
         return -neg, jnp.take_along_axis(idx, order, axis=1)
 
     def _ivf_stage1(self, queries, topl: int, filter_mask,
-                    nprobe: int | None, use_dispatch: bool | None = None):
+                    nprobe, use_dispatch: bool | None = None):
         """By-cell sharded IVF stage 1: each shard owns a contiguous cell
         range; only shards owning a probed cell are scanned (host mode
         skips the rest outright, device mode gives them empty plans); the
@@ -247,7 +252,13 @@ class ShardedIndex:
         (``use_dispatch=False``)."""
         ivf = self.inner
         q = queries.shape[0]
-        probe, cd = ivf._probe_with_dists(queries, nprobe or ivf.nprobe)
+        nprobe_w, probe_lens = ivf._resolve_nprobe(nprobe, q)
+        if probe_lens is not None and self.resolved_placement == "device":
+            raise ValueError(
+                "per-query nprobe vectors are host-plan only; device "
+                "placement builds one shard_map plan per batch — use "
+                "placement='host' or a uniform nprobe")
+        probe, cd = ivf._probe_with_dists(queries, nprobe_w)
         luts = ivf._stage1_luts(queries, probe)
         cell_bias = cd if ivf._exact_residual else None
         bounds = self._ivf_cell_bounds()
@@ -304,7 +315,8 @@ class ShardedIndex:
             if row_hi == row_lo:
                 continue
             rows_np, gids_np, cells_np = ivf._probe_plan(
-                probe, cell_range=(c_lo, c_hi), row_offset=row_lo)
+                probe, cell_range=(c_lo, c_hi), row_offset=row_lo,
+                probe_lens=probe_lens)
             if (gids_np == _IMAX).all():
                 continue                      # no query probes this shard
             rows = jnp.asarray(rows_np)
@@ -327,7 +339,7 @@ class ShardedIndex:
                           jnp.concatenate(pool_i, axis=1), topl)
 
     def search(self, queries, k: int, *, use_rerank: bool | None = None,
-               filter_mask=None, nprobe: int | None = None,
+               filter_mask=None, nprobe=None,
                use_dispatch: bool | None = None):
         """Full two-stage sharded search: merged stage-1 candidates, then
         ONE stage-2 rerank over the merged pool through the streaming

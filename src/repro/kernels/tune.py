@@ -297,6 +297,12 @@ def registry_key(kernel: str, impl: str | None = None) -> str:
 
 
 _resolve_memo: dict = {}
+#: resolution-memo capacity. Eviction is LRU one-at-a-time (dicts are
+#: insertion-ordered; a hit reinserts its key at the back), so a serving
+#: loop's hot buckets stay resident no matter how much one-off shape
+#: churn flows past — a wholesale clear here made steady-state serving
+#: repay every resolution after each overflow.
+_MEMO_CAP = 4096
 
 
 def best_config(kernel: str, impl: str | None = None, **dims) -> dict:
@@ -305,10 +311,10 @@ def best_config(kernel: str, impl: str | None = None, **dims) -> dict:
     the registered hand-pinned defaults when nothing is cached (or
     ``REPRO_TUNE_DISABLE=1``). Returns ``{param: value}``.
 
-    Resolutions are memoized on (kernel, bucket, cache mtime), so the
-    steady-state cost is one stat + two dict probes — this sits on EVERY
-    kernel dispatch, where a JSON reparse per call would cost ~10% of a
-    small rerank call."""
+    Resolutions are memoized on (kernel, bucket, cache mtime) in a small
+    LRU (capacity ``_MEMO_CAP``), so the steady-state cost is one stat +
+    two dict probes — this sits on EVERY kernel dispatch, where a JSON
+    reparse per call would cost ~10% of a small rerank call."""
     key = registry_key(kernel, impl)
     spec = KERNELS[key]
     if os.environ.get(DISABLE_ENV, "") not in ("", "0"):
@@ -319,8 +325,9 @@ def best_config(kernel: str, impl: str | None = None, **dims) -> dict:
         mtime = None
     bkey = bucket_key(spec, dims)
     memo_key = (key, bkey, mtime)
-    hit = _resolve_memo.get(memo_key)
+    hit = _resolve_memo.pop(memo_key, None)
     if hit is not None:
+        _resolve_memo[memo_key] = hit   # reinsert: most recently used
         return dict(hit)
     entry = (load_cache().get("entries", {})
              .get(device_kind(), {})
@@ -330,8 +337,8 @@ def best_config(kernel: str, impl: str | None = None, **dims) -> dict:
     if entry:
         out.update({p: entry["config"][p]
                     for p in spec.params if p in entry["config"]})
-    if len(_resolve_memo) > 4096:        # unbounded-growth backstop
-        _resolve_memo.clear()
+    while len(_resolve_memo) >= _MEMO_CAP:
+        _resolve_memo.pop(next(iter(_resolve_memo)))   # evict oldest
     _resolve_memo[memo_key] = dict(out)
     return out
 

@@ -1,0 +1,30 @@
+"""repro.serve: deadline-aware batched serving over the streaming index.
+
+The paper's design premise is a deployed retrieval system answering heavy
+query traffic cheaply — fast encoding plus LUT-based compressed-domain
+distances exist so the *serving* cost per query is small. This package is
+that serving layer: an async request queue (`RequestQueue`), a
+deadline-aware coalescing scheduler (`Scheduler`), pow2 shape-bucket
+batching (`batching`, mirroring the `ENCODE_BUCKETS` ladder so each
+bucket compiles once), and a double-buffered dispatch engine
+(`ServeEngine`) that overlaps host-side batch assembly for request group
+t+1 with the device scan of group t.
+
+Batched execution is bit-identical to searching every request alone —
+pad queries are fully masked out and each request's rows are sliced back
+by exact-top-k prefix stability — so batching is purely a throughput
+knob, never a quality one. `tests/test_serve.py` holds the parity
+property suite; `docs/SERVING.md` the architecture tour.
+"""
+from repro.serve.batching import (QUERY_BUCKETS, Batch, Request, coalesce,
+                                  k_bucket, query_bucket)
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.metrics import ServeMetrics, latency_percentiles
+from repro.serve.queue import RequestQueue
+from repro.serve.scheduler import Scheduler
+
+__all__ = [
+    "QUERY_BUCKETS", "Batch", "Request", "RequestQueue", "Scheduler",
+    "ServeConfig", "ServeEngine", "ServeMetrics", "coalesce", "k_bucket",
+    "latency_percentiles", "query_bucket",
+]

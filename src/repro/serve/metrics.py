@@ -1,0 +1,91 @@
+"""Serving observability: latency percentiles, deadline accounting,
+batching efficiency, cold-compile ledger, and the dispatch-overflow
+counter (the load-shed events `index.dispatch.OVERFLOWS` rate-limits
+out of the warning stream — here they stay exactly countable).
+"""
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+
+from repro.index import dispatch as _dispatch
+
+
+def latency_percentiles(latencies_ms) -> dict:
+    """p50/p95/p99 over a latency sample (ms). Empty sample -> NaNs, so
+    a dry run still emits well-formed rows."""
+    if len(latencies_ms) == 0:
+        return {"p50_ms": float("nan"), "p95_ms": float("nan"),
+                "p99_ms": float("nan")}
+    lat = np.asarray(latencies_ms, dtype=np.float64)
+    p50, p95, p99 = np.percentile(lat, [50, 95, 99])
+    return {"p50_ms": float(p50), "p95_ms": float(p95),
+            "p99_ms": float(p99)}
+
+
+class ServeMetrics:
+    """Accumulates per-request and per-batch accounting for one engine.
+
+    ``dispatch_overflows`` reads the process-wide ``OVERFLOWS`` meter as
+    a delta from this object's last ``reset()``, so concurrent direct
+    index use outside the engine window doesn't pollute the count (two
+    engines serving simultaneously would share it — overflow is a
+    property of the shared index, not of one queue)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.reset()
+
+    def reset(self) -> None:
+        with self._lock:
+            self.latencies_ms: list[float] = []
+            self.deadline_misses = 0
+            self.deadline_total = 0
+            self.batches = 0
+            self.padded_queries = 0
+            self.real_queries = 0
+            self.cold_compile_ms: dict[str, float] = {}
+            self._overflow_base = _dispatch.OVERFLOWS.count
+
+    @property
+    def dispatch_overflows(self) -> int:
+        return _dispatch.OVERFLOWS.count - self._overflow_base
+
+    def record_batch(self, batch) -> None:
+        with self._lock:
+            self.batches += 1
+            self.padded_queries += batch.num_pad
+            self.real_queries += batch.num_real
+
+    def record_request(self, request, t_done: float) -> None:
+        with self._lock:
+            self.latencies_ms.append((t_done - request.t_submit) * 1e3)
+            if request.t_deadline is not None:
+                self.deadline_total += 1
+                if t_done > request.t_deadline:
+                    self.deadline_misses += 1
+
+    def record_cold_compile(self, label: str, ms: float) -> None:
+        with self._lock:
+            self.cold_compile_ms[label] = ms
+
+    def summary(self) -> dict:
+        """One flat dict: the BENCH_serve.json row shape."""
+        with self._lock:
+            lat = list(self.latencies_ms)
+            out = {
+                "requests": len(lat),
+                **latency_percentiles(lat),
+                "deadline_misses": self.deadline_misses,
+                "deadline_total": self.deadline_total,
+                "deadline_miss_rate": (
+                    self.deadline_misses / self.deadline_total
+                    if self.deadline_total else 0.0),
+                "batches": self.batches,
+                "padded_queries": self.padded_queries,
+                "real_queries": self.real_queries,
+                "cold_compile_ms": dict(self.cold_compile_ms),
+            }
+        out["dispatch_overflows"] = self.dispatch_overflows
+        return out

@@ -1,0 +1,95 @@
+"""Thread-safe request queue with earliest-deadline-first draining.
+
+The queue is deliberately dumb: it stamps, stores, and pops. All policy
+(linger windows, bucket targeting) lives in ``Scheduler``; all shape
+work lives in ``batching``. Pops are EDF — pending requests sort by
+(has-no-deadline, absolute deadline, submit seq), so deadline-carrying
+requests always drain before best-effort ones and FIFO breaks ties —
+and take a PREFIX of that order whose summed query rows fit the caller's
+budget, so a wide request never starves behind narrow ones forever (it
+is at the front of some prefix as soon as its deadline or seq says so).
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+from repro.serve.batching import Request
+
+
+def _edf_key(r: Request):
+    return (r.t_deadline is None, r.t_deadline or 0.0, r.seq)
+
+
+class RequestQueue:
+    def __init__(self):
+        self._cond = threading.Condition()
+        self._items: list[Request] = []
+        self._seq = 0
+        self._closed = False
+
+    def __len__(self) -> int:
+        with self._cond:
+            return len(self._items)
+
+    @property
+    def closed(self) -> bool:
+        with self._cond:
+            return self._closed
+
+    def submit(self, request: Request) -> Request:
+        """Stamp submit time / seq / absolute deadline and enqueue."""
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("submit on a closed RequestQueue")
+            request.t_submit = time.perf_counter()
+            request.seq = self._seq
+            self._seq += 1
+            if request.deadline_ms is not None:
+                request.t_deadline = request.t_submit \
+                    + request.deadline_ms / 1e3
+            self._items.append(request)
+            self._cond.notify_all()
+        return request
+
+    def close(self) -> None:
+        """No further submits; pending requests still drain via take."""
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+
+    def drained(self) -> bool:
+        """Closed AND empty: the worker's termination condition."""
+        with self._cond:
+            return self._closed and not self._items
+
+    def take(self, max_queries: int, *, block: bool = True,
+             timeout: float | None = None) -> list[Request]:
+        """Pop the EDF prefix totalling at most ``max_queries`` rows.
+
+        Blocks (optionally up to ``timeout`` seconds) for the queue to
+        become non-empty; returns [] on timeout, on ``block=False`` with
+        nothing pending, or once the queue is closed and drained. Always
+        pops at least one request when anything is pending (the engine
+        bounds every request's width at submit, so the head always
+        fits)."""
+        deadline = None if timeout is None \
+            else time.perf_counter() + timeout
+        with self._cond:
+            while not self._items:
+                if self._closed or not block:
+                    return []
+                remaining = None if deadline is None \
+                    else deadline - time.perf_counter()
+                if remaining is not None and remaining <= 0:
+                    return []
+                self._cond.wait(remaining)
+            self._items.sort(key=_edf_key)
+            taken, used = [], 0
+            while self._items:
+                head = self._items[0]
+                if taken and used + head.num_queries > max_queries:
+                    break
+                taken.append(self._items.pop(0))
+                used += head.num_queries
+            return taken

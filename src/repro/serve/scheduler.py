@@ -1,0 +1,72 @@
+"""Deadline-aware dynamic batching policy.
+
+The scheduler decides WHEN a batch is cut, trading latency for batch
+width: after the first request of a group arrives it lingers up to
+``linger_ms`` for followers to coalesce — but never past the point
+where the group's earliest deadline could no longer absorb a service
+time (tracked as an EWMA of observed batch service, padded by
+``deadline_slack_ms``). A request with a tight deadline therefore cuts
+its batch almost immediately; best-effort traffic coalesces up to the
+full linger window.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.serve.queue import RequestQueue
+
+
+class Scheduler:
+    def __init__(self, queue: RequestQueue, *, max_batch_queries: int,
+                 linger_ms: float = 2.0, deadline_slack_ms: float = 0.0):
+        self.queue = queue
+        self.max_batch_queries = max_batch_queries
+        self.linger_ms = linger_ms
+        self.deadline_slack_ms = deadline_slack_ms
+        self._service_ewma_ms = 0.0
+
+    @property
+    def service_estimate_ms(self) -> float:
+        return self._service_ewma_ms
+
+    def observe_service(self, ms: float) -> None:
+        """Fold one observed batch service time into the EWMA the linger
+        cut uses as its deadline-slack estimate."""
+        if self._service_ewma_ms == 0.0:
+            self._service_ewma_ms = ms
+        else:
+            self._service_ewma_ms += 0.25 * (ms - self._service_ewma_ms)
+
+    def _linger_budget_s(self, items) -> float:
+        """Seconds the group can still afford to wait for followers."""
+        budget = self.linger_ms / 1e3
+        now = time.perf_counter()
+        reserve = (self._service_ewma_ms + self.deadline_slack_ms) / 1e3
+        for r in items:
+            if r.t_deadline is not None:
+                budget = min(budget, r.t_deadline - now - reserve)
+        return max(budget, 0.0)
+
+    def next_items(self, *, block: bool = True):
+        """The next request group to coalesce (empty list = nothing
+        pending; with ``block=True`` an empty list means the queue is
+        closed and drained). Takes the EDF head, then lingers within the
+        group's deadline budget to fill toward ``max_batch_queries``."""
+        items = self.queue.take(self.max_batch_queries, block=block)
+        if not items:
+            return items
+        used = sum(r.num_queries for r in items)
+        cutoff = time.perf_counter() + self._linger_budget_s(items)
+        while used < self.max_batch_queries:
+            remaining = cutoff - time.perf_counter()
+            if remaining <= 0:
+                break
+            more = self.queue.take(self.max_batch_queries - used,
+                                   block=True, timeout=remaining)
+            if not more:
+                break
+            items.extend(more)
+            used += sum(r.num_queries for r in more)
+            cutoff = min(cutoff, time.perf_counter()
+                         + self._linger_budget_s(more))
+        return items

@@ -1,0 +1,330 @@
+"""The serving layer (``repro.serve``).
+
+  * batched-vs-individual BIT-parity property suite: any mix of requests
+    with heterogeneous k / nprobe / filter_mask coalesced into one
+    padded bucket returns results bitwise-equal (ties included) to each
+    request searched alone — across xla and pallas-interpret, flat and
+    IVF (padded AND dispatch stage-1 faces);
+  * per-query nprobe vectors on ``IVFIndex.search`` directly (the index-
+    layer fan-in the engine rides);
+  * scheduler/queue units: EDF deadline ordering, prefix budget, bucket
+    selection, drain on shutdown;
+  * the warm-up satellite: after ``ServeEngine.warmup`` the serving path
+    triggers ZERO fresh XLA compiles (the timed loop can never pay a
+    jit), and the cold-compile bill is recorded as its own metric line;
+  * the overflow satellite: capacity overflows warn ONCE (rate-limited)
+    while the exact count stays observable through the serve metrics.
+"""
+import threading
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.index import dispatch as dsp
+from repro.serve import (QUERY_BUCKETS, Request, RequestQueue, ServeConfig,
+                         ServeEngine, Scheduler, coalesce, k_bucket,
+                         query_bucket)
+
+_FLAT_SPEC = "PQ4x32,Rerank50"
+_IVF_SPEC = "IVF16,PQ4x32,Rerank50"
+
+
+def _request_mix(rng, ds, *, ivf: bool, n: int = 6):
+    """Heterogeneous submit-kwarg dicts: widths 1-4, k spanning buckets,
+    scalar AND per-query-vector nprobe, sparse filter masks."""
+    ntotal = ds.base.shape[0]
+    reqs = []
+    for t in range(n):
+        q = int(rng.integers(1, 5))
+        r = {"queries": np.asarray(ds.queries[rng.integers(0, 150, q)]),
+             "k": int(rng.choice([1, 3, 10, 37]))}
+        if ivf and t % 3 == 1:
+            r["nprobe"] = int(rng.integers(1, 8))
+        if ivf and t % 3 == 2:
+            r["nprobe"] = rng.integers(1, 8, size=q)
+        if t % 2 == 1:
+            r["filter_mask"] = rng.random((q, ntotal)) > 0.3
+        reqs.append(r)
+    return reqs
+
+
+def _solo(index, r, **face):
+    kw = dict(face)
+    if r.get("nprobe") is not None:
+        kw["nprobe"] = r["nprobe"]
+    if r.get("filter_mask") is not None:
+        kw["filter_mask"] = r["filter_mask"]
+    d, i = index.search(r["queries"], r["k"], **kw)
+    return np.asarray(d), np.asarray(i)
+
+
+# ---------------------------------------------------------------------------
+# batched == individual, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_flat_batched_parity(trained_index_factory, tiny_dataset, backend):
+    index = trained_index_factory(_FLAT_SPEC)
+    index.backend = backend
+    engine = ServeEngine(index, ServeConfig(max_batch_queries=32))
+    rng = np.random.default_rng(0)
+    reqs = _request_mix(rng, tiny_dataset, ivf=False)
+    got = engine.search_requests(reqs)
+    for r, (d, i) in zip(reqs, got):
+        d_ref, i_ref = _solo(index, r)
+        np.testing.assert_array_equal(d, d_ref, err_msg=f"{backend} d")
+        np.testing.assert_array_equal(i, i_ref, err_msg=f"{backend} i")
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("face", [False, True],
+                         ids=["padded", "dispatch"])
+def test_ivf_batched_parity(trained_index_factory, tiny_dataset, backend,
+                            face):
+    index = trained_index_factory(_IVF_SPEC)
+    index.backend = backend
+    engine = ServeEngine(index, ServeConfig(max_batch_queries=32,
+                                            use_dispatch=face))
+    rng = np.random.default_rng(1)
+    reqs = _request_mix(rng, tiny_dataset, ivf=True)
+    got = engine.search_requests(reqs)
+    for r, (d, i) in zip(reqs, got):
+        d_ref, i_ref = _solo(index, r, use_dispatch=face)
+        np.testing.assert_array_equal(
+            d, d_ref, err_msg=f"{backend} dispatch={face} d")
+        np.testing.assert_array_equal(
+            i, i_ref, err_msg=f"{backend} dispatch={face} i")
+
+
+def test_async_submit_matches_solo(trained_index_factory, tiny_dataset):
+    """The queue/worker path (not just search_requests) delivers the
+    same bits, through futures, with deadline accounting."""
+    index = trained_index_factory(_IVF_SPEC)
+    engine = ServeEngine(index, ServeConfig(max_batch_queries=16,
+                                            linger_ms=1.0))
+    rng = np.random.default_rng(2)
+    reqs = _request_mix(rng, tiny_dataset, ivf=True, n=8)
+    futures = [engine.submit(**r, deadline_ms=60_000.0) for r in reqs]
+    for r, f in zip(reqs, futures):
+        d, i = f.result(timeout=120)
+        d_ref, i_ref = _solo(index, r)
+        np.testing.assert_array_equal(d, d_ref)
+        np.testing.assert_array_equal(i, i_ref)
+    engine.close()
+    s = engine.metrics.summary()
+    assert s["requests"] == len(reqs)
+    assert s["deadline_total"] == len(reqs)
+    assert s["deadline_misses"] == 0
+
+
+def test_per_query_nprobe_vector_on_index(trained_index_factory,
+                                          tiny_dataset):
+    """(Q,) nprobe on IVFIndex.search directly: row i bit-equal to a solo
+    search at nprobe[i], on both stage-1 faces."""
+    index = trained_index_factory(_IVF_SPEC)
+    q = np.asarray(tiny_dataset.queries[:5])
+    lens = np.array([1, 4, 2, 7, 3], dtype=np.int32)
+    for face in (False, True):
+        d_b, i_b = index.search(q, 10, nprobe=lens, use_dispatch=face)
+        d_b, i_b = np.asarray(d_b), np.asarray(i_b)
+        for r in range(5):
+            d_s, i_s = index.search(q[r:r + 1], 10, nprobe=int(lens[r]),
+                                    use_dispatch=face)
+            np.testing.assert_array_equal(d_b[r], np.asarray(d_s)[0],
+                                          err_msg=f"dispatch={face} r={r}")
+            np.testing.assert_array_equal(i_b[r], np.asarray(i_s)[0],
+                                          err_msg=f"dispatch={face} r={r}")
+    with pytest.raises(ValueError, match="per-query nprobe"):
+        index.search(q, 10, nprobe=np.array([1, 2]))
+
+
+# ---------------------------------------------------------------------------
+# bucketing / coalescing units
+# ---------------------------------------------------------------------------
+
+def test_bucket_selection():
+    assert query_bucket(1) == 8
+    assert query_bucket(8) == 8
+    assert query_bucket(9) == 16
+    assert query_bucket(QUERY_BUCKETS[-1]) == QUERY_BUCKETS[-1]
+    with pytest.raises(ValueError, match="largest query bucket"):
+        query_bucket(QUERY_BUCKETS[-1] + 1)
+    assert k_bucket(1) == 1
+    assert k_bucket(10) == 16
+    assert k_bucket(16) == 16
+
+
+def _req(q, k, **kw):
+    return Request(queries=np.zeros((q, 4), np.float32), k=k, **kw)
+
+
+def test_coalesce_shapes_and_defaults():
+    batch = coalesce([_req(3, 10), _req(2, 37)], ntotal=100,
+                     default_nprobe=8)
+    assert batch.bucket == 8 and batch.spans == ((0, 3), (3, 5))
+    assert batch.k_eff == 64                  # pow2 of max k
+    assert batch.nprobe is None               # nobody pinned one
+    assert batch.filter_mask is None          # nobody masked
+    assert batch.num_pad == 3
+
+
+def test_coalesce_nprobe_vector_and_mask_rows():
+    reqs = [_req(2, 5, nprobe=3),
+            _req(1, 5, filter_mask=np.zeros((1, 100), bool)),
+            _req(2, 5, nprobe=np.array([1, 7]))]
+    batch = coalesce(reqs, ntotal=100, default_nprobe=8)
+    # nprobe: pinned 3,3 | default 8 | vector 1,7 | pads 1
+    np.testing.assert_array_equal(batch.nprobe,
+                                  [3, 3, 8, 1, 7, 1, 1, 1])
+    # mask: maskless requests get all-True rows, pads all-False
+    assert batch.filter_mask.shape == (8, 100)
+    assert batch.filter_mask[:2].all()        # maskless request rows
+    assert not batch.filter_mask[2].any()     # the request's own mask
+    assert batch.filter_mask[3:5].all()       # maskless request rows
+    assert not batch.filter_mask[5:].any()    # pad rows
+
+
+def test_coalesce_uniform_nprobe_collapses_to_scalar():
+    batch = coalesce([_req(4, 5, nprobe=6), _req(4, 5, nprobe=6)],
+                     ntotal=100, default_nprobe=8)
+    assert batch.nprobe == 6 and isinstance(batch.nprobe, int)
+
+
+# ---------------------------------------------------------------------------
+# queue / scheduler
+# ---------------------------------------------------------------------------
+
+def test_queue_edf_ordering_and_prefix_budget():
+    q = RequestQueue()
+    best_effort = q.submit(_req(2, 5))
+    late = q.submit(_req(2, 5, deadline_ms=500.0))
+    early = q.submit(_req(2, 5, deadline_ms=10.0))
+    taken = q.take(4, block=False)
+    # earliest deadline first; the budget (4 rows) cuts after two
+    assert taken == [early, late]
+    assert q.take(4, block=False) == [best_effort]
+
+
+def test_queue_fifo_tie_break_and_oversize_head():
+    q = RequestQueue()
+    a, b = q.submit(_req(3, 5)), q.submit(_req(3, 5))
+    assert q.take(2, block=False) == [a]   # head always pops, FIFO order
+    assert q.take(2, block=False) == [b]
+
+
+def test_queue_drain_on_shutdown():
+    q = RequestQueue()
+    q.submit(_req(1, 5))
+    q.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        q.submit(_req(1, 5))
+    assert not q.drained()                 # one item still pending
+    assert len(q.take(8, block=True)) == 1 # drains without blocking
+    assert q.drained()
+    assert q.take(8, block=True) == []     # closed+empty: returns, no hang
+
+
+def test_scheduler_lingers_for_followers():
+    q = RequestQueue()
+    sched = Scheduler(q, max_batch_queries=8, linger_ms=200.0)
+    q.submit(_req(2, 5))
+    t = threading.Timer(0.02, lambda: q.submit(_req(2, 5)))
+    t.start()
+    items = sched.next_items()
+    t.join()
+    assert len(items) == 2                 # the follower made the batch
+
+
+def test_scheduler_tight_deadline_cuts_immediately():
+    q = RequestQueue()
+    sched = Scheduler(q, max_batch_queries=8, linger_ms=500.0)
+    sched.observe_service(5.0)
+    q.submit(_req(2, 5, deadline_ms=1.0))  # no slack for lingering
+    t0 = time.perf_counter()
+    items = sched.next_items()
+    assert len(items) == 1
+    assert time.perf_counter() - t0 < 0.25 # did not sit out the 500ms
+
+
+def test_engine_close_drains_pending(trained_index_factory, tiny_dataset):
+    index = trained_index_factory(_FLAT_SPEC)
+    engine = ServeEngine(index, ServeConfig(max_batch_queries=16))
+    futures = [engine.submit(np.asarray(tiny_dataset.queries[:2]), k=5)
+               for _ in range(5)]
+    engine.close(drain=True)
+    assert all(f.done() for f in futures)
+    assert all(f.exception() is None for f in futures)
+
+
+# ---------------------------------------------------------------------------
+# the warm-up satellite: timed serving never pays a compile
+# ---------------------------------------------------------------------------
+
+def test_warmup_excludes_compile_from_serving(trained_index_factory,
+                                              tiny_dataset):
+    """After warming one batch per shape bucket, the serving path
+    triggers ZERO fresh XLA compiles — so latency percentiles measure
+    search, never jit. Flat index on purpose: IVF's probe-plan width
+    varies with probe content, which is exactly why the engine pins the
+    (Q bucket, k bucket) ladder on the shapes it CAN pin."""
+    from repro.analysis.compilecount import count_compiles
+    index = trained_index_factory(_FLAT_SPEC)
+    engine = ServeEngine(index, ServeConfig(max_batch_queries=16,
+                                            default_k=10))
+    cold = engine.warmup(buckets=(8, 16), ks=(10,))
+    assert set(cold) == {"q8_k16", "q16_k16"}
+    assert all(ms > 0 for ms in cold.values())
+    assert engine.metrics.cold_compile_ms == cold   # its own metric line
+
+    rng = np.random.default_rng(3)
+    with count_compiles() as log:
+        for lo in (0, 6):     # two groups, both landing in warmed buckets
+            reqs = [{"queries":
+                     np.asarray(tiny_dataset.queries[lo + 2 * j:
+                                                     lo + 2 * j + 2]),
+                     "k": int(rng.integers(9, 17))} for j in range(3)]
+            got = engine.search_requests(reqs)
+        assert len(got) == 3
+    assert log.count == 0, f"fresh compiles in timed path: {log.names()}"
+
+
+# ---------------------------------------------------------------------------
+# the overflow satellite: one warning, exact counter
+# ---------------------------------------------------------------------------
+
+def test_overflow_warns_once_and_counts(trained_index_factory,
+                                        tiny_dataset):
+    index = trained_index_factory(_IVF_SPEC)
+    engine = ServeEngine(index, ServeConfig(max_batch_queries=16,
+                                            use_dispatch=True,
+                                            dispatch_capacity=1e-6))
+    dsp.OVERFLOWS.reset()
+    engine.metrics.reset()     # capture the overflow base AFTER the reset
+    q = np.asarray(tiny_dataset.queries[:4])
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        for _ in range(5):
+            engine.search_requests([{"queries": q, "k": 5}])
+    assert len(rec) == 1                   # rate-limited: first only
+    assert "overflow" in str(rec[0].message)
+    assert engine.metrics.dispatch_overflows == 5   # exact count survives
+    # the loud fallback stays correct: results equal the padded face
+    d, i = engine.search_requests([{"queries": q, "k": 5}])[0]
+    ref = ServeEngine(index, ServeConfig(max_batch_queries=16,
+                                         use_dispatch=False))
+    d_ref, i_ref = ref.search_requests([{"queries": q, "k": 5}])[0]
+    np.testing.assert_array_equal(d, d_ref)
+    np.testing.assert_array_equal(i, i_ref)
+
+
+def test_overflow_meter_periodic_summary():
+    meter = dsp.OverflowMeter(warn_every=3)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        for _ in range(7):
+            meter.record("cap blown")
+    assert meter.count == 7
+    assert len(rec) == 3                   # 1st, 4th, 7th
+    assert "3 dispatch capacity overflows" in str(rec[1].message)

@@ -162,6 +162,43 @@ def test_cache_fingerprint_counts_tuned_buckets(cache):
     assert tune.cache_fingerprint()["tuned_buckets"] == 3
 
 
+def test_resolve_memo_lru_keeps_hot_buckets(cache, monkeypatch):
+    """Regression: the resolution memo used to evict by wholesale
+    ``.clear()`` at capacity, discarding a serving loop's hot buckets
+    along with stale ones. Eviction must be LRU: a bucket that keeps
+    getting hit survives unlimited one-off shape churn."""
+    monkeypatch.setattr(tune, "_MEMO_CAP", 4)
+    monkeypatch.setattr(tune, "_resolve_memo", {})
+
+    def resolve(n):
+        return tune.best_config("adc_scan_topl", "xla", n=n, q=8, topl=16)
+
+    hot = 100          # buckets to n=128 — the serving loop's steady shape
+    resolve(hot)
+    hot_key = next(iter(tune._resolve_memo))
+    # fill to capacity with three more distinct buckets...
+    for n in (1000, 10_000, 100_000):
+        resolve(n)
+    assert len(tune._resolve_memo) == 4
+    # ...touch the hot bucket (now the LRU-oldest), then overflow
+    resolve(hot)
+    resolve(7)                                   # 5th distinct bucket
+    assert len(tune._resolve_memo) == 4          # one-at-a-time eviction
+    assert hot_key in tune._resolve_memo         # the hit kept it resident
+    # the true LRU entry (n=1000 -> the oldest untouched) was the victim
+    assert not any("n=1024," in k[1] for k in tune._resolve_memo)
+
+
+def test_resolve_memo_hit_skips_cache_reload(cache, monkeypatch):
+    """Memoized resolutions never reparse the winner cache."""
+    monkeypatch.setattr(tune, "_resolve_memo", {})
+    want = tune.best_config("adc_scan_topl", "xla", n=100, q=8, topl=16)
+    monkeypatch.setattr(tune, "load_cache", lambda refresh=False: (
+        pytest.fail("memo hit must not reload the cache")))
+    assert tune.best_config("adc_scan_topl", "xla",
+                            n=100, q=8, topl=16) == want
+
+
 # ---------------------------------------------------------------------------
 # sweep driver <-> registry agreement
 # ---------------------------------------------------------------------------
