@@ -44,6 +44,7 @@ from __future__ import annotations
 import json
 import os
 import pathlib
+import threading
 from typing import NamedTuple
 
 from repro.kernels.adc_scan import DEFAULT_BLOCK_N, DEFAULT_BLOCK_Q
@@ -303,6 +304,12 @@ _resolve_memo: dict = {}
 #: churn flows past — a wholesale clear here made steady-state serving
 #: repay every resolution after each overflow.
 _MEMO_CAP = 4096
+#: guards every _resolve_memo access: the serving worker thread and
+#: direct index.search callers resolve concurrently, and the unguarded
+#: pop-reinsert/evict dance could KeyError mid-eviction (iter one
+#: thread, pop another). Held only for dict probes — never across the
+#: cache load.
+_memo_lock = threading.Lock()
 
 
 def best_config(kernel: str, impl: str | None = None, **dims) -> dict:
@@ -325,9 +332,11 @@ def best_config(kernel: str, impl: str | None = None, **dims) -> dict:
         mtime = None
     bkey = bucket_key(spec, dims)
     memo_key = (key, bkey, mtime)
-    hit = _resolve_memo.pop(memo_key, None)
+    with _memo_lock:
+        hit = _resolve_memo.pop(memo_key, None)
+        if hit is not None:
+            _resolve_memo[memo_key] = hit   # reinsert: most recently used
     if hit is not None:
-        _resolve_memo[memo_key] = hit   # reinsert: most recently used
         return dict(hit)
     entry = (load_cache().get("entries", {})
              .get(device_kind(), {})
@@ -337,9 +346,10 @@ def best_config(kernel: str, impl: str | None = None, **dims) -> dict:
     if entry:
         out.update({p: entry["config"][p]
                     for p in spec.params if p in entry["config"]})
-    while len(_resolve_memo) >= _MEMO_CAP:
-        _resolve_memo.pop(next(iter(_resolve_memo)))   # evict oldest
-    _resolve_memo[memo_key] = dict(out)
+    with _memo_lock:
+        while len(_resolve_memo) >= _MEMO_CAP:
+            _resolve_memo.pop(next(iter(_resolve_memo)))   # evict oldest
+        _resolve_memo[memo_key] = dict(out)
     return out
 
 

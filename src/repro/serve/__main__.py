@@ -79,7 +79,9 @@ def smoke() -> int:
         index = _build(spec)
         engine = ServeEngine(index, ServeConfig(
             max_batch_queries=32, linger_ms=1.0, default_k=10))
-        cold = engine.warmup(buckets=(8, 16, 32), ks=(16,))
+        # masks=True: the trace carries filter_mask requests, whose
+        # (Q, ntotal) operand traces a different program per bucket
+        cold = engine.warmup(buckets=(8, 16, 32), ks=(16,), masks=True)
         print(f"[{spec}] cold-compile ms: "
               + ", ".join(f"{k}={v:.1f}" for k, v in cold.items()))
         rng = np.random.default_rng(7)

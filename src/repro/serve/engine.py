@@ -7,7 +7,12 @@ device scan is launched (non-blocking), then the HOST work for batch
 t+1 — queue drain, coalescing, probe-plan/routing construction inside
 ``index.search`` — proceeds while t runs; only then does the worker
 block on t's result to fan it out. Steady state therefore keeps the
-device busy whenever two batches are in flight.
+device busy whenever two batches are in flight. Completion of t never
+waits on t+1's coalescing window: the worker fans t out eagerly when
+its result is already ready, and otherwise arms the scheduler's linger
+interrupt so the wait for t+1's followers is cut the moment t finishes
+— which also keeps the observed service times (the scheduler's
+deadline-reserve EWMA) honest instead of folding linger into them.
 
 Bit-parity contract: every result delivered through ``submit`` /
 ``search_requests`` is bitwise-equal to calling ``index.search`` on
@@ -192,32 +197,63 @@ class ServeEngine:
 
     # -- warmup ------------------------------------------------------------
 
-    def warmup(self, buckets=None, ks=None) -> dict:
+    def warmup(self, buckets=None, ks=None, *, masks: bool = False,
+               nprobe_vectors: bool = False) -> dict:
         """Compile every (query bucket, k bucket) the serving loop will
         hit, through the SAME coalesce+execute path, before any timed
         traffic: the cold-compile cost lands here, in its own metric
         line, instead of inside the first requests' p95. Returns
-        {label: ms} (also recorded on ``self.metrics``)."""
+        {label: ms} (also recorded on ``self.metrics``).
+
+        The base pass covers maskless, default-nprobe traffic only — a
+        ``filter_mask`` adds a (Q, ntotal) operand and (on the dispatch
+        face) a per-query nprobe vector adds a probe-lengths operand, so
+        those variants trace DIFFERENT programs. Traffic carrying them
+        must opt in here (``masks=True`` warms an all-True-mask batch
+        per bucket, ``nprobe_vectors=True`` a non-uniform probe vector
+        at the default width; IVF-backed only) or its first request per
+        bucket pays the jit inside the timed path. IVF probe-PLAN widths
+        remain data-dependent either way — the ladder pins the shapes it
+        can (see docs/SERVING.md for the exact coverage)."""
         cfg = self.config
         if buckets is None:
             buckets = [b for b in cfg.query_buckets
                        if b <= cfg.max_batch_queries]
         if ks is None:
             ks = [cfg.default_k]
+        if nprobe_vectors and self._ivf is None:
+            raise ValueError(
+                "nprobe_vectors warmup applies to IVF-backed indexes only")
         timings = {}
         for b in buckets:
             for k in ks:
-                req = self._make_request(
-                    np.zeros((b, self.index.dim), np.float32),
-                    k=k, nprobe=None, filter_mask=None, deadline_ms=None)
-                t0 = time.perf_counter()
-                batch = self._coalesce([req])
-                d, i = self._execute(batch)
-                np.asarray(d), np.asarray(i)        # block for compile+run
-                ms = (time.perf_counter() - t0) * 1e3
-                label = f"q{b}_k{batching.k_bucket(k) if cfg.pow2_k else k}"
-                timings[label] = ms
-                self.metrics.record_cold_compile(label, ms)
+                variants = [("", None, None)]
+                if masks:
+                    variants.append(
+                        ("_masked", None,
+                         np.ones((b, self.index.ntotal), dtype=bool)))
+                if nprobe_vectors:
+                    # non-uniform on purpose: a uniform vector collapses
+                    # to its scalar and would trace the base program
+                    dflt = max(1, min(self._ivf.nprobe, self._ivf.nlist))
+                    lens = np.full(b, dflt, dtype=np.int32)
+                    if self._ivf.nlist > 1 and b > 1:
+                        lens[0] = dflt - 1 if dflt > 1 else dflt + 1
+                    variants.append(("_vnprobe", lens, None))
+                for suffix, nprobe, mask in variants:
+                    req = self._make_request(
+                        np.zeros((b, self.index.dim), np.float32),
+                        k=k, nprobe=nprobe, filter_mask=mask,
+                        deadline_ms=None)
+                    t0 = time.perf_counter()
+                    batch = self._coalesce([req])
+                    d, i = self._execute(batch)
+                    np.asarray(d), np.asarray(i)    # block for compile+run
+                    ms = (time.perf_counter() - t0) * 1e3
+                    kb = batching.k_bucket(k) if cfg.pow2_k else k
+                    label = f"q{b}_k{kb}{suffix}"
+                    timings[label] = ms
+                    self.metrics.record_cold_compile(label, ms)
         return timings
 
     # -- worker loop -------------------------------------------------------
@@ -230,12 +266,35 @@ class ServeEngine:
                     daemon=True)
                 self._worker.start()
 
+    @staticmethod
+    def _pending_ready(pending) -> bool:
+        """True when batch t's result no longer needs a device wait, so
+        completing it now costs (almost) nothing. Plain numpy results
+        (no ``is_ready``) are host-resident by definition; if readiness
+        cannot be probed, answer False and keep the blocking order."""
+        _, d, i, _ = pending
+        try:
+            return all(getattr(a, "is_ready", lambda: True)()
+                       for a in (d, i))
+        except Exception:        # noqa: BLE001 — probe only, never fatal
+            return False
+
     def _run_worker(self) -> None:
         pending = None        # (batch, device distances, device indices, t0)
         while True:
+            # an already-finished batch t fans out BEFORE the next
+            # linger window opens: waiting for t+1's followers must
+            # never delay results that are sitting ready
+            if pending is not None and self._pending_ready(pending):
+                self._complete(*pending)
+                pending = None
             # host work for t+1 overlaps the device scan of t: only
-            # block for fresh items when nothing is in flight
-            items = self.scheduler.next_items(block=pending is None)
+            # block for fresh items when nothing is in flight, and let
+            # t's completion interrupt the linger the moment t is ready
+            interrupt = None if pending is None else \
+                (lambda p=pending: self._pending_ready(p))
+            items = self.scheduler.next_items(block=pending is None,
+                                              interrupt=interrupt)
             nxt = None
             if items:
                 try:
@@ -254,7 +313,11 @@ class ServeEngine:
                 return
 
     def _complete(self, batch: Batch, d, i, t0: float) -> None:
-        """Block on the device result, fan out, account."""
+        """Block on the device result, fan out, account. The service
+        sample fed to the scheduler spans launch -> result ready; the
+        worker's eager-completion/linger-interrupt discipline keeps the
+        gap between "device done" and this call at poll granularity, so
+        the EWMA tracks service, not linger."""
         try:
             d_np, i_np = np.asarray(d), np.asarray(i)
         except Exception as exc:             # noqa: BLE001

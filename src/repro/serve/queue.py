@@ -64,15 +64,21 @@ class RequestQueue:
             return self._closed and not self._items
 
     def take(self, max_queries: int, *, block: bool = True,
-             timeout: float | None = None) -> list[Request]:
+             timeout: float | None = None,
+             strict_budget: bool = False) -> list[Request]:
         """Pop the EDF prefix totalling at most ``max_queries`` rows.
 
         Blocks (optionally up to ``timeout`` seconds) for the queue to
         become non-empty; returns [] on timeout, on ``block=False`` with
-        nothing pending, or once the queue is closed and drained. Always
-        pops at least one request when anything is pending (the engine
-        bounds every request's width at submit, so the head always
-        fits)."""
+        nothing pending, or once the queue is closed and drained. By
+        default pops at least one request when anything is pending, even
+        a head wider than ``max_queries`` — right for a FRESH batch,
+        whose caller sizes ``max_queries`` at the full batch budget (the
+        engine bounds request width at submit, so such a head always
+        fits a batch of its own). A REFILL into a partly-built batch
+        must instead pass ``strict_budget=True``: an oversize head is
+        then refused (returns [] immediately, head left queued) rather
+        than popped past the remaining budget."""
         deadline = None if timeout is None \
             else time.perf_counter() + timeout
         with self._cond:
@@ -88,7 +94,8 @@ class RequestQueue:
             taken, used = [], 0
             while self._items:
                 head = self._items[0]
-                if taken and used + head.num_queries > max_queries:
+                if (taken or strict_budget) \
+                        and used + head.num_queries > max_queries:
                     break
                 taken.append(self._items.pop(0))
                 used += head.num_queries

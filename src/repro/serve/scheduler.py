@@ -12,8 +12,15 @@ full linger window.
 from __future__ import annotations
 
 import time
+from typing import Callable
 
 from repro.serve.queue import RequestQueue
+
+#: linger-wait slice (s) when an ``interrupt`` probe is armed: the
+#: engine's "batch t finished on device" signal is checked at this
+#: granularity, bounding how long a ready result can sit behind an
+#: open linger window.
+_INTERRUPT_POLL_S = 5e-4
 
 
 class Scheduler:
@@ -47,11 +54,24 @@ class Scheduler:
                 budget = min(budget, r.t_deadline - now - reserve)
         return max(budget, 0.0)
 
-    def next_items(self, *, block: bool = True):
+    def next_items(self, *, block: bool = True,
+                   interrupt: Callable[[], bool] | None = None):
         """The next request group to coalesce (empty list = nothing
         pending; with ``block=True`` an empty list means the queue is
         closed and drained). Takes the EDF head, then lingers within the
-        group's deadline budget to fill toward ``max_batch_queries``."""
+        group's deadline budget to fill toward ``max_batch_queries``.
+
+        Refills are budget-STRICT: a request wider than the remaining
+        budget is left queued (it leads the next batch) rather than
+        popped past ``max_batch_queries`` — an overfull group would pick
+        an un-warmed bucket or, at the top rung, fail the whole group in
+        ``coalesce``. An EDF head the budget refuses also ends the
+        linger: later arrivals may not legally jump that head.
+
+        ``interrupt`` (optional, engine-armed) is polled during the
+        linger wait; when it returns True the group is cut immediately —
+        the engine uses it to stop a linger for batch t+1 from delaying
+        fan-out of batch t once t's device result is ready."""
         items = self.queue.take(self.max_batch_queries, block=block)
         if not items:
             return items
@@ -61,12 +81,18 @@ class Scheduler:
             remaining = cutoff - time.perf_counter()
             if remaining <= 0:
                 break
+            if interrupt is not None:
+                if interrupt():
+                    break
+                remaining = min(remaining, _INTERRUPT_POLL_S)
             more = self.queue.take(self.max_batch_queries - used,
-                                   block=True, timeout=remaining)
-            if not more:
-                break
-            items.extend(more)
-            used += sum(r.num_queries for r in more)
-            cutoff = min(cutoff, time.perf_counter()
-                         + self._linger_budget_s(more))
+                                   block=True, timeout=remaining,
+                                   strict_budget=True)
+            if more:
+                items.extend(more)
+                used += sum(r.num_queries for r in more)
+                cutoff = min(cutoff, time.perf_counter()
+                             + self._linger_budget_s(more))
+            elif interrupt is None or len(self.queue):
+                break    # full wait elapsed, or an oversize head refused
         return items

@@ -214,6 +214,17 @@ def test_queue_fifo_tie_break_and_oversize_head():
     assert q.take(2, block=False) == [b]
 
 
+def test_queue_strict_budget_refuses_oversize_head():
+    """The refill mode: a head wider than the remaining budget stays
+    queued instead of being popped past it."""
+    q = RequestQueue()
+    wide = q.submit(_req(3, 5))
+    assert q.take(2, block=False, strict_budget=True) == []
+    assert len(q) == 1                     # left queued, not dropped
+    assert q.take(2, block=True, timeout=0.05, strict_budget=True) == []
+    assert q.take(3, block=False, strict_budget=True) == [wide]
+
+
 def test_queue_drain_on_shutdown():
     q = RequestQueue()
     q.submit(_req(1, 5))
@@ -235,6 +246,47 @@ def test_scheduler_lingers_for_followers():
     items = sched.next_items()
     t.join()
     assert len(items) == 2                 # the follower made the batch
+
+
+def test_scheduler_refill_never_overfills_batch():
+    """Regression: a request wider than the remaining budget arriving
+    during the linger window used to be popped anyway, pushing the
+    group past max_batch_queries — at the top bucket rung that fails
+    the WHOLE group in coalesce (ValueError), and below it the batch
+    lands on an un-warmed bucket. The refill must leave it queued to
+    lead the next batch."""
+    q = RequestQueue()
+    sched = Scheduler(q, max_batch_queries=4, linger_ms=200.0)
+    q.submit(_req(2, 5))
+    t = threading.Timer(0.02, lambda: q.submit(_req(3, 5)))
+    t.start()
+    items = sched.next_items()
+    t.join()
+    assert [r.num_queries for r in items] == [2]
+    assert sum(r.num_queries for r in items) <= 4
+    assert [r.num_queries for r in sched.next_items()] == [3]
+
+
+def test_scheduler_interrupt_cuts_linger():
+    """The engine arms ``interrupt`` while a launched batch is in
+    flight: the moment it reports ready, the linger is cut so fan-out
+    is never delayed by the coalescing window."""
+    q = RequestQueue()
+    sched = Scheduler(q, max_batch_queries=8, linger_ms=500.0)
+    q.submit(_req(2, 5))
+    t0 = time.perf_counter()
+    items = sched.next_items(interrupt=lambda: True)
+    assert len(items) == 1
+    assert time.perf_counter() - t0 < 0.25  # did not sit out the 500ms
+
+    # a False interrupt still coalesces followers across poll slices
+    sched = Scheduler(q, max_batch_queries=4, linger_ms=200.0)
+    q.submit(_req(2, 5))
+    t = threading.Timer(0.02, lambda: q.submit(_req(2, 5)))
+    t.start()
+    items = sched.next_items(interrupt=lambda: False)
+    t.join()
+    assert len(items) == 2
 
 
 def test_scheduler_tight_deadline_cuts_immediately():
@@ -288,6 +340,42 @@ def test_warmup_excludes_compile_from_serving(trained_index_factory,
             got = engine.search_requests(reqs)
         assert len(got) == 3
     assert log.count == 0, f"fresh compiles in timed path: {log.names()}"
+
+
+def test_warmup_variants_cover_masked_and_vector_nprobe(
+        trained_index_factory, tiny_dataset):
+    """The base warm-up covers maskless default-nprobe programs only; a
+    filter_mask adds a (Q, ntotal) operand, so masked traffic traces a
+    DIFFERENT program. warmup(masks=True) pre-pays that compile too —
+    the first masked request per bucket must not jit inside the timed
+    path. Vector-nprobe warm-up is the IVF-only analogue."""
+    from repro.analysis.compilecount import count_compiles
+    index = trained_index_factory(_FLAT_SPEC)
+    engine = ServeEngine(index, ServeConfig(max_batch_queries=8,
+                                            default_k=10))
+    cold = engine.warmup(buckets=(8,), ks=(10,), masks=True)
+    assert set(cold) == {"q8_k16", "q8_k16_masked"}
+    rng = np.random.default_rng(5)
+    with count_compiles() as log:
+        engine.search_requests(
+            [{"queries": np.asarray(tiny_dataset.queries[:2]), "k": 10,
+              "filter_mask": rng.random((2, index.ntotal)) > 0.3}])
+    assert log.count == 0, f"masked path compiled: {log.names()}"
+
+    with pytest.raises(ValueError, match="IVF-backed"):
+        engine.warmup(buckets=(8,), nprobe_vectors=True)
+    ivf = trained_index_factory(_IVF_SPEC)
+    ivf_engine = ServeEngine(ivf, ServeConfig(max_batch_queries=8,
+                                              default_k=10))
+    cold = ivf_engine.warmup(buckets=(8,), ks=(10,), masks=True,
+                             nprobe_vectors=True)
+    assert set(cold) == {"q8_k16", "q8_k16_masked", "q8_k16_vnprobe"}
+    # the vnprobe zeros-batch must have exercised the REAL vector path
+    # (a uniform vector collapses to its scalar and warms nothing new)
+    got = ivf_engine.search_requests(
+        [{"queries": np.asarray(tiny_dataset.queries[:3]), "k": 10,
+          "nprobe": np.array([2, 5, 3])}])
+    assert got[0][0].shape == (3, 10)
 
 
 # ---------------------------------------------------------------------------

@@ -199,6 +199,37 @@ def test_resolve_memo_hit_skips_cache_reload(cache, monkeypatch):
                             n=100, q=8, topl=16) == want
 
 
+def test_resolve_memo_thread_safe_under_churn(cache, monkeypatch):
+    """Regression: eviction used ``pop(next(iter(memo)))`` with no lock,
+    so a concurrent resolver (serve worker thread + a direct
+    ``index.search`` caller) could remove that key between the iter and
+    the pop — KeyError on the serving hot path. Hammer the memo past
+    capacity from several threads; any exception fails."""
+    import random
+    import threading
+
+    monkeypatch.setattr(tune, "_MEMO_CAP", 8)
+    monkeypatch.setattr(tune, "_resolve_memo", {})
+    errors = []
+
+    def churn(seed):
+        rng = random.Random(seed)
+        try:
+            for _ in range(400):
+                tune.best_config("adc_scan_topl", "xla",
+                                 n=rng.randrange(1, 1 << 20), q=8, topl=16)
+        except Exception as exc:             # noqa: BLE001
+            errors.append(exc)
+
+    threads = [threading.Thread(target=churn, args=(s,)) for s in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    assert len(tune._resolve_memo) <= 8
+
+
 # ---------------------------------------------------------------------------
 # sweep driver <-> registry agreement
 # ---------------------------------------------------------------------------
